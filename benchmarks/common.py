@@ -1,0 +1,100 @@
+"""Shared harness for the paper-replication benchmarks.
+
+Scaling note (stated next to every result): the paper drives 64 GB through
+a 36-core Optane box; this container has one core and no PMem, so volumes
+are scaled (hundreds of MB) and the PMem/DRAM cost ratio is injected by
+``repro.core.pmem.LatencyModel`` (calibrated from the paper's cited FAST'20
+measurements).  The *contrasts* (Caiti vs staging policies, fsync cliffs,
+stall breakdowns) are the reproduction target, not absolute microseconds.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import LatencyModel, make_device
+
+#: policies compared throughout (paper §5 Setup)
+ALL_POLICIES = ("dax", "raw", "btt", "pmbd", "pmbd70", "lru", "coactive",
+                "caiti")
+CACHED_POLICIES = ("pmbd", "pmbd70", "lru", "coactive", "caiti")
+
+#: default latency injection — the paper's PMem:DRAM gap (Yang et al. [82])
+PMEM_LAT = LatencyModel()
+
+
+def make_bench_device(policy: str, *, data_mb: int = 256,
+                      cache_mb: int = 64, n_workers: int = 4,
+                      record_latencies: bool = False,
+                      latency: LatencyModel = PMEM_LAT):
+    n_lbas = (data_mb << 20) // 4096
+    return make_device(policy, n_lbas=n_lbas, block_size=4096,
+                       cache_bytes=cache_mb << 20, n_workers=n_workers,
+                       latency=latency, record_latencies=record_latencies)
+
+
+class PeriodicFlusher:
+    """The ext4 journal tick: an async REQ_PREFLUSH every ``period`` s."""
+
+    def __init__(self, dev, period: float = 0.5) -> None:
+        self.dev = dev
+        self.period = period
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.period):
+            self.dev.flush()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._t.join(timeout=2.0)
+
+
+def run_random_writes(dev, *, n_ops: int, n_lbas: int, jobs: int = 1,
+                      fsync_every: int = 0, seed: int = 0,
+                      read_frac: float = 0.0) -> dict:
+    """Uniform random 4K writes (the paper's fio workload).  Returns
+    wall-time and aggregate metrics.  ``jobs`` = fio numjobs (threads);
+    ``fsync_every`` inserts an fsync per job after that many writes."""
+    per = n_ops // jobs
+    block = np.random.default_rng(seed).integers(
+        0, 256, size=4096, dtype=np.uint8).tobytes()
+    errs = []
+
+    def worker(j):
+        rng = np.random.default_rng(seed + 1000 + j)
+        lbas = rng.integers(0, n_lbas, size=per)
+        reads = rng.random(per) < read_frac if read_frac else None
+        try:
+            for i, lba in enumerate(lbas):
+                if reads is not None and reads[i]:
+                    dev.read(int(lba))
+                else:
+                    dev.write(int(lba), block)
+                if fsync_every and (i + 1) % fsync_every == 0:
+                    dev.fsync()
+        except BaseException as e:       # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(j,)) for j in range(jobs)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dev.fsync()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return {"wall_s": wall, "ops": n_ops,
+            "mb_s": n_ops * 4096 / wall / 1e6,
+            "us_per_op": wall / n_ops * 1e6}
+
+
+def fmt_row(name: str, res: dict, extra: str = "") -> str:
+    return (f"{name:10s} wall={res['wall_s']:7.3f}s "
+            f"{res['mb_s']:7.1f} MB/s {res['us_per_op']:6.2f} us/op {extra}")

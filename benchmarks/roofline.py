@@ -1,0 +1,140 @@
+"""Roofline tables from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), computes
+the three per-device roofline terms on TPU v5e constants, identifies the
+dominant term, and prints the full (arch x shape x mesh) table plus the
+MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+
+Terms (all per device, per step):
+  compute    = HLO_FLOPs / 197e12          [s]   (bf16 MXU peak)
+  memory     = HLO_bytes / 819e9           [s]   (HBM bandwidth)
+  collective = wire_bytes / 50e9           [s]   (ICI per link)
+
+HLO_FLOPs / bytes / wire_bytes come from the trip-multiplied HLO cost model
+(repro.launch.hlo_cost) over the post-SPMD partitioned module — i.e.
+per-device numbers.  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE),
+divided across devices, times 3 for a train step's fwd+bwd ratio already
+being inside the 6 (2 fwd + 4 bwd); decode/prefill use 2·N·D_tokens.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic useful FLOPs for the whole step (all devices)."""
+    n_active = rec.get("active_params") or rec.get("params")
+    toks = SHAPE_TOKENS[rec["shape"]]
+    if rec["shape"] == "train_4k":
+        return 6.0 * n_active * toks
+    return 2.0 * n_active * toks
+
+
+def load_cells(path: str, tag: str = "") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        rec = json.loads(open(f).read())
+        if (rec.get("tag") or "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    hc = rec.get("hlo_cost") or {}
+    if "flops" not in hc:
+        return None
+    n_dev = rec.get("n_devices", 256)
+    t_comp = hc["flops"] / PEAK_FLOPS
+    t_mem = hc["bytes"] / HBM_BW
+    t_coll = hc.get("wire_bytes", 0.0) / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec) / n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": dom[0],
+        "bound_s": dom[1],
+        "useful_ratio": mf / hc["flops"] if hc["flops"] else 0.0,
+        "roofline_frac": t_comp / dom[1] if dom[1] else 0.0,
+        "hbm_gb": (rec.get("memory", {}).get("argument_size_in_bytes", 0)
+                   + rec.get("memory", {}).get("temp_size_in_bytes", 0))
+        / 1e9,
+    }
+
+
+def run(path: str = "experiments/dryrun", tag: str = "",
+        mesh: str | None = None) -> list[dict]:
+    rows = []
+    print(f"# roofline over {path} (tag={tag or '-'}) — per-device terms, "
+          f"TPU v5e: {PEAK_FLOPS/1e12:.0f}TF bf16, {HBM_BW/1e9:.0f}GB/s HBM, "
+          f"{ICI_BW/1e9:.0f}GB/s ICI")
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':10s} {'comp_s':>9s} "
+           f"{'mem_s':>9s} {'coll_s':>9s} {'bound':>10s} {'roofl%':>7s} "
+           f"{'useful%':>8s} {'HBM_GB':>7s}")
+    print(hdr)
+    skips = []
+    for rec in load_cells(path, tag):
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if rec.get("status") == "SKIP":
+            skips.append(rec)
+            continue
+        row = roofline_row(rec)
+        if row is None:
+            print(f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:10s} "
+                  f"  <{rec.get('status')}>")
+            continue
+        rows.append(row)
+        print(f"{row['arch']:22s} {row['shape']:12s} {row['mesh']:10s} "
+              f"{row['t_compute_s']:9.4f} {row['t_memory_s']:9.4f} "
+              f"{row['t_collective_s']:9.4f} {row['bottleneck']:>10s} "
+              f"{row['roofline_frac']*100:6.1f}% "
+              f"{row['useful_ratio']*100:7.1f}% {row['hbm_gb']:7.1f}")
+    for rec in skips:
+        print(f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:10s}   "
+              f"SKIP ({rec.get('reason', '')[:60]})")
+    if rows:
+        worst = sorted(rows, key=lambda r: r["roofline_frac"])[:3]
+        coll = sorted(rows, key=lambda r: -r["t_collective_s"])[:3]
+        print("\nworst roofline fraction:",
+              [(r["arch"], r["shape"], r["mesh"],
+                f"{r['roofline_frac']*100:.1f}%") for r in worst])
+        print("most collective-bound:",
+              [(r["arch"], r["shape"], r["mesh"],
+                f"{r['t_collective_s']:.3f}s") for r in coll])
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = run(args.path, args.tag, args.mesh)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark aggregator: one section per paper table/figure + the ML-side
+substrate benches.  ``python -m benchmarks.run [--fast]``.
+
+Writes JSON artifacts under experiments/bench/ and prints each table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _section(name: str):
+    print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced op counts (CI mode)")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    results = {}
+
+    from . import breakdown, ckpt_bench, fio_like, fsync_sweep, kvstore, \
+        roofline, serve_bench, ycsb
+
+    ops = 12_000 if args.fast else 50_000
+
+    _section("fig2a — random-write execution time (sim)")
+    results["fig2a"] = fio_like.fig2a(n_ops=ops)
+    _section("fig2a+fsync — with fsync every 128 writes (sim)")
+    results["fig2a_fsync"] = fio_like.fig2a(n_ops=ops, fsync_every=128)
+    _section("fig2b — fsync cost vs write volume (sim)")
+    results["fig2b"] = fsync_sweep.run()
+    _section("fig5 — I/O depth sweep (sim)")
+    results["fig5"] = fio_like.fig5(n_ops=ops // 2,
+                                    depths=(32, 128) if args.fast
+                                    else (32, 128, 512, 1024))
+    _section("fig5e — jobs scaling (sim)")
+    results["fig5e"] = fio_like.fig5e(n_ops=ops // 2,
+                                      jobs=(1, 4) if args.fast
+                                      else (1, 2, 4, 8, 16, 32))
+    _section("table1 — cache-size sweep (sim)")
+    results["table1"] = fio_like.table1(n_ops=ops // 2)
+    _section("meta — metadata spatial cost")
+    results["meta"] = fio_like.meta()
+    _section("fig6 — breakdown + ablations (sim)")
+    results["fig6"] = breakdown.run(n_ops=ops)
+    _section("fig8 — LevelDB-style workloads (sim)")
+    results["fig8"] = kvstore.run()
+    _section("fig9 — YCSB A/F x uniform/zipfian/latest (sim)")
+    results["fig9"] = ycsb.run()
+    _section("ckpt — Caiti as checkpoint substrate (real threads)")
+    results["ckpt"] = ckpt_bench.run()
+    _section("serve — transit vs staging on the paged KV tier (real engine)")
+    results["serve"] = serve_bench.run()
+    _section("roofline — dry-run derived terms (deliverable g)")
+    rows = roofline.run("experiments/dryrun", mesh="pod16x16")
+    results["roofline_rows"] = len(rows)
+
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\n[benchmarks.run] done in {time.time()-t0:.1f}s -> "
+          f"{args.out}/results.json")
+
+
+if __name__ == "__main__":
+    main()

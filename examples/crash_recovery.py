@@ -1,0 +1,72 @@
+"""Crash-recovery walkthrough: block-level write atomicity end to end.
+
+    PYTHONPATH=src python examples/crash_recovery.py
+
+1. BTT layer: a power cut mid data-copy leaves a torn block in the lane's
+   free block — the committed map still points at the OLD block, so the
+   read after Flog replay returns the complete old data.
+2. Store layer: a crash between data writes and the root-block flip leaves
+   the previous checkpoint generation intact (atomic commit).
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.ckpt import CheckpointEngine, make_blockstore
+from repro.core import BTT, PMemSpace, SimulatedCrash
+
+
+def blk(x):
+    return bytes([x]) * 4096
+
+
+# -- 1. torn write at the BTT layer -----------------------------------------
+pmem = PMemSpace(128)
+btt = BTT(pmem, n_lbas=64, nfree=2)
+btt.write(7, blk(1))
+print("[btt] lba7 committed with pattern 0x01")
+
+state = {"arm": True}
+
+
+def power_cut(label):
+    if label == "pmem_write_mid" and state["arm"]:
+        state["arm"] = False
+        raise SimulatedCrash(label)
+
+
+pmem.crash_hook = power_cut
+try:
+    btt.write(7, blk(2))
+except SimulatedCrash:
+    print("[btt] power cut mid-copy of the overwrite (block is TORN in the "
+          "free block)")
+pmem.crash_hook = None
+
+btt2 = BTT(pmem, n_lbas=64, fresh=False)          # reboot: Flog replay
+data = bytes(btt2.read(7))
+assert data == blk(1), "old data must be intact"
+print(f"[btt] after recovery ({btt2.recovery_stats}): lba7 reads pattern "
+      f"0x{data[0]:02x} — the old, COMPLETE block. No torn state visible.")
+
+# -- 2. atomic checkpoint generations ---------------------------------------
+with tempfile.TemporaryDirectory() as td:
+    pool = os.path.join(td, "pool.bin")
+    s1 = {"w": np.arange(4096, dtype=np.float32)}
+    store = make_blockstore(pool, policy="caiti", capacity_bytes=64 << 20)
+    eng = CheckpointEngine(store)
+    eng.save(0, s1)
+    print("[store] generation for step0 committed")
+    # stage step1 but 'crash' before commit
+    store.put("step%010d/w/0" % 1, (s1["w"] * 9).tobytes())
+    del eng, store                                  # no commit, no close
+    store2 = make_blockstore(pool, policy="caiti", capacity_bytes=64 << 20)
+    eng2 = CheckpointEngine(store2)
+    got, step = eng2.restore(like=s1)
+    assert step == 0 and np.array_equal(np.asarray(got["w"]), s1["w"])
+    print(f"[store] after crash+reopen: latest committed step = {step}, "
+          f"restored bit-exact; the half-written step1 is invisible.")
+    eng2.close()
+
+print("\nblock-level write atomicity holds at every layer.")

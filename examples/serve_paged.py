@@ -1,0 +1,13 @@
+"""Serving example: continuous batching over the BTT-style paged KV cache
+with transit tiering (eager page-out of finished sequences, conditional
+bypass under pool pressure).
+
+    PYTHONPATH=src python examples/serve_paged.py
+    PYTHONPATH=src python examples/serve_paged.py --pool-pages 4  # pressure
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end training driver: a small LM for a few hundred steps with
+the full production substrate — deterministic data pipeline, AdamW,
+Caiti-backed async checkpointing, watchdog, and crash/resume.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+    PYTHONPATH=src python examples/train_e2e.py --steps 300 --resume  # again
+
+(the 8M default keeps a few hundred steps tractable on the 1-core
+container; --preset 25m/100m scale up for real hardware.)
+"""
+import argparse
+import os
+import time
+
+import jax
+
+from repro.ckpt import CheckpointEngine, make_blockstore
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train.loop import TrainConfig, Trainer
+
+PRESETS = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab, seq, batch)
+    "8m":   (4, 256, 8, 4, 1024, 8192, 128, 8),
+    "25m":  (6, 384, 8, 4, 1536, 12288, 128, 8),
+    "100m": (12, 512, 8, 4, 2048, 32768, 256, 8),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", default="8m", choices=list(PRESETS))
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e.pool")
+    ap.add_argument("--fresh", action="store_true",
+                    help="delete the pool and start over")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    L, d, H, kv, ff, V, seq, batch = PRESETS[args.preset]
+    cfg = get_config("internlm2-1.8b", smoke=True).with_(
+        name=f"lm-{args.preset}", n_layers=L, d_model=d, n_heads=H,
+        n_kv_heads=kv, d_ff=ff, vocab=V)
+    model = build_model(cfg)
+    print(f"[e2e] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"seq {seq}, batch {batch}, steps {args.steps}")
+
+    if args.fresh and os.path.exists(args.ckpt):
+        os.unlink(args.ckpt)
+    store = make_blockstore(args.ckpt, policy="caiti",
+                            capacity_bytes=2 << 30)
+    ckpt = CheckpointEngine(store, keep=2)
+    if ckpt.latest_step() is not None:
+        print(f"[e2e] found checkpoint @ step {ckpt.latest_step()} "
+              f"-> resuming")
+
+    opt = AdamW(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    source = SyntheticLM(cfg.vocab, seq, batch)
+    trainer = Trainer(model, opt, source, ckpt=ckpt,
+                      cfg=TrainConfig(total_steps=args.steps,
+                                      ckpt_every=50, async_ckpt=True))
+    t0 = time.time()
+    out = trainer.run(jax.random.PRNGKey(0))
+    dt = time.time() - t0
+    n = len(out["losses"])
+    print(f"[e2e] {n} steps in {dt:.1f}s ({dt/max(n,1)*1e3:.0f} ms/step) | "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} | "
+          f"stragglers logged: {out['stragglers']} | "
+          f"ckpt @ {ckpt.latest_step()}")
+    ckpt.close()
+
+
+if __name__ == "__main__":
+    main()

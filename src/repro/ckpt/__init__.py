@@ -1,0 +1,4 @@
+from .blockstore import BlockStore, make_blockstore
+from .engine import CheckpointEngine
+
+__all__ = ["BlockStore", "make_blockstore", "CheckpointEngine"]

@@ -1,0 +1,152 @@
+"""Block object store on top of the PMem block device (the paper's stack,
+used as the checkpoint substrate).
+
+Layout (in lbas):
+    [0]            root pointer block — THE atomic commit point: holds
+                   (magic, generation, manifest_lba, manifest_len, checksum)
+    [1 .. M]       manifest area (two ping-pong regions, written CoW-style)
+    [M+1 .. end]   data blocks, bump-allocated per generation
+
+A checkpoint *commit* is: write data blocks (through whatever caching policy
+the device uses — Caiti by default), write the manifest blocks for the next
+generation into the inactive ping-pong region, fsync (PREFLUSH|FUA drains
+the transit cache and the BTT), then write the root block last and fsync
+again.  Because BTT gives block-level write atomicity, the root flip is
+all-or-nothing: a crash anywhere leaves the previous generation intact —
+the same roll-forward-or-stale guarantee BTT's Flog gives a single block.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+
+import numpy as np
+
+from repro.core import BlockDevice, make_device
+from repro.core.pmem import LatencyModel
+
+_MAGIC = 0xCA171B10
+_ROOT_FMT = "<QQQQQ"          # magic, generation, manifest_lba, manifest_len(bytes), crc
+
+
+class BlockStore:
+    """Keyed object store with generation-atomic commits."""
+
+    def __init__(self, device: BlockDevice, n_lbas: int,
+                 manifest_blocks: int = 256) -> None:
+        self.dev = device
+        self.block_size = device.impl.btt.block_size \
+            if hasattr(device.impl, "btt") else 4096
+        self.n_lbas = n_lbas
+        self._manifest_cap = manifest_blocks
+        self._data_base = 1 + 2 * manifest_blocks
+        self.generation = 0
+        self._alloc_ptr = self._data_base
+        # key -> (lba_start, n_blocks, nbytes) for the *current* generation
+        self.directory: dict[str, tuple[int, int, int]] = {}
+        self._load_root()
+
+    # ------------------------------------------------------------- root I/O
+    def _load_root(self) -> None:
+        raw = bytes(self.dev.read(0)[: struct.calcsize(_ROOT_FMT)])
+        magic, gen, mlba, mlen, crc = struct.unpack(_ROOT_FMT, raw)
+        if magic != _MAGIC:
+            return                                    # fresh store
+        blocks = (mlen + self.block_size - 1) // self.block_size
+        buf = b"".join(bytes(self.dev.read(mlba + i)) for i in range(blocks))
+        payload = buf[:mlen]
+        if zlib.crc32(payload) != crc:                # torn manifest: stale root
+            return
+        man = json.loads(payload.decode())
+        self.generation = gen
+        self.directory = {k: tuple(v) for k, v in man["objects"].items()}
+        self._alloc_ptr = man["alloc_ptr"]
+
+    def _manifest_region(self, gen: int) -> int:
+        """Ping-pong: even generations in region 0, odd in region 1."""
+        return 1 + (gen % 2) * self._manifest_cap
+
+    # ----------------------------------------------------------------- data
+    def _alloc(self, n_blocks: int) -> int:
+        lba = self._alloc_ptr
+        if lba + n_blocks > self.n_lbas:
+            # simple generational GC: restart the bump region (old data is
+            # unreachable once a new root commits)
+            lba = self._data_base
+            self._alloc_ptr = lba
+        self._alloc_ptr = lba + n_blocks
+        assert self._alloc_ptr <= self.n_lbas, "store exhausted"
+        return lba
+
+    def put(self, key: str, payload: bytes | memoryview) -> None:
+        """Stage one object (writes go through the device's cache policy)."""
+        nbytes = len(payload)
+        bs = self.block_size
+        n_blocks = max(1, (nbytes + bs - 1) // bs)
+        lba = self._alloc(n_blocks)
+        mv = memoryview(payload)
+        for i in range(n_blocks):
+            chunk = bytes(mv[i * bs:(i + 1) * bs])
+            if len(chunk) < bs:
+                chunk = chunk + b"\x00" * (bs - len(chunk))
+            self.dev.write(lba + i, chunk)
+        self.directory[key] = (lba, n_blocks, nbytes)
+
+    def get(self, key: str) -> bytes:
+        lba, n_blocks, nbytes = self.directory[key]
+        out = np.empty(n_blocks * self.block_size, dtype=np.uint8)
+        for i in range(n_blocks):
+            self.dev.read(lba + i, out=out[i * self.block_size:
+                                           (i + 1) * self.block_size])
+        return bytes(out[:nbytes])
+
+    def delete(self, key: str) -> None:
+        self.directory.pop(key, None)
+
+    def keys(self):
+        return list(self.directory)
+
+    # --------------------------------------------------------------- commit
+    def commit(self) -> int:
+        """Atomically publish the current directory as a new generation."""
+        gen = self.generation + 1
+        man = json.dumps({"objects": {k: list(v)
+                                      for k, v in self.directory.items()},
+                          "alloc_ptr": self._alloc_ptr}).encode()
+        crc = zlib.crc32(man)
+        mlba = self._manifest_region(gen)
+        bs = self.block_size
+        n_blocks = (len(man) + bs - 1) // bs
+        assert n_blocks <= self._manifest_cap, "manifest too large"
+        # 1. drain the transit cache + BTT (all data durable first)
+        self.dev.fsync()
+        # 2. manifest into the inactive ping-pong region
+        for i in range(n_blocks):
+            chunk = man[i * bs:(i + 1) * bs]
+            chunk = chunk + b"\x00" * (bs - len(chunk))
+            self.dev.write(mlba + i, chunk)
+        self.dev.fsync()
+        # 3. THE flip: one atomic root-block write (BTT CoW makes it
+        #    all-or-nothing), then the final durability barrier
+        root = struct.pack(_ROOT_FMT, _MAGIC, gen, mlba, len(man), crc)
+        root = root + b"\x00" * (bs - len(root))
+        self.dev.write(0, root)
+        self.dev.fsync()
+        self.generation = gen
+        return gen
+
+    def close(self) -> None:
+        self.dev.close()
+
+
+def make_blockstore(path: str | None = None, *, policy: str = "caiti",
+                    capacity_bytes: int = 1 << 30, block_size: int = 4096,
+                    cache_bytes: int = 64 << 20,
+                    latency: LatencyModel | None = None) -> BlockStore:
+    n_lbas = capacity_bytes // block_size
+    dev = make_device(policy, n_lbas=n_lbas, block_size=block_size,
+                      cache_bytes=cache_bytes,
+                      backend="file" if path else "ram", path=path,
+                      latency=latency)
+    return BlockStore(dev, n_lbas)

@@ -1,0 +1,28 @@
+"""Architecture registry: ``get_config(arch_id, smoke=False)`` and the
+canonical list of assigned architectures (``--arch`` values)."""
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "qwen3-moe-235b-a22b":  "repro.configs.qwen3_moe_235b",
+    "moonshot-v1-16b-a3b":  "repro.configs.moonshot_16b",
+    "whisper-large-v3":     "repro.configs.whisper_large_v3",
+    "phi3-mini-3.8b":       "repro.configs.phi3_mini",
+    "deepseek-coder-33b":   "repro.configs.deepseek_coder_33b",
+    "qwen2.5-3b":           "repro.configs.qwen25_3b",
+    "internlm2-1.8b":       "repro.configs.internlm2_1p8b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "xlstm-1.3b":           "repro.configs.xlstm_1p3b",
+    "recurrentgemma-9b":    "repro.configs.recurrentgemma_9b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False, **overrides) -> ModelConfig:
+    mod = import_module(_MODULES[arch])
+    cfg = mod.SMOKE if smoke else mod.FULL
+    return cfg.with_(**overrides) if overrides else cfg

@@ -1,0 +1,322 @@
+"""Caiti — caching with I/O transit (the paper's core contribution, §4).
+
+Structure (Figure 4):
+  * one contiguous DRAM buffer partitioned into uniform *slots*;
+  * slot headers carry {slot number, lba, state, WBQ link, lock};
+  * logical *cache sets* indexed by ``hash(lba)`` — no mapping table;
+  * a single *global free set* (CAS-style pop/push) feeding all sets;
+  * slot states: Free → Pending → Valid → Evicting → Free.
+
+Write policies (§4.3.1, Algorithm 1):
+  * **eager eviction** — the instant a slot turns Valid it is enqueued on its
+    set's write-back queue (WBQ) and a background pool thread transits it to
+    the PMem-based block device (BTT);
+  * **conditional bypass** — a write miss against a full cache goes straight
+    to BTT (one PMem write beats evict-then-fill = PMem write + DRAM write).
+
+Reading policy (§4.3.2): serve Valid/Evicting hits from DRAM, redirect misses
+to BTT, never allocate on read miss (writes are prioritized).
+
+Locking discipline (deadlock-free order): a foreground thread takes
+``set.lock`` only for table/WBQ surgery and *releases it before* taking
+``slot.lock``; it re-validates ``slot.lba``/state after acquiring and retries
+if the slot was recycled underneath it.  The evictor holds ``slot.lock``
+across the BTT write (so a racing write/read to the same lba waits for the
+persist to finish — the paper's rule for the Evicting state) and takes
+``set.lock`` only after, for removal.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from .btt import BTT
+from .metrics import Metrics
+
+# Slot states (paper §4.2)
+FREE, PENDING, VALID, EVICTING = range(4)
+_STATE_NAMES = ("Free", "Pending", "Valid", "Evicting")
+
+
+class SlotHeader:
+    __slots__ = ("idx", "lba", "state", "lock", "set_idx", "queued")
+
+    def __init__(self, idx: int) -> None:
+        self.idx = idx
+        self.lba = -1
+        self.state = FREE
+        self.lock = threading.Lock()
+        self.set_idx = -1
+        self.queued = False
+
+
+class CacheSet:
+    __slots__ = ("lock", "table", "wbq")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.table: dict[int, SlotHeader] = {}   # lba -> slot
+        self.wbq: deque[SlotHeader] = deque()    # write-back queue
+
+
+def _hash_lba(lba: int) -> int:
+    """Cheap mixer so striding writes still spread across sets."""
+    x = (lba * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    return x >> 17
+
+
+@dataclass
+class CaitiConfig:
+    capacity_bytes: int = 512 << 20
+    block_size: int = 4096
+    n_sets: int = 256
+    n_workers: int = 4            # background eviction pool
+    eager_eviction: bool = True   # 'w/o EE' ablation when False
+    conditional_bypass: bool = True  # 'w/o BP' ablation when False
+
+    @property
+    def n_slots(self) -> int:
+        return max(1, self.capacity_bytes // self.block_size)
+
+
+class CaitiCache:
+    """The I/O transit cache in front of a BTT block device."""
+
+    def __init__(self, btt: BTT, cfg: CaitiConfig | None = None,
+                 metrics: Metrics | None = None) -> None:
+        self.btt = btt
+        self.cfg = cfg or CaitiConfig(block_size=btt.block_size)
+        assert self.cfg.block_size == btt.block_size
+        self.metrics = metrics or Metrics()
+        n = self.cfg.n_slots
+        self._buf = np.zeros((n, self.cfg.block_size), dtype=np.uint8)
+        self._slots = [SlotHeader(i) for i in range(n)]
+        self._sets = [CacheSet() for _ in range(self.cfg.n_sets)]
+        # global free set — deque.pop/append are atomic under the GIL, the
+        # analogue of the paper's CAS alloc/dealloc
+        self._free: deque[SlotHeader] = deque(self._slots)
+        # flush accounting: flush waits until everything enqueued before it
+        # has been written back
+        self._evict_lock = threading.Lock()
+        self._evict_cond = threading.Condition(self._evict_lock)
+        self._enqueued = 0
+        self._completed = 0
+        # background pool
+        self._work: queue.SimpleQueue[SlotHeader | None] = queue.SimpleQueue()
+        self._stop = False
+        self._workers = [
+            threading.Thread(target=self._evict_worker, daemon=True,
+                             name=f"caiti-evict-{i}")
+            for i in range(self.cfg.n_workers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    # ----------------------------------------------------------- internals
+    def _set_for(self, lba: int) -> CacheSet:
+        return self._sets[_hash_lba(lba) % self.cfg.n_sets]
+
+    def cache_full(self) -> bool:
+        return not self._free
+
+    def _alloc_slot(self) -> SlotHeader | None:
+        try:
+            return self._free.pop()      # CAS-style pop
+        except IndexError:
+            return None
+
+    def _notify_eviction(self, sh: SlotHeader) -> None:
+        with self._evict_lock:
+            self._enqueued += 1
+        self._work.put(sh)
+
+    def _complete_eviction(self, n: int = 1) -> None:
+        with self._evict_cond:
+            self._completed += n
+            self._evict_cond.notify_all()
+
+    # ------------------------------------------------------- write (Alg. 1)
+    def write(self, lba: int, data) -> int:
+        t_req = time.perf_counter_ns()
+        src = np.frombuffer(data, dtype=np.uint8)
+        while True:
+            t0 = time.perf_counter_ns()
+            cs = self._set_for(lba)                       # L1: hash -> set
+            with cs.lock:                                 # L2-3: probe WBQ set
+                sh = cs.table.get(lba)
+            self.metrics.add_ns("cache_metadata", time.perf_counter_ns() - t0)
+            if sh is not None:
+                # ---- write hit (L5-9). Take the slot lock; if the slot was
+                # recycled while we waited (eager eviction is fast!), retry.
+                with sh.lock:
+                    if sh.lba != lba or sh.state not in (VALID, PENDING):
+                        continue
+                    sh.state = PENDING
+                    t1 = time.perf_counter_ns()
+                    self._buf[sh.idx, :src.nbytes] = src
+                    sh.state = VALID
+                    self.metrics.add_ns("cache_write_only",
+                                        time.perf_counter_ns() - t1)
+                    # enqueue under the slot lock: the evictor cannot observe
+                    # the slot between Valid and queued (no recycle window)
+                    self._enqueue_for_eviction(cs, sh)
+                break
+            # ---- write miss
+            sh = self._alloc_slot()
+            if sh is None:
+                if self.cfg.conditional_bypass:
+                    # L20-22: cache full -> transit straight to PMem
+                    with self.metrics.timer("conditional_bypass"):
+                        self.btt.write(lba, src)
+                    self.metrics.bump("bypass_writes")
+                    self.metrics.record_latency(time.perf_counter_ns() - t_req)
+                    return 0
+                # 'w/o BP' ablation: stall — evict someone on the critical path
+                with self.metrics.timer("cache_eviction_and_write"):
+                    self._evict_one_sync()
+                continue
+            with sh.lock:
+                sh.lba = lba
+                sh.set_idx = _hash_lba(lba) % self.cfg.n_sets
+                sh.state = PENDING                         # L14
+                # verify no racing miss installed this lba meanwhile (L12-16)
+                with cs.lock:
+                    other = cs.table.get(lba)
+                    if other is not None:
+                        # lose the race: return our slot and retry as a hit
+                        sh.state = FREE
+                        sh.lba = -1
+                        self._free.append(sh)
+                        continue
+                    cs.table[lba] = sh
+                t1 = time.perf_counter_ns()
+                self._buf[sh.idx, :src.nbytes] = src       # L16
+                sh.state = VALID
+                self.metrics.add_ns("cache_write_only",
+                                    time.perf_counter_ns() - t1)
+                self._enqueue_for_eviction(cs, sh)         # L18-19
+            break
+        self.metrics.record_latency(time.perf_counter_ns() - t_req)
+        return 0
+
+    def _enqueue_for_eviction(self, cs: CacheSet, sh: SlotHeader) -> None:
+        t0 = time.perf_counter_ns()
+        with cs.lock:
+            if not sh.queued:
+                sh.queued = True
+                cs.wbq.append(sh)
+                queued = True
+            else:
+                queued = False
+        self.metrics.add_ns("wbq_enqueue", time.perf_counter_ns() - t0)
+        if queued and self.cfg.eager_eviction:
+            self._notify_eviction(sh)                      # L26
+
+    # --------------------------------------------------------------- read
+    def read(self, lba: int, out: np.ndarray | None = None) -> np.ndarray:
+        cs = self._set_for(lba)
+        with cs.lock:
+            sh = cs.table.get(lba)
+        if sh is not None:
+            with sh.lock:   # waits out Pending writes / in-flight persists
+                if sh.lba == lba and sh.state in (VALID, PENDING, EVICTING):
+                    self.metrics.bump("read_hits")
+                    if out is not None:
+                        out[:] = self._buf[sh.idx]
+                        return out
+                    return self._buf[sh.idx].copy()
+        self.metrics.bump("read_misses")
+        return self.btt.read(lba, out=out)
+
+    # ----------------------------------------------------------- eviction
+    def _evict_worker(self) -> None:
+        while True:
+            sh = self._work.get()
+            if sh is None:
+                return
+            self._evict_slot(sh)
+            self._complete_eviction()
+
+    def _evict_slot(self, sh: SlotHeader) -> None:
+        """Transit one slot to the device (background thread, Fig. 4 step 5)."""
+        with sh.lock:
+            cs = self._sets[sh.set_idx] if sh.set_idx >= 0 else None
+            if sh.state != VALID or cs is None:
+                # recycled or re-claimed; clear queued flag under set lock
+                if cs is not None:
+                    with cs.lock:
+                        sh.queued = False
+                        try:
+                            cs.wbq.remove(sh)
+                        except ValueError:
+                            pass
+                return
+            sh.state = EVICTING
+            lba = sh.lba
+            # hold the slot lock across the persist: a racing writer/reader of
+            # this lba waits for BTT completion (block-level atomicity intact)
+            self.btt.write(lba, self._buf[sh.idx])
+            with cs.lock:
+                if cs.table.get(lba) is sh:
+                    del cs.table[lba]
+                sh.queued = False
+                try:
+                    cs.wbq.remove(sh)
+                except ValueError:
+                    pass
+            sh.state = FREE
+            sh.lba = -1
+            sh.set_idx = -1
+        self._free.append(sh)
+        self.metrics.bump("bg_evictions")
+
+    def _evict_one_sync(self) -> None:
+        """'w/o BP' stall path: drain one queued slot on the critical path."""
+        for cs in self._sets:
+            with cs.lock:
+                sh = cs.wbq[0] if cs.wbq else None
+            if sh is not None:
+                self._evict_slot(sh)
+                return
+        time.sleep(0)   # nothing queued yet; let background threads run
+
+    # -------------------------------------------------------------- flush
+    def flush(self, fua: bool = False) -> int:
+        """REQ_PREFLUSH handling (§4.4): drain all WBQ entries, wait for BTT.
+
+        Thanks to eager eviction this is almost always a no-op wait.
+        """
+        with self.metrics.timer("cache_flush"):
+            if not self.cfg.eager_eviction:
+                # staging-style drain: push everything queued to the pool now
+                for cs in self._sets:
+                    with cs.lock:
+                        pending = [sh for sh in cs.wbq]
+                    for sh in pending:
+                        self._notify_eviction(sh)
+            with self._evict_cond:
+                target = self._enqueued
+                while self._completed < target:
+                    self._evict_cond.wait(timeout=0.5)
+            if fua:
+                self.btt.flush()   # durable commit (msync for file pools)
+        return 0
+
+    def fsync(self) -> int:
+        return self.flush(fua=True)
+
+    # ------------------------------------------------------------- stats
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / max(1, len(self._slots))
+
+    def close(self) -> None:
+        self.flush(fua=True)
+        for _ in self._workers:
+            self._work.put(None)
+        for w in self._workers:
+            w.join(timeout=2.0)

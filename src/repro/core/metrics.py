@@ -1,0 +1,95 @@
+"""Per-category time accounting used for the paper's Fig. 6 breakdown.
+
+Categories follow the paper's naming exactly:
+  cache_metadata        — set lookup / slot alloc / state transitions
+  cache_write_only      — the DRAM memcpy into a slot (hit or free slot)
+  cache_eviction_and_write — a *stalled* write: evict-on-critical-path + write
+  conditional_bypass    — direct BTT write because cache is full
+  wbq_enqueue           — putting the slot on the write-back queue
+  cache_flush           — serving PREFLUSH/FUA/fsync drains
+  others                — everything else on the critical path
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from contextlib import contextmanager
+
+CATEGORIES = (
+    "cache_metadata",
+    "cache_write_only",
+    "cache_eviction_and_write",
+    "conditional_bypass",
+    "wbq_enqueue",
+    "cache_flush",
+    "others",
+)
+
+
+class Metrics:
+    """Thread-safe counters + nanosecond timers, cheap enough for hot paths."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.ns = defaultdict(int)        # category -> total ns
+        self.count = defaultdict(int)     # category/event -> occurrences
+        self.latencies_ns: list[int] = [] # per-request response times
+        self.record_latencies = False
+
+    @contextmanager
+    def timer(self, category: str):
+        t0 = time.perf_counter_ns()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter_ns() - t0
+            with self._lock:
+                self.ns[category] += dt
+                self.count[category] += 1
+
+    def add_ns(self, category: str, ns: int) -> None:
+        with self._lock:
+            self.ns[category] += ns
+            self.count[category] += 1
+
+    def bump(self, event: str, n: int = 1) -> None:
+        with self._lock:
+            self.count[event] += n
+
+    def record_latency(self, ns: int) -> None:
+        if self.record_latencies:
+            with self._lock:
+                self.latencies_ns.append(ns)
+
+    # -- report helpers -----------------------------------------------------
+    def breakdown(self) -> dict[str, float]:
+        """Fractional time per category (paper Fig. 6a)."""
+        total = sum(self.ns[c] for c in CATEGORIES) or 1
+        return {c: self.ns[c] / total for c in CATEGORIES}
+
+    def percentile_us(self, p: float) -> float:
+        if not self.latencies_ns:
+            return 0.0
+        xs = sorted(self.latencies_ns)
+        idx = min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1))))
+        return xs[idx] / 1e3
+
+    def mean_us(self) -> float:
+        if not self.latencies_ns:
+            return 0.0
+        return sum(self.latencies_ns) / len(self.latencies_ns) / 1e3
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "ns": dict(self.ns),
+                "count": dict(self.count),
+                "n_latencies": len(self.latencies_ns),
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.ns.clear()
+            self.count.clear()
+            self.latencies_ns.clear()

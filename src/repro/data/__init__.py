@@ -1,0 +1,3 @@
+from .pipeline import MemmapCorpus, Prefetcher, SyntheticLM
+
+__all__ = ["MemmapCorpus", "Prefetcher", "SyntheticLM"]

@@ -1,0 +1,94 @@
+"""Block transit engine — Caiti's eager-eviction copy as a Pallas kernel.
+
+Two fused primitives the serving/checkpoint tiers use when *transiting*
+pages/blocks between memory tiers:
+
+  * ``gather_quantize``  — gather a set of pages from a pool and pack them
+    int8 with one f32 scale per (page, head) group: the eviction DMA payload
+    (4x smaller than bf16 — the compression codec of the KV spill path and
+    the gradient/checkpoint compressor).
+  * ``scatter_dequantize`` — the reverse: unpack int8 pages and scatter them
+    back into pool rows (page-in / restore).
+
+Both resolve the page indirection *inside* the kernel (BTT-style mapping
+walk) so no (n, page, ...) intermediate ever exists in HBM at full
+precision.  Grid = one program per transited page; the pool argument stays
+in ANY/HBM; only the active page flows through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_q_kernel(idx_ref, pool_ref, out_ref, scale_ref, *, eps: float):
+    """One page: pool[idx[i]] (page, F) -> int8 out[i] + f32 scale row."""
+    page = idx_ref[0]
+    x = pl.load(pool_ref, (page, slice(None), slice(None))
+                ).astype(jnp.float32)                       # (page_sz, F)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)      # (page_sz, 1)
+    scale = amax / 127.0 + eps
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    out_ref[...] = q
+    scale_ref[...] = scale[:, 0].astype(jnp.float32)
+
+
+def gather_quantize_pallas(pool, page_ids, *, interpret: bool = False,
+                           eps: float = 1e-12):
+    """pool: (P, page_sz, F);  page_ids: (n,) int32
+    -> (q (n, page_sz, F) int8, scales (n, page_sz) f32)."""
+    P, page_sz, F = pool.shape
+    n = page_ids.shape[0]
+    return pl.pallas_call(
+        functools.partial(_gather_q_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),              # pool in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((None, page_sz, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, page_sz), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, page_sz, F), jnp.int8),
+            jax.ShapeDtypeStruct((n, page_sz), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_ids, pool)
+
+
+def _scatter_dq_kernel(idx_ref, q_ref, scale_ref, pool_in_ref, pool_out_ref,
+                       *, dtype):
+    # pool_in is aliased to pool_out (same HBM buffer): untouched pages keep
+    # their contents; only the transited page is stored.
+    page = idx_ref[0]
+    x = q_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+    pl.store(pool_out_ref, (page, slice(None), slice(None)), x.astype(dtype))
+
+
+def scatter_dequantize_pallas(pool, page_ids, q, scales, *,
+                              interpret: bool = False):
+    """Inverse of gather_quantize: write dequantized pages into pool rows.
+
+    pool: (P, page_sz, F) — donated/aliased; returns the updated pool.
+    """
+    P, page_sz, F = pool.shape
+    n = page_ids.shape[0]
+    return pl.pallas_call(
+        functools.partial(_scatter_dq_kernel, dtype=pool.dtype),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((None, page_sz, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, page_sz), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),      # aliased pool in HBM
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((P, page_sz, F), pool.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(page_ids, q, scales, pool)

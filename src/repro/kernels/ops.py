@@ -1,0 +1,70 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU container every op runs the *same kernel body* in interpret mode
+(validating logic + tiling); on TPU (platform == 'tpu') the pallas_call
+lowers to Mosaic.  Model code selects the implementation with the config
+flag ``attn_impl`` — the dry-run uses the XLA path (Pallas TPU kernels do
+not lower on the host platform), which is recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .block_transit import gather_quantize_pallas, scatter_dequantize_pallas
+from .flash_attention import flash_attention_pallas
+from .paged_attention import paged_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, window, bq, bk):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=not _on_tpu())
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bk):
+    return _flash_attention(q, k, v, causal, window, bq, bk), (q, k, v)
+
+
+def _flash_bwd(causal, window, bq, bk, res, g):
+    # backward through the jnp oracle (XLA recompute — the standard
+    # fwd-kernel/bwd-recompute split; a dedicated bwd kernel is a TPU-side
+    # optimization outside this container's scope)
+    from . import ref
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=causal,
+                                                window=window), q, k, v)
+    return vjp(g)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    return _flash_attention(q, k, v, causal, window, bq, bk)
+
+
+@jax.jit
+def paged_attention(q, k_pool, v_pool, block_table, seq_lens):
+    return paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens,
+                                  interpret=not _on_tpu())
+
+
+@jax.jit
+def gather_quantize(pool, page_ids):
+    return gather_quantize_pallas(pool, page_ids, interpret=not _on_tpu())
+
+
+@jax.jit
+def scatter_dequantize(pool, page_ids, q, scales):
+    return scatter_dequantize_pallas(pool, page_ids, q, scales,
+                                     interpret=not _on_tpu())

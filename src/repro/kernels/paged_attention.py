@@ -1,0 +1,98 @@
+"""Paged decode attention — the BTT mapping table fused into a Pallas kernel.
+
+The serving engine stores KV in fixed-size *pages* of an HBM pool; a block
+table maps (sequence, logical page) -> physical page, exactly as BTT maps
+lba -> pba.  This kernel performs one decode step: for each sequence it
+walks its block-table row, gathers the pages *inside the kernel* (the
+lba->pba translation fused into the attention gather — no materialized
+(B, S, ...) KV view in HBM), and computes online-softmax attention of the
+single query token against every valid cached token.
+
+Grid: one program per sequence.  The page loop is a fori_loop over that
+sequence's pages; each iteration dynamic-slices one (page_size, Hkv*hd)
+page of K and V from the pool (resident rows stream HBM->VMEM), applies
+the GQA expansion in-register, and folds into the (H, hd) carry.
+
+The pool stays in ANY/HBM memory space (it is far larger than VMEM); only
+the block-table row and the query tile are VMEM-blocked.  This mirrors the
+paper's transit principle: the cache (VMEM) holds only what is in flight.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(q_ref, kpool_ref, vpool_ref, table_ref, len_ref, o_ref, *,
+                  page_size: int, max_pages: int, n_rep: int, scale: float):
+    """One sequence. q_ref: (H, hd); pools: (P, page, Hkv, hd) in ANY;
+    table_ref: (max_pages,) physical page ids; len_ref: (1,) seq length."""
+    H, hd = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * scale          # (H, hd)
+    seq_len = len_ref[...].reshape(())
+    n_pages = (seq_len + page_size - 1) // page_size
+
+    def body(pi, carry):
+        m_prev, l_prev, acc = carry
+        ppage = table_ref[pi]                            # lba -> pba walk
+        k = pl.load(kpool_ref,
+                    (ppage, slice(None), slice(None), slice(None))
+                    ).astype(jnp.float32)                # (page, Hkv, hd)
+        v = pl.load(vpool_ref,
+                    (ppage, slice(None), slice(None), slice(None))
+                    ).astype(jnp.float32)
+        # GQA expand: kv head j serves q heads [j*n_rep, (j+1)*n_rep)
+        kx = jnp.repeat(k, n_rep, axis=1)                # (page, H, hd)
+        vx = jnp.repeat(v, n_rep, axis=1)
+        s = jnp.einsum("hd,phd->hp", q, kx)              # (H, page)
+        tok = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        valid = tok < seq_len
+        s = jnp.where(valid, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + jnp.einsum("hp,phd->hd", p, vx)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((H,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((H,), jnp.float32)
+    a0 = jnp.zeros((H, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens, *,
+                           interpret: bool = False):
+    """q: (B, H, hd);  pools: (P, page_size, Hkv, hd);
+    block_table: (B, max_pages) int32;  seq_lens: (B,) int32
+    -> (B, H, hd)."""
+    B, H, hd = q.shape
+    P, page_size, Hkv, _ = k_pool.shape
+    max_pages = block_table.shape[1]
+    n_rep = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, page_size=page_size,
+                          max_pages=max_pages, n_rep=n_rep, scale=scale),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, H, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),       # K pool stays in HBM
+            pl.BlockSpec(memory_space=pl.ANY),       # V pool stays in HBM
+            pl.BlockSpec((None, max_pages), lambda b: (b, 0)),
+            pl.BlockSpec((None,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((None, H, hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k_pool, v_pool, block_table, seq_lens)

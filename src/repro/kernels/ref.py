@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, T, H, hd); k, v: (B, S, Hkv, hd) -> (B, T, H, hd). f32 math."""
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    n_rep = H // Hkv
+    k = jnp.repeat(k, n_rep, axis=2)
+    v = jnp.repeat(v, n_rep, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    valid = jnp.full((T, S), True)
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window:
+        valid = valid & (q_pos - k_pos < window)
+    s = jnp.where(valid[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[None, None], p, 0.0)
+    out = jnp.einsum("bhts,bshd->bthd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens):
+    """q: (B, H, hd); pools: (P, page, Hkv, hd); block_table: (B, max_pages);
+    seq_lens: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    P, page, Hkv, _ = k_pool.shape
+    n_rep = H // Hkv
+    max_pages = block_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    # materialize (B, max_pages*page, Hkv, hd) views via the table
+    k = k_pool[block_table].reshape(B, max_pages * page, Hkv, hd)
+    v = v_pool[block_table].reshape(B, max_pages * page, Hkv, hd)
+    k = jnp.repeat(k, n_rep, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v, n_rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
+    tok = jnp.arange(max_pages * page)[None, :]
+    valid = tok < seq_lens[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    out = jnp.einsum("bhs,bshd->bhd", p, v)
+    return out.astype(q.dtype)
+
+
+def gather_quantize_ref(pool, page_ids, eps: float = 1e-12):
+    x = pool[page_ids].astype(jnp.float32)          # (n, page, F)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = amax / 127.0 + eps
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def scatter_dequantize_ref(pool, page_ids, q, scales):
+    x = q.astype(jnp.float32) * scales[..., None]
+    return pool.at[page_ids].set(x.astype(pool.dtype))

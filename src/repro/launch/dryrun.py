@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run driver (deliverable e + the data source for g).
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles the
+real step function (train_step / prefill / serve_step) against ShapeDtypeStruct
+inputs on the production mesh, then records:
+  * memory_analysis()      — per-device bytes: args/outputs/temps (fits HBM?)
+  * cost_analysis()        — HLO FLOPs + bytes accessed (roofline terms 1-2)
+  * collective inventory   — parsed from the post-SPMD optimized HLO
+                             (roofline term 3)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+Results are appended as JSON, one file per cell, so long sweeps are resumable.
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models import SHAPES, build_model, shape_applicable
+from repro.optim import AdamW
+from repro.parallel import (batch_spec_tree, cache_spec_tree, make_ctx,
+                            named, param_spec_tree, zero_spec_tree)
+from repro.train.step import make_train_step
+from repro.launch.hlo_cost import HloCost
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from post-partitioning HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\(.*?\)|[\w\[\],{}\/ ]+?) "
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue                     # counted at -start
+        kind = m.group(2)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(m.group(1))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # some backends lack it
+        return {"error": str(e)}
+    d = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            d[f] = int(v)
+    if not d and ma is not None:
+        d["repr"] = str(ma)
+    return d
+
+
+def build_cell(arch: str, shape_name: str, mesh, opts: dict):
+    """Returns (jitted_fn, example_args_shapedtype) for one cell."""
+    cfg = get_config(arch, **opts.get("cfg_overrides", {}))
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, shape.batch)
+    pspecs = param_spec_tree(model.param_shape(), mesh)
+    pshard = named(pspecs, mesh)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        params_sds = model.param_shape()
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = jax.tree.map(lambda s: P(), opt_sds,
+                              is_leaf=lambda x: hasattr(x, "shape"))
+        # moments follow params (+ZeRO-1 over data when enabled)
+        mspec = pspecs if not opts.get("zero1", True) else \
+            zero_spec_tree(pspecs, params_sds, mesh)
+        ospecs = type(opt_sds)(step=P(), m=mspec, v=jax.tree.map(
+            lambda x: x, mspec))
+        oshard = named(ospecs, mesh)
+        bspecs = batch_spec_tree(specs["batch"], ctx)
+        bshard = named(bspecs, mesh)
+        step = make_train_step(model, opt, ctx,
+                               accum=opts.get("accum", 1),
+                               grad_compression=opts.get("compression",
+                                                         "none"))
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, specs["batch"])
+        return fn, args
+
+    if shape.kind == "prefill":
+        bspecs = batch_spec_tree(specs["batch"], ctx)
+        cache_sds = model.cache_shape(shape.batch, shape.seq)
+        cspecs = cache_spec_tree(cache_sds, ctx, mesh)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, ctx)
+
+        fn = jax.jit(prefill,
+                     in_shardings=(pshard, named(bspecs, mesh)),
+                     out_shardings=(None, named(cspecs, mesh)))
+        return fn, (model.param_shape(), specs["batch"])
+
+    # decode
+    cache_sds = specs["cache"]
+    cspecs = cache_spec_tree(cache_sds, ctx, mesh)
+    cshard = named(cspecs, mesh)
+    b = ctx.batch_axes if ctx.batch_axes else None
+    tshard = NamedSharding(mesh, P(b))
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos, ctx)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(pshard, cshard, tshard, tshard),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(1,))
+    return fn, (model.param_shape(), cache_sds, specs["token"], specs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             opts: dict | None = None, tag: str = "") -> dict:
+    opts = opts or {}
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    outp = pathlib.Path(out_dir)
+    outp.mkdir(parents=True, exist_ok=True)
+    fpath = outp / f"{cell_id}.json"
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, SHAPES[shape_name])
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "opts": {k: v for k, v in opts.items() if k != "cfg_overrides"},
+           "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        fpath.write_text(json.dumps(rec, indent=1))
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args = build_cell(arch, shape_name, mesh, opts)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds")}
+        mem = _mem_dict(compiled)
+        hlo_text = compiled.as_text()
+        coll = parse_collectives(hlo_text)
+        try:
+            # trip-multiplied per-device roofline terms (see hlo_cost.py)
+            hc = HloCost(hlo_text).totals()
+            hc.pop("collectives", None)
+        except Exception as e:          # never fail the cell on the analyzer
+            hc = {"error": str(e)}
+        rec.update(status="OK", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), cost=cost, memory=mem,
+                   collectives=coll, hlo_cost=hc, n_devices=mesh.size)
+    except Exception as e:
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    fpath.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    args = ap.parse_args()
+
+    opts = {"zero1": not args.no_zero1, "accum": args.accum,
+            "compression": args.compression, "cfg_overrides": {}}
+    if args.remat:
+        opts["cfg_overrides"]["remat"] = args.remat
+    if args.attn_chunk:
+        opts["cfg_overrides"]["attn_chunk"] = args.attn_chunk
+
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}" + \
+                    (f"__{args.tag}" if args.tag else "")
+                fpath = pathlib.Path(args.out) / f"{cell}.json"
+                if args.skip_existing and fpath.exists():
+                    prev = json.loads(fpath.read_text())
+                    if prev.get("status") in ("OK", "SKIP"):
+                        print(f"[skip] {cell}: {prev['status']}")
+                        continue
+                rec = run_cell(arch, shape, mp, args.out, opts, args.tag)
+                msg = rec["status"]
+                if rec["status"] == "OK":
+                    msg += (f" flops={rec['cost'].get('flops', 0):.3e}"
+                            f" coll={rec['collectives']['total_bytes']:.3e}B"
+                            f" compile={rec['compile_s']}s")
+                elif rec["status"] == "FAIL":
+                    msg += f" {rec['error'][:200]}"
+                print(f"[{cell}] {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

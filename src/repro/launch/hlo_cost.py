@@ -1,0 +1,352 @@
+"""Exact-ish cost model over post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scanned
+94-layer transformer reports 1 layer of FLOPs.  This module re-derives the
+three roofline inputs by walking the HLO call graph with **while-loop trip
+multipliers**:
+
+  * flops        — 2 * prod(result_shape) * prod(contracting_dims) per dot
+                   (convolutions handled analogously)
+  * hbm bytes    — sum of (operand + result) bytes of ops per computation,
+                   with fusion-internal ops excluded (they live in
+                   registers/VMEM) — i.e. an HBM-traffic model
+  * collectives  — per-kind counts/bytes (payload shape), trip-multiplied,
+                   with replica-group sizes for wire-byte modeling
+
+The text is the *partitioned* (per-device) module, so every number is
+per-device — the roofline convention used throughout EXPERIMENTS.md.
+Validated against known matmul/scan/remat programs in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%name = <type> <op>(<rest>` where <type> may be a tuple and carries
+# layout suffixes like {1,0}
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[\w\[\],{}:#*_ ]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls|branch_computations)="
+                      r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*\))?\s*->")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota", "reshape", "copy-start", "copy-done"}
+_TRANSCEND_OPS = {"exponential", "log", "tanh", "logistic", "rsqrt", "sqrt",
+                  "power", "sine", "cosine", "exponential-minus-one"}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _first_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _last_shape_bytes(type_str: str) -> int:
+    shapes = _SHAPE_RE.findall(type_str)
+    if not shapes:
+        return 0
+    dt, dims = shapes[-1]
+    b = _DTYPE_BYTES.get(dt, 0)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+@dataclass
+class Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcend: float = 0.0
+    colls: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)        # (callee, kind)
+    while_conds: dict = field(default_factory=dict)  # body_name -> cond_name
+    max_const: int = 0                               # for trip-count guess
+    # HBM-access model for *fused* computations: parameter position ->
+    # bytes actually touched (slice bytes when every use is a
+    # dynamic-slice; full buffer otherwise); root DUS write is the slice.
+    param_access: dict = field(default_factory=dict)
+    root_write_bytes: float | None = None
+
+
+def parse_hlo(text: str) -> dict[str, Comp]:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    sym_bytes: dict[str, int] = {}
+    sym_dims: dict[str, list[int]] = {}
+    # per-comp param tracking: name -> position; position -> (full, sliced,
+    # slice_bytes, wholesale)
+    params: dict[str, int] = {}
+    pstat: dict[int, list] = {}
+
+    def finish_comp():
+        if cur is None:
+            return
+        for pos, (full, sliced, slice_by, whole) in pstat.items():
+            if whole or not sliced:
+                cur.param_access[pos] = full
+            else:
+                cur.param_access[pos] = min(full, slice_by)
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        stripped = line.strip()
+        if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            hdr = _COMP_HDR.match(stripped)
+            if hdr and "->" in stripped:
+                finish_comp()
+                cur = Comp(hdr.group(1))
+                comps[cur.name] = cur
+                sym_bytes = {}
+                sym_dims = {}
+                params = {}
+                pstat = {}
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        rname, rtype, op, rest = m.groups()
+        rbytes = shape_bytes(rtype)
+        sym_bytes[rname] = rbytes
+        sym_dims[rname] = _first_dims(rtype)
+        cm = re.search(r"constant\((\d+)\)", line)
+        if cm:
+            cur.max_const = max(cur.max_const, int(cm.group(1)))
+        # operand names up to the argument-list closing paren
+        args_part = rest.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(args_part)
+        obytes = sum(sym_bytes.get(o, 0) for o in operands)
+        # ---- parameter access tracking (for the fusion HBM model) -------
+        if op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", line)
+            if pm:
+                pos = int(pm.group(1))
+                params[rname] = pos
+                pstat[pos] = [rbytes, False, 0.0, False]
+        else:
+            # param aliases flow through pure shape/type plumbing ops
+            if op in ("convert", "copy", "bitcast", "reshape") and operands \
+                    and operands[0] in params:
+                params[rname] = params[operands[0]]
+            for oi, o in enumerate(operands):
+                if o in params:
+                    st = pstat[params[o]]
+                    if op == "dynamic-slice":
+                        st[1] = True
+                        st[2] += rbytes
+                    elif op == "dynamic-update-slice" and oi == 0:
+                        # in-place DUS target: written through, not read
+                        st[1] = True
+                    elif op in ("get-tuple-element", "bitcast", "reshape",
+                                "tuple", "convert", "copy"):
+                        pass                      # shape plumbing, not access
+                    else:
+                        st[3] = True              # wholesale use
+        is_root = stripped.startswith("ROOT")
+        if is_root and op == "dynamic-update-slice" and len(operands) > 1:
+            cur.root_write_bytes = sym_bytes.get(operands[1], 0)
+        if op == "dot":
+            contract = 1
+            lhs_dims = sym_dims.get(operands[0], []) if operands else []
+            dm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if dm and dm.group(1):
+                for ci in dm.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(lhs_dims):
+                        contract *= lhs_dims[ci]
+            out_elems = 1
+            for d in _first_dims(rtype):
+                out_elems *= d
+            cur.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            out_elems = 1
+            for d in _first_dims(rtype):
+                out_elems *= d
+            in_dims = sym_dims.get(operands[0], []) if operands else []
+            k = in_dims[-1] if in_dims else 1
+            cur.flops += 2.0 * out_elems * k
+        if op in COLLECTIVE_KINDS or any(
+                op == f"{k}-start" for k in COLLECTIVE_KINDS):
+            kind = op.replace("-start", "")
+            gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if gm:
+                gsize = int(gm.group(2))
+            else:
+                gm2 = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+                gsize = len(gm2.group(1).split(",")) if gm2 else 0
+            cbytes = _last_shape_bytes(rtype) if op.endswith("-start") \
+                else rbytes
+            ent = cur.colls.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                              "group": gsize})
+            ent["count"] += 1
+            ent["bytes"] += cbytes
+            ent["group"] = max(ent["group"], gsize)
+        if op == "dynamic-update-slice":
+            # in-place DUS: traffic = read-modify-write of the *slice*
+            # (operand 1), not the whole carried buffer
+            upd = sym_bytes.get(operands[1], 0) if len(operands) > 1 else 0
+            cur.bytes += 2 * upd
+        elif op == "dynamic-slice":
+            # traffic = the extracted slice, not the sliced buffer
+            cur.bytes += 2 * rbytes
+        elif op == "fusion":
+            # reads: per-parameter access model of the fused computation
+            # (a param only ever dynamic-sliced costs its slices, not the
+            # whole stacked buffer); writes: root DUS writes its slice.
+            fm0 = re.search(r"calls=%?([\w.\-]+)", line)
+            callee = comps.get(fm0.group(1)) if fm0 else None
+            if callee is not None:
+                reads = sum(
+                    callee.param_access.get(i, sym_bytes.get(o, 0))
+                    for i, o in enumerate(operands))
+                write = (callee.root_write_bytes
+                         if callee.root_write_bytes is not None else rbytes)
+                cur.bytes += reads + write
+            else:
+                cur.bytes += rbytes + obytes
+        elif op == "while":
+            pass          # carry stays in place; the body accounts traffic
+        elif op not in _SKIP_BYTES_OPS and not op.endswith("-done"):
+            cur.bytes += rbytes + obytes
+        if op in _TRANSCEND_OPS:
+            out_elems = 1
+            for d in _first_dims(rtype):
+                out_elems *= d
+            cur.transcend += out_elems
+        # --- call-graph edges -------------------------------------------
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", line)
+            if bm:
+                cur.calls.append((bm.group(1), "while_body"))
+                if cm2:
+                    cur.while_conds[bm.group(1)] = cm2.group(1)
+        elif op == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", line)
+            if fm:
+                cur.calls.append((fm.group(1), "fusion"))
+        else:
+            for cm3 in _CALL_RE.finditer(line):
+                for callee in re.split(r",\s*", cm3.group(1)):
+                    cur.calls.append((callee.strip().lstrip("%"), "call"))
+    finish_comp()
+    return comps
+
+
+class HloCost:
+    """Roofline totals for the entry computation of an optimized module."""
+
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[str, tuple] = {}
+        # entry = the computation no one calls (fallback: named main)
+        called = {c for comp in self.comps.values() for c, _ in comp.calls}
+        entries = [n for n in self.comps if n not in called]
+        self._entry = None
+        for n in entries:
+            if "main" in n:
+                self._entry = n
+                break
+        if self._entry is None:
+            self._entry = entries[0] if entries else next(iter(self.comps))
+
+    def _trips(self, caller: Comp, body: str) -> int:
+        cond = caller.while_conds.get(body)
+        if cond and cond in self.comps:
+            c = self.comps[cond].max_const
+            if c > 0:
+                return c
+        # condition constant may be folded into the body counter init
+        return max(1, self.comps[body].max_const) if body in self.comps else 1
+
+    def _cost(self, name: str, seen=()) -> tuple:
+        if name in self._memo:
+            return self._memo[name]
+        if name not in self.comps or name in seen:
+            return (0.0, 0.0, 0.0, {})
+        c = self.comps[name]
+        fl, by, tr = c.flops, c.bytes, c.transcend
+        colls = {k: dict(v) for k, v in c.colls.items()}
+        for callee, kind in c.calls:
+            if callee not in self.comps:
+                continue
+            cf, cb, ct, cc = self._cost(callee, seen + (name,))
+            mult = self._trips(c, callee) if kind == "while_body" else 1
+            fl += cf * mult
+            # HBM bytes: while bodies re-run their traffic every trip;
+            # fusion internals live in VMEM/registers — the fusion op's own
+            # operands/result were already counted at the call site.
+            if kind != "fusion":
+                by += cb * mult
+            tr += ct * mult
+            for k, v in cc.items():
+                ent = colls.setdefault(k, {"count": 0, "bytes": 0.0,
+                                           "group": v.get("group", 0)})
+                ent["count"] += v["count"] * mult
+                ent["bytes"] += v["bytes"] * mult
+                ent["group"] = max(ent["group"], v.get("group", 0))
+        out = (fl, by, tr, colls)
+        self._memo[name] = out
+        return out
+
+    def entry(self) -> str:
+        return self._entry
+
+    def totals(self) -> dict:
+        fl, by, tr, colls = self._cost(self.entry())
+        wire = 0.0
+        for k, v in colls.items():
+            g = max(2, v.get("group", 2))
+            frac = (g - 1) / g
+            if k == "all-reduce":
+                # ring AR = RS + AG: 2·(g-1)/g × payload crosses each link
+                wire += 2 * frac * v["bytes"]
+            elif k == "collective-permute":
+                wire += v["bytes"]
+            elif k == "reduce-scatter":
+                # payload recorded is the scattered output shard: ring input
+                # traffic is (g-1) × shard per device
+                wire += (g - 1) * v["bytes"]
+            else:
+                wire += frac * v["bytes"]
+        return {"flops": fl, "bytes": by, "transcendentals": tr,
+                "collectives": colls,
+                "collective_bytes": sum(v["bytes"] for v in colls.values()),
+                "wire_bytes": wire}

@@ -1,0 +1,6 @@
+from .api import Model, build_model
+from .common import MeshCtx, ModelConfig, MoECfg, ShapeCfg, SHAPES, \
+    shape_applicable
+
+__all__ = ["Model", "build_model", "MeshCtx", "ModelConfig", "MoECfg",
+           "ShapeCfg", "SHAPES", "shape_applicable"]

@@ -1,0 +1,104 @@
+"""Family-dispatching model API.
+
+Every architecture exposes the same five entry points:
+    init(rng) -> params
+    loss(params, batch, ctx) -> scalar          (train_step builds on this)
+    prefill(params, batch, ctx) -> (logits, cache/state)
+    decode_step(params, cache, token, pos, ctx) -> (logits, cache/state)
+    cache_shape(B, S) -> pytree of ShapeDtypeStruct (no allocation)
+plus ``input_specs(shape)`` producing ShapeDtypeStruct stand-ins for every
+model input of the given (train/prefill/decode) shape — the dry-run contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import MeshCtx, ModelConfig, ShapeCfg
+from . import rglru, transformer, xlstm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_cache: Callable          # (B, S) -> concrete zeroed cache
+    cache_shape: Callable         # (B, S) -> ShapeDtypeStruct pytree
+
+    # ---------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeCfg) -> dict:
+        cfg = self.cfg
+        B, S = shape.batch, shape.seq
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        extras = {}
+        if cfg.family == "encdec":
+            extras["frames"] = sds((B, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            extras["image_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                         cfg.dtype)
+        if shape.kind == "train":
+            return {"batch": {"tokens": sds((B, S), i32),
+                              "targets": sds((B, S), i32), **extras}}
+        if shape.kind == "prefill":
+            return {"batch": {"tokens": sds((B, S), i32), **extras}}
+        # decode: one new token against an S-token cache
+        return {"cache": self.cache_shape(B, S),
+                "token": sds((B,), i32),
+                "pos": sds((B,), i32)}
+
+    def param_shape(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, rng)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=partial(xlstm.init_xlstm, cfg),
+            loss=lambda p, b, ctx=None: xlstm.xlstm_loss(p, b, cfg, ctx),
+            forward=lambda p, b, ctx=None: xlstm.xlstm_forward(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx=None, s_max=None:
+                xlstm.xlstm_prefill(p, b, cfg, ctx),
+            decode_step=lambda p, c, t, pos, ctx=None:
+                xlstm.xlstm_decode_step(p, c, t, pos, cfg, ctx),
+            make_cache=lambda B, S: xlstm.xlstm_states(cfg, B),
+            cache_shape=lambda B, S: jax.eval_shape(
+                lambda: xlstm.xlstm_states(cfg, B)),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=partial(rglru.init_rg, cfg),
+            loss=lambda p, b, ctx=None: rglru.rg_loss(p, b, cfg, ctx),
+            forward=lambda p, b, ctx=None: rglru.rg_forward(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx=None, s_max=None:
+                rglru.rg_prefill(p, b, cfg, ctx),
+            decode_step=lambda p, c, t, pos, ctx=None:
+                rglru.rg_decode_step(p, c, t, pos, cfg, ctx),
+            make_cache=lambda B, S: rglru.rg_states(cfg, B),
+            cache_shape=lambda B, S: jax.eval_shape(
+                lambda: rglru.rg_states(cfg, B)),
+        )
+    return Model(
+        cfg=cfg,
+        init=partial(transformer.init_lm, cfg),
+        loss=lambda p, b, ctx=None: transformer.lm_loss(p, b, cfg, ctx),
+        forward=lambda p, b, ctx=None: transformer.lm_forward(p, b, cfg, ctx),
+        prefill=lambda p, b, ctx=None, s_max=None:
+            transformer.lm_prefill(p, b, cfg, ctx, s_max=s_max),
+        decode_step=lambda p, c, t, pos, ctx=None:
+            transformer.lm_decode_step(p, c, t, pos, cfg, ctx),
+        make_cache=lambda B, S: transformer.make_cache(cfg, B, S),
+        cache_shape=lambda B, S: jax.eval_shape(
+            lambda: transformer.make_cache(cfg, B, S)),
+    )

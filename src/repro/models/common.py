@@ -1,0 +1,148 @@
+"""Model/shape configuration shared across the 10 assigned architectures."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    """How model code should see the device mesh (None = single device).
+
+    batch_axes: mesh axes the batch dim is sharded over (may be empty, e.g.
+    batch=1 long-context decode).  model_axis: the TP/EP axis name.
+    """
+    mesh: Any = None
+    batch_axes: tuple = ()
+    model_axis: str | None = None
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_expert: int              # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                # dense | moe | encdec | vlm | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0          # 0 -> derived d_model // n_heads
+    moe: MoECfg | None = None
+    qkv_bias: bool = False
+    norm: str = "rms"          # rms | ln
+    act: str = "swiglu"        # swiglu | gelu
+    rope_theta: float = 1e6
+    pos: str = "rope"          # rope | sinusoidal | none
+    tie_embeddings: bool = False
+    # family extras ----------------------------------------------------------
+    enc_layers: int = 0        # encdec: encoder depth
+    enc_seq: int = 1500        # whisper frame count (stub frontend output)
+    cross_every: int = 0       # vlm: a cross-attn layer every Nth layer
+    n_img_tokens: int = 1600   # vlm stub patch-embedding count
+    attn_window: int = 0       # 0 = full causal; >0 = local sliding window
+    block_pattern: tuple[str, ...] = ()   # hybrid/ssm per-group layer kinds
+    lru_width: int = 0         # rglru: recurrence width (0 -> d_model)
+    # numerics / perf knobs ---------------------------------------------------
+    dtype: Any = jnp.bfloat16
+    remat: str = "dots"        # none | dots | full
+    attn_impl: str = "xla"     # xla (chunked online-softmax) | pallas
+    attn_chunk: int = 512      # KV chunk for the XLA flash-pattern attention
+    scan_layers: bool = True
+    logits_f32: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context with bounded state?"""
+        return self.family in ("ssm", "hybrid")
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    # --------------------------------------------------------- param counts
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline bookkeeping)."""
+        D, hd = self.d_model, self.hd
+        qo = D * self.n_heads * hd * 2
+        kv = D * self.n_kv_heads * hd * 2
+        if self.family in ("ssm",):
+            per_layer = 5 * D * D + 2 * D  # mLSTM-ish (see models/xlstm.py)
+            body = self.n_layers * per_layer
+        elif self.family == "hybrid":
+            R = self.lru_width or D
+            rec = 2 * D * R + 2 * R * R + R * D + 4 * R
+            attn = qo + kv
+            mlp = 3 * D * self.d_ff
+            n_attn = sum(1 for i in range(self.n_layers)
+                         if self._layer_kind(i) == "attn")
+            n_rec = self.n_layers - n_attn
+            body = n_rec * (rec + mlp) + n_attn * (attn + mlp)
+        else:
+            if self.moe:
+                mlp = self.moe.n_experts * 3 * D * self.moe.d_expert \
+                    + D * self.moe.n_experts
+            else:
+                mlp = (3 if self.act == "swiglu" else 2) * D * self.d_ff
+            per_layer = qo + kv + mlp
+            body = self.n_layers * per_layer
+            if self.family == "encdec":
+                body += self.enc_layers * (qo + kv + 2 * D * self.d_ff)
+                body += self.n_layers * (qo + kv)      # decoder cross-attn
+            if self.family == "vlm" and self.cross_every:
+                n_cross = self.n_layers // self.cross_every
+                body += n_cross * (qo + kv)
+        embed = self.vocab * D * (1 if self.tie_embeddings else 2)
+        return body + embed
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE top-k), for 6·N_active·D."""
+        if not self.moe:
+            return self.param_count()
+        D = self.d_model
+        dense_mlp = self.moe.top_k * 3 * D * self.moe.d_expert \
+            + D * self.moe.n_experts
+        full_mlp = self.moe.n_experts * 3 * D * self.moe.d_expert \
+            + D * self.moe.n_experts
+        return self.param_count() - self.n_layers * (full_mlp - dense_mlp)
+
+    def _layer_kind(self, i: int) -> str:
+        if not self.block_pattern:
+            return "attn"
+        return self.block_pattern[i % len(self.block_pattern)]
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k":    ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k":  ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k":   ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """Which (arch x shape) cells run; mirrors DESIGN.md §Arch-applicability."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k dense KV decode skipped per assignment"
+    return True, ""

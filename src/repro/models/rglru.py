@@ -1,0 +1,290 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local sliding-
+window attention in a (rec, rec, attn) pattern; 38 layers = 12 scanned groups
+of 3 + 2 trailing recurrent layers (12 attn : 26 rec ≈ the 1:2 assignment).
+
+The RG-LRU is a gated linear recurrence
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+    a_t = exp(-c · softplus(Λ) ⊙ r_t),  r_t, i_t = σ(linear(x_t))
+evaluated with ``jax.lax.associative_scan`` for training/prefill (O(T log T),
+fully parallel — the TPU-friendly substitute for the paper's sequential CUDA
+scan) and a single fused step for decode.  Decode state is O(1): recurrence
+state (B, R) + conv tail (B, 3, R) + a 2048-slot attention ring buffer — this
+arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import MeshCtx, ModelConfig
+from .layers import (attn_init, chunked_attention, decode_attention,
+                     decode_update_and_attend, init_norm, mlp_apply,
+                     mlp_init, out_proj, qkv_proj, rms_norm, rope)
+
+PATTERN = ("rec", "rec", "attn")
+_C = 8.0                      # RG-LRU gate sharpness constant (Griffin)
+CONV_W = 4
+
+
+def _dense(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def init_rec_mixer(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    R = cfg.lru_width or d
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(d)
+    sR = 1.0 / math.sqrt(R)
+    return {"ln": init_norm(d, "rms"),
+            "w_gate": _dense(ks[0], (d, R), s, cfg.dtype),
+            "w_x": _dense(ks[1], (d, R), s, cfg.dtype),
+            "conv_w": _dense(ks[2], (CONV_W, R), 0.1, cfg.dtype),
+            "conv_b": jnp.zeros((R,), cfg.dtype),
+            "w_r": _dense(ks[3], (R, R), sR, cfg.dtype),
+            "w_i": _dense(ks[4], (R, R), sR, cfg.dtype),
+            "lam": jnp.log(jnp.expm1(       # softplus^-1 of target decay
+                -jnp.log(jnp.linspace(0.9, 0.999, R)) / _C)).astype(jnp.float32),
+            "w_out": _dense(ks[5], (R, d), sR, cfg.dtype)}
+
+
+def init_rg_layer(rng, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(rng)
+    p = {"ln2": init_norm(cfg.d_model, "rms"),
+         "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)}
+    if kind == "rec":
+        p["rec"] = init_rec_mixer(k1, cfg)
+    else:
+        p["ln1"] = init_norm(cfg.d_model, "rms")
+        p["attn"] = attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, False, cfg.dtype)
+    return p
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv, width 4. x: (B,T,R). tail: (B,3,R) history."""
+    if tail is None:
+        pad = jnp.zeros_like(x[:, :CONV_W - 1])
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, CONV_W - 1 - j:xp.shape[1] - j if j else None] * w[CONV_W - 1 - j]
+              for j in range(CONV_W))
+    new_tail = xp[:, -(CONV_W - 1):]
+    return out + b, new_tail
+
+
+def rg_lru(y, p, h0=None):
+    """y: (B,T,R) conv output. Returns (out, h_last)."""
+    y32 = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(y @ p["w_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(y @ p["w_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r            # (B,T,R), <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * y32)
+    if y.shape[1] == 1 and h0 is not None:                  # decode fast path
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None], h
+    if h0 is not None:
+        # fold carry-in into the first element
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return hh, hh[:, -1]
+
+
+def rec_mixer_apply(x, p, cfg: ModelConfig, state=None):
+    """state: {'h': (B,R), 'tail': (B,3,R)} or None."""
+    xn = rms_norm(x, p["ln"]["scale"])
+    gate = jax.nn.gelu((xn @ p["w_gate"]).astype(jnp.float32))
+    y = xn @ p["w_x"]
+    y, new_tail = _causal_conv(y, p["conv_w"], p["conv_b"],
+                               None if state is None else state["tail"])
+    h, h_last = rg_lru(y, p, None if state is None else state["h"])
+    out = (h * gate).astype(cfg.dtype) @ p["w_out"]
+    return out, {"h": h_last, "tail": new_tail.astype(cfg.dtype)}
+
+
+def attn_mixer_apply(x, p, cfg: ModelConfig, positions, cache=None,
+                     cache_pos=None, ctx=None, collect: bool = False):
+    xn = rms_norm(x, p["ln1"]["scale"])
+    q, k, v = qkv_proj(xn, p["attn"], cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    W = cfg.attn_window
+    new_cache = None
+    if cache is not None:
+        out, ck, cv, cpos = decode_update_and_attend(
+            q, cache["k"], cache["v"], cache["pos"], k, v, cache_pos,
+            window=W, ctx=ctx, chunk=cfg.attn_chunk, dtype=cfg.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        out = chunked_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                causal=True, window=W, chunk=cfg.attn_chunk,
+                                dtype=cfg.dtype)
+        if W and collect:
+            T = x.shape[1]
+            S_c = min(T, W)
+            ps = positions[:, -S_c:]
+            order = jnp.argsort(ps[0] % W) if T >= W else jnp.arange(S_c)
+            new_cache = {"k": k[:, -S_c:][:, order].astype(cfg.dtype),
+                         "v": v[:, -S_c:][:, order].astype(cfg.dtype),
+                         "pos": ps[:, order]}
+    return out_proj(out, p["attn"]), new_cache
+
+
+def rg_layer_apply(x, p, kind, cfg, positions, state=None, cache_pos=None,
+                   ctx=None, collect: bool = False):
+    if kind == "rec":
+        mix, new_state = rec_mixer_apply(x, p["rec"], cfg, state)
+        if not collect and state is None:
+            new_state = None
+    else:
+        mix, new_state = attn_mixer_apply(x, p, cfg, positions, state,
+                                          cache_pos, ctx=ctx, collect=collect)
+    x = x + mix
+    x = x + mlp_apply(rms_norm(x, p["ln2"]["scale"]), p["mlp"], cfg.act)
+    return x, new_state
+
+
+# --------------------------------------------------------------- full model
+def n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    g = cfg.n_layers // len(PATTERN)
+    tail = cfg.n_layers - g * len(PATTERN)
+    return g, tail
+
+
+def init_rg(cfg: ModelConfig, rng):
+    G, tail = n_groups(cfg)
+    ks = jax.random.split(rng, 5 + tail)
+    d, V = cfg.d_model, cfg.vocab
+    params = {
+        "embed": _dense(ks[0], (V, d), 1.0 / math.sqrt(d), cfg.dtype),
+        "groups": {
+            "rec1": jax.vmap(lambda r: init_rg_layer(r, cfg, "rec"))(
+                jax.random.split(ks[1], G)),
+            "rec2": jax.vmap(lambda r: init_rg_layer(r, cfg, "rec"))(
+                jax.random.split(ks[2], G)),
+            "attn": jax.vmap(lambda r: init_rg_layer(r, cfg, "attn"))(
+                jax.random.split(ks[3], G)),
+        },
+        "final_norm": init_norm(d, "rms"),
+        "head": _dense(ks[4], (d, V), 1.0 / math.sqrt(d), cfg.dtype),
+    }
+    for t in range(tail):
+        params[f"tail{t}"] = init_rg_layer(ks[5 + t], cfg, "rec")
+    return params
+
+
+def rg_states(cfg: ModelConfig, B: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    G, tail = n_groups(cfg)
+    R = cfg.lru_width or cfg.d_model
+    W = cfg.attn_window
+
+    def rec(n=None):
+        s = {"h": jnp.zeros((B, R), jnp.float32),
+             "tail": jnp.zeros((B, CONV_W - 1, R), dtype)}
+        if n is None:
+            return s
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), s)
+
+    attn = {"k": jnp.zeros((G, B, W, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((G, B, W, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": jnp.full((G, B, W), -1, jnp.int32)}
+    st = {"groups": {"rec1": rec(G), "rec2": rec(G), "attn": attn}}
+    for t in range(tail):
+        st[f"tail{t}"] = rec()
+    return st
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn)
+
+
+def rg_backbone(params, tokens, cfg, ctx, collect: bool):
+    """Returns (final hidden states (B,T,D), states-or-None)."""
+    B, T = tokens.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = jnp.take(params["embed"], tokens, axis=0) * math.sqrt(cfg.d_model)
+    x = x.astype(cfg.dtype)
+
+    def group(h, g):
+        h, s1 = rg_layer_apply(h, g["rec1"], "rec", cfg, positions,
+                               ctx=ctx, collect=collect)
+        h, s2 = rg_layer_apply(h, g["rec2"], "rec", cfg, positions,
+                               ctx=ctx, collect=collect)
+        h, sa = rg_layer_apply(h, g["attn"], "attn", cfg, positions,
+                               ctx=ctx, collect=collect)
+        if not collect:
+            return h, None
+        return h, {"rec1": s1, "rec2": s2, "attn": sa}
+
+    x, gstates = jax.lax.scan(_remat(group, cfg), x, params["groups"])
+    states = {"groups": gstates} if collect else None
+    G, tail = n_groups(cfg)
+    for t in range(tail):
+        x, st = rg_layer_apply(x, params[f"tail{t}"], "rec", cfg, positions,
+                               ctx=ctx, collect=collect)
+        if collect:
+            states[f"tail{t}"] = st
+    return x, states
+
+
+def rg_forward(params, batch, cfg, ctx):
+    x, _ = rg_backbone(params, batch["tokens"], cfg, ctx, False)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    return (x @ params["head"]).astype(jnp.float32)
+
+
+def rg_loss(params, batch, cfg, ctx):
+    logits = rg_forward(params, batch, cfg, ctx)
+    t = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def rg_prefill(params, batch, cfg, ctx):
+    x, states = rg_backbone(params, batch["tokens"], cfg, ctx, True)
+    x = rms_norm(x[:, -1:], params["final_norm"]["scale"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits[:, 0], states
+
+
+def rg_decode_step(params, state, token, pos, cfg, ctx):
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0) \
+        * math.sqrt(cfg.d_model)
+    x = x.astype(cfg.dtype)
+    positions = pos[:, None]
+
+    def group(h, xs):
+        g, st = xs
+        h, s1 = rg_layer_apply(h, g["rec1"], "rec", cfg, positions,
+                               state=st["rec1"], ctx=ctx)
+        h, s2 = rg_layer_apply(h, g["rec2"], "rec", cfg, positions,
+                               state=st["rec2"], ctx=ctx)
+        h, sa = rg_layer_apply(h, g["attn"], "attn", cfg, positions,
+                               state=st["attn"], cache_pos=pos, ctx=ctx)
+        return h, {"rec1": s1, "rec2": s2, "attn": sa}
+
+    x, gstates = jax.lax.scan(group, x, (params["groups"], state["groups"]))
+    new_state = {"groups": gstates}
+    G, tail = n_groups(cfg)
+    for t in range(tail):
+        x, st = rg_layer_apply(x, params[f"tail{t}"], "rec", cfg, positions,
+                               state=state[f"tail{t}"], ctx=ctx)
+        new_state[f"tail{t}"] = st
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits[:, 0], new_state

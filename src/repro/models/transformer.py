@@ -1,0 +1,489 @@
+"""Transformer families: decoder-only LM (dense & MoE), encoder-decoder
+(whisper), and VLM with interleaved cross-attention layers (llama-vision).
+
+All families share: scan-over-layers (stacked params → fast lowering for
+94-layer configs), configurable remat, chunked flash-pattern attention, and
+KV-cache prefill/decode paths.  Modality frontends are stubs per the
+assignment: whisper consumes precomputed frame embeddings, the VLM consumes
+precomputed patch embeddings (both arrive via ``input_specs``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .common import MeshCtx, ModelConfig
+from .layers import (apply_norm, attn_init, chunked_attention,
+                     decode_attention, decode_update_and_attend,
+                     init_norm, mlp_apply, mlp_init,
+                     moe_apply, moe_init, out_proj, qkv_proj, rope,
+                     sharded_attention, sinusoidal_pos)
+
+
+def constrain(x, ctx: MeshCtx | None, spec: P):
+    if ctx is not None and ctx.mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, spec))
+    return x
+
+
+def act_spec(ctx: MeshCtx | None) -> P:
+    if ctx is None or ctx.mesh is None:
+        return P()
+    b = ctx.batch_axes if ctx.batch_axes else None
+    return P(b, None, None)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+# =========================================================== block def/init
+def init_block(rng, cfg: ModelConfig, *, cross: bool = False,
+               causal_self: bool = True, with_self: bool = True):
+    ks = jax.random.split(rng, 8)
+    d, hd = cfg.d_model, cfg.hd
+    p = {}
+    if with_self:
+        p["ln1"] = init_norm(d, cfg.norm)
+        p["attn"] = attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd,
+                              cfg.qkv_bias, cfg.dtype)
+    if cross:
+        p["lnx"] = init_norm(d, cfg.norm)
+        p["xattn"] = attn_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads, hd,
+                               False, cfg.dtype)
+        p["xgate"] = jnp.zeros((), jnp.float32)   # mllama-style gated cross
+    p["ln2"] = init_norm(d, cfg.norm)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[2], d, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, cfg.act, cfg.dtype)
+    return p
+
+
+def self_attention(x, p, cfg: ModelConfig, ctx, *, positions, causal=True,
+                   window=0, cache=None, cache_pos=None, kv_mask=None):
+    """Returns (attn_out, new_cache_slice_or_None).
+
+    cache: dict(k=(B,S,Hkv,hd), v=..., [pos=(B,S)]) for decode;
+    when cache is given, x is the single new token (B,1,D).
+    """
+    q, k, v = qkv_proj(x, p, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        # scatter the new token's K/V and attend, shard-locally when the
+        # cache is S-sharded (see layers.decode_update_and_attend)
+        out, ck, cv, cpos = decode_update_and_attend(
+            q, cache["k"], cache["v"], cache["pos"], k, v, cache_pos,
+            window=window, ctx=ctx, chunk=cfg.attn_chunk, dtype=cfg.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        return out_proj(out, p), new_cache
+    out = sharded_attention(
+        q, k, v, q_pos=positions, k_pos=positions, causal=causal,
+        window=window, kv_mask=kv_mask, chunk=cfg.attn_chunk, dtype=cfg.dtype,
+        ctx=ctx)
+    return out_proj(out, p), new_cache
+
+
+def cross_attention(x, p, cfg: ModelConfig, *, xk, xv, x_mask=None,
+                    ctx=None):
+    B, T, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, T, cfg.n_heads, cfg.hd)
+    S = xk.shape[1]
+    q_pos = jnp.zeros((B, T), jnp.int32)
+    k_pos = jnp.zeros((B, S), jnp.int32)
+    out = sharded_attention(q, xk, xv, q_pos=q_pos, k_pos=k_pos, causal=False,
+                            kv_mask=x_mask, chunk=cfg.attn_chunk,
+                            dtype=cfg.dtype, ctx=ctx)
+    return out_proj(out, p)
+
+
+def cross_kv(enc_out, p, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def block_apply(x, p, cfg: ModelConfig, ctx, *, positions, causal=True,
+                window=0, cache=None, cache_pos=None,
+                xk=None, xv=None, x_mask=None, with_self=True):
+    new_cache = None
+    if with_self:
+        a, new_cache = self_attention(
+            apply_norm(x, p["ln1"], cfg.norm), p["attn"], cfg, ctx,
+            positions=positions, causal=causal, window=window, cache=cache,
+            cache_pos=cache_pos)
+        x = x + a
+    if xk is not None:
+        g = jnp.tanh(p["xgate"]).astype(x.dtype) if "xgate" in p else 1.0
+        c = cross_attention(apply_norm(x, p["lnx"], cfg.norm), p["xattn"],
+                            cfg, xk=xk, xv=xv, x_mask=x_mask, ctx=ctx)
+        x = x + g * c
+    h = apply_norm(x, p["ln2"], cfg.norm)
+    if cfg.moe is not None:
+        x = x + moe_apply(h, p["moe"], cfg.moe, ctx)
+    else:
+        x = x + mlp_apply(h, p["mlp"], cfg.act)
+    x = constrain(x, ctx, act_spec(ctx))
+    return x, new_cache
+
+
+# ============================================================= LM (decoder)
+def init_lm(cfg: ModelConfig, rng):
+    ks = jax.random.split(rng, 6)
+    d, V = cfg.d_model, cfg.vocab
+    params = {
+        "embed": (jax.random.normal(ks[0], (V, d)) / math.sqrt(d)
+                  ).astype(cfg.dtype),
+        "final_norm": init_norm(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(ks[1], (d, V)) / math.sqrt(d)
+                          ).astype(cfg.dtype)
+    if cfg.family == "vlm":
+        G = cfg.n_layers // cfg.cross_every
+        inner = cfg.cross_every - 1
+        params["groups"] = {
+            "self": jax.vmap(lambda r: jax.vmap(
+                lambda r2: init_block(r2, cfg))(jax.random.split(r, inner)))(
+                jax.random.split(ks[2], G)),
+            "cross": jax.vmap(lambda r: init_block(r, cfg, cross=True))(
+                jax.random.split(ks[3], G)),
+        }
+    elif cfg.family == "encdec":
+        enc_cfg = cfg.with_(act="gelu")
+        params["enc_blocks"] = jax.vmap(
+            lambda r: init_block(r, enc_cfg))(
+            jax.random.split(ks[2], cfg.enc_layers))
+        params["enc_norm"] = init_norm(d, cfg.norm)
+        params["dec_blocks"] = jax.vmap(
+            lambda r: init_block(r, cfg, cross=True))(
+            jax.random.split(ks[3], cfg.n_layers))
+    else:
+        params["blocks"] = jax.vmap(lambda r: init_block(r, cfg))(
+            jax.random.split(ks[2], cfg.n_layers))
+    return params
+
+
+def _embed(params, tokens, cfg):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _unembed(params, x, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ w
+    return logits.astype(jnp.float32) if cfg.logits_f32 else logits
+
+
+def _encoder_apply(params, frames, cfg: ModelConfig, ctx):
+    """Whisper encoder over stub conv-frontend frame embeddings (B,S,D)."""
+    B, S, _ = frames.shape
+    pos = jnp.arange(S)[None, :].repeat(B, 0)
+    x = frames.astype(cfg.dtype) + sinusoidal_pos(pos, cfg.d_model, cfg.dtype)
+    enc_cfg = cfg.with_(act="gelu")
+
+    def body(h, blk):
+        h, _ = block_apply(h, blk, enc_cfg, ctx, positions=pos, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_blocks"])
+    return apply_norm(x, params["enc_norm"], cfg.norm)
+
+
+def lm_forward(params, batch, cfg: ModelConfig, ctx: MeshCtx | None):
+    """Full-sequence forward -> logits (B, T, V). batch carries 'tokens' and
+    family extras ('frames' for encdec, 'image_embeds' for vlm)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = _embed(params, tokens, cfg)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model, cfg.dtype)
+    x = constrain(x, ctx, act_spec(ctx))
+
+    if cfg.family == "encdec":
+        enc = _encoder_apply(params, batch["frames"], cfg, ctx)
+
+        def body(h, blk):
+            xk, xv = cross_kv(enc, blk["xattn"], cfg)
+            h, _ = block_apply(h, blk, cfg, ctx, positions=positions,
+                               causal=True, xk=xk, xv=xv)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_blocks"])
+    elif cfg.family == "vlm":
+        img = batch["image_embeds"].astype(cfg.dtype)
+
+        def group(h, g):
+            def inner(h2, blk):
+                h2, _ = block_apply(h2, blk, cfg, ctx, positions=positions)
+                return h2, None
+            h, _ = jax.lax.scan(inner, h, g["self"])
+            xk, xv = cross_kv(img, g["cross"]["xattn"], cfg)
+            h, _ = block_apply(h, g["cross"], cfg, ctx, positions=positions,
+                               xk=xk, xv=xv)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(group, cfg), x, params["groups"])
+    else:
+        def body(h, blk):
+            h, _ = block_apply(h, blk, cfg, ctx, positions=positions,
+                               causal=True, window=cfg.attn_window)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return _unembed(params, x, cfg)
+
+
+# ------------------------------------------------------------- loss
+def lm_loss(params, batch, cfg: ModelConfig, ctx: MeshCtx | None):
+    logits = lm_forward(params, batch, cfg, ctx)
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ------------------------------------------------------- prefill / decode
+def make_cache(cfg: ModelConfig, B: int, S_max: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    S_self = min(S_max, cfg.attn_window) if cfg.attn_window else S_max
+
+    def kv(layers, S):
+        return {"k": jnp.zeros((layers, B, S, Hkv, hd), dtype),
+                "v": jnp.zeros((layers, B, S, Hkv, hd), dtype),
+                "pos": jnp.full((layers, B, S), -1, jnp.int32)}
+
+    if cfg.family == "encdec":
+        return {"self": kv(cfg.n_layers, S_self),
+                "cross_k": jnp.zeros((cfg.n_layers, B, cfg.enc_seq, Hkv, hd),
+                                     dtype),
+                "cross_v": jnp.zeros((cfg.n_layers, B, cfg.enc_seq, Hkv, hd),
+                                     dtype)}
+    if cfg.family == "vlm":
+        G = cfg.n_layers // cfg.cross_every
+        inner = cfg.cross_every - 1
+        return {
+            "self": {"k": jnp.zeros((G, inner, B, S_self, Hkv, hd), dtype),
+                     "v": jnp.zeros((G, inner, B, S_self, Hkv, hd), dtype),
+                     "pos": jnp.full((G, inner, B, S_self), -1, jnp.int32)},
+            "cross_self": kv(G, S_self),
+            "cross_k": jnp.zeros((G, B, cfg.n_img_tokens, Hkv, hd), dtype),
+            "cross_v": jnp.zeros((G, B, cfg.n_img_tokens, Hkv, hd), dtype)}
+    return kv(cfg.n_layers, S_self)
+
+
+def lm_decode_step(params, cache, token, pos, cfg: ModelConfig,
+                   ctx: MeshCtx | None):
+    """One serve_step: new token (B,), absolute positions pos (B,) ->
+    (logits (B, V), updated cache)."""
+    B = token.shape[0]
+    x = _embed(params, token[:, None], cfg)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(pos[:, None], cfg.d_model, cfg.dtype)
+    x = constrain(x, ctx, act_spec(ctx))
+    positions = pos[:, None]
+
+    if cfg.family == "encdec":
+        def body(h, xs):
+            blk, ck, cv, csl = xs
+            h, new_self = block_apply(
+                h, blk, cfg, ctx, positions=positions, causal=True,
+                cache=csl, cache_pos=pos, xk=ck, xv=cv)
+            return h, new_self
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["cross_k"],
+                      cache["cross_v"], cache["self"]))
+        new_cache = dict(cache, self=new_self)
+    elif cfg.family == "vlm":
+        def group(h, xs):
+            g, sc, csc, ck, cv = xs
+            def inner(h2, xs2):
+                blk, c = xs2
+                h2, nc = block_apply(h2, blk, cfg, ctx, positions=positions,
+                                     cache=c, cache_pos=pos)
+                return h2, nc
+            h, nsc = jax.lax.scan(inner, h, (g["self"], sc))
+            h, ncsc = block_apply(h, g["cross"], cfg, ctx,
+                                  positions=positions, cache=csc,
+                                  cache_pos=pos, xk=ck, xv=cv)
+            return h, (nsc, ncsc)
+        x, (nself, ncross_self) = jax.lax.scan(
+            group, x, (params["groups"], cache["self"], cache["cross_self"],
+                       cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, self=nself, cross_self=ncross_self)
+    else:
+        def body(h, xs):
+            blk, c = xs
+            h, nc = block_apply(h, blk, cfg, ctx, positions=positions,
+                                causal=True, window=cfg.attn_window,
+                                cache=c, cache_pos=pos)
+            return h, nc
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return _unembed(params, x, cfg)[:, 0], new_cache
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, ctx: MeshCtx | None,
+               s_max: int | None = None):
+    """Full-context prefill: returns (last-token logits, populated cache).
+
+    ``s_max`` pads the returned cache with empty (pos=-1) slots so decode
+    steps can append new tokens: full-attention caches grow to ``s_max``;
+    windowed caches are padded to the full ring size W.
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = _embed(params, tokens, cfg)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model, cfg.dtype)
+    x = constrain(x, ctx, act_spec(ctx))
+    W = cfg.attn_window
+    S_c = min(T, W) if W else T
+
+    def _pad(ck, cv, cp):
+        target = (W if W else s_max) if s_max else None
+        if target is None or ck.shape[1] >= target:
+            return ck, cv, cp
+        pad = target - ck.shape[1]
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cp = jnp.pad(cp, ((0, 0), (0, pad)), constant_values=-1)
+        return ck, cv, cp
+
+    def fill_kv(k, v):
+        """Store the last S_c kv entries (ring layout for windowed attn)."""
+        if W and T > W:
+            ks, vs = k[:, -W:], v[:, -W:]
+            ps = positions[:, -W:]
+            # ring order: slot = pos % W
+            order = jnp.argsort(ps[0] % W)
+            return (ks[:, order].astype(cfg.dtype),
+                    vs[:, order].astype(cfg.dtype), ps[:, order])
+        return _pad(k.astype(cfg.dtype), v.astype(cfg.dtype), positions)
+
+    if cfg.family == "encdec":
+        enc = _encoder_apply(params, batch["frames"], cfg, ctx)
+
+        def body(h, blk):
+            xk, xv = cross_kv(enc, blk["xattn"], cfg)
+            hn = apply_norm(h, blk["ln1"], cfg.norm)
+            q, k, v = qkv_proj(hn, blk["attn"], cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd)
+            if cfg.pos == "rope":
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+            a = sharded_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                  causal=True, chunk=cfg.attn_chunk,
+                                  dtype=cfg.dtype, ctx=ctx)
+            h = h + out_proj(a, blk["attn"])
+            c = cross_attention(apply_norm(h, blk["lnx"], cfg.norm),
+                                blk["xattn"], cfg, xk=xk, xv=xv, ctx=ctx)
+            h = h + jnp.tanh(blk["xgate"]).astype(h.dtype) * c \
+                if "xgate" in blk else h + c
+            hh = apply_norm(h, blk["ln2"], cfg.norm)
+            h = h + mlp_apply(hh, blk["mlp"], cfg.act)
+            ck, cv, cp = fill_kv(k, v)
+            return h, {"k": ck, "v": cv, "pos": cp, "xk": xk, "xv": xv}
+
+        x, per_layer = jax.lax.scan(_remat(body, cfg), x,
+                                    params["dec_blocks"])
+        cache = {"self": {"k": per_layer["k"], "v": per_layer["v"],
+                          "pos": per_layer["pos"]},
+                 "cross_k": per_layer["xk"], "cross_v": per_layer["xv"]}
+    elif cfg.family == "vlm":
+        img = batch["image_embeds"].astype(cfg.dtype)
+
+        def group(h, g):
+            def inner(h2, blk):
+                hn = apply_norm(h2, blk["ln1"], cfg.norm)
+                q, k, v = qkv_proj(hn, blk["attn"], cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd)
+                if cfg.pos == "rope":
+                    q = rope(q, positions, cfg.rope_theta)
+                    k = rope(k, positions, cfg.rope_theta)
+                a = sharded_attention(q, k, v, q_pos=positions,
+                                      k_pos=positions, causal=True,
+                                      chunk=cfg.attn_chunk, dtype=cfg.dtype,
+                                      ctx=ctx)
+                h2 = h2 + out_proj(a, blk["attn"])
+                hh = apply_norm(h2, blk["ln2"], cfg.norm)
+                h2 = h2 + mlp_apply(hh, blk["mlp"], cfg.act)
+                ck, cv, cp = fill_kv(k, v)
+                return h2, {"k": ck, "v": cv, "pos": cp}
+            h, sc = jax.lax.scan(inner, h, g["self"])
+            blk = g["cross"]
+            hn = apply_norm(h, blk["ln1"], cfg.norm)
+            q, k, v = qkv_proj(hn, blk["attn"], cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd)
+            if cfg.pos == "rope":
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+            a = sharded_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                  causal=True, chunk=cfg.attn_chunk,
+                                  dtype=cfg.dtype, ctx=ctx)
+            h = h + out_proj(a, blk["attn"])
+            xk, xv = cross_kv(img, blk["xattn"], cfg)
+            c = cross_attention(apply_norm(h, blk["lnx"], cfg.norm),
+                                blk["xattn"], cfg, xk=xk, xv=xv, ctx=ctx)
+            h = h + jnp.tanh(blk["xgate"]).astype(h.dtype) * c
+            hh = apply_norm(h, blk["ln2"], cfg.norm)
+            h = h + mlp_apply(hh, blk["mlp"], cfg.act)
+            ck, cv, cp = fill_kv(k, v)
+            return h, (sc, {"k": ck, "v": cv, "pos": cp,
+                            "xk": xk, "xv": xv})
+
+        x, (self_c, cross_c) = jax.lax.scan(_remat(group, cfg), x,
+                                            params["groups"])
+        cache = {"self": self_c,
+                 "cross_self": {"k": cross_c["k"], "v": cross_c["v"],
+                                "pos": cross_c["pos"]},
+                 "cross_k": cross_c["xk"], "cross_v": cross_c["xv"]}
+    else:
+        def body(h, blk):
+            hn = apply_norm(h, blk["ln1"], cfg.norm)
+            q, k, v = qkv_proj(hn, blk["attn"], cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd)
+            if cfg.pos == "rope":
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+            a = sharded_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                  causal=True, window=cfg.attn_window,
+                                  chunk=cfg.attn_chunk, dtype=cfg.dtype,
+                                  ctx=ctx)
+            h = h + out_proj(a, blk["attn"])
+            hh = apply_norm(h, blk["ln2"], cfg.norm)
+            if cfg.moe is not None:
+                h = h + moe_apply(hh, blk["moe"], cfg.moe, ctx)
+            else:
+                h = h + mlp_apply(hh, blk["mlp"], cfg.act)
+            h = constrain(h, ctx, act_spec(ctx))
+            ck, cv, cp = fill_kv(k, v)
+            return h, {"k": ck, "v": cv, "pos": cp}
+
+        x, cache = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+
+    x = apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    return _unembed(params, x, cfg)[:, 0], cache

@@ -1,0 +1,335 @@
+"""xLSTM (Beck et al. 2024) — mLSTM (matrix memory) + sLSTM (scalar memory)
+blocks with stabilized exponential gating, arranged 7:1 (mLSTM:sLSTM) as in
+the published 1.3B config.  d_ff=0 per the assignment: blocks are
+self-contained (no separate FFN).
+
+State per layer (decode is O(1) in context length — this arch runs the
+long_500k cell):
+  mLSTM: C (B,H,dh,dh), n (B,H,dh), m (B,H)
+  sLSTM: c,n,h (B,H,dh), m (B,H)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import MeshCtx, ModelConfig
+from .layers import init_norm, rms_norm
+
+GROUP = 8          # 7 mLSTM + 1 sLSTM per group
+
+
+def _dense(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def init_mlstm(rng, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    s = 1.0 / math.sqrt(d)
+    ks = jax.random.split(rng, 7)
+    return {"ln": init_norm(d, "rms"),
+            "wq": _dense(ks[0], (d, d), s, cfg.dtype),
+            "wk": _dense(ks[1], (d, d), s, cfg.dtype),
+            "wv": _dense(ks[2], (d, d), s, cfg.dtype),
+            "wog": _dense(ks[3], (d, d), s, cfg.dtype),
+            "wif": _dense(ks[4], (d, 2 * H), s, jnp.float32),
+            "bif": jnp.concatenate([jnp.zeros((H,)), jnp.ones((H,)) * 3.0]
+                                   ).astype(jnp.float32),
+            "wout": _dense(ks[5], (d, d), s, cfg.dtype)}
+
+
+def init_slstm(rng, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    s = 1.0 / math.sqrt(d)
+    sr = 1.0 / math.sqrt(dh)
+    ks = jax.random.split(rng, 9)
+    return {"ln": init_norm(d, "rms"),
+            "wz": _dense(ks[0], (d, d), s, cfg.dtype),
+            "wi": _dense(ks[1], (d, H), s, jnp.float32),
+            "wf": _dense(ks[2], (d, H), s, jnp.float32),
+            "wo": _dense(ks[3], (d, d), s, cfg.dtype),
+            "rz": _dense(ks[4], (H, dh, dh), sr, cfg.dtype),
+            "ri": _dense(ks[5], (H, dh, 1), sr, jnp.float32),
+            "rf": _dense(ks[6], (H, dh, 1), sr, jnp.float32),
+            "bf": jnp.ones((H,), jnp.float32) * 3.0,
+            "wout": _dense(ks[7], (d, d), s, cfg.dtype)}
+
+
+def mlstm_state(cfg: ModelConfig, B: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {"C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+def slstm_state(cfg: ModelConfig, B: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = lambda: jnp.zeros((B, H, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+def _mlstm_step(state, q, k, v, ipre, fpre):
+    """One recurrence step. q/k/v: (B,H,dh); ipre/fpre: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    logf = -jax.nn.softplus(-fpre)                 # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, ipre)
+    i_g = jnp.exp(ipre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    C_new = f_g[..., None, None] * C + \
+        i_g[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    h = jnp.einsum("bhde,bhe->bhd", C_new, q) / denom[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_chunkwise(q, k, v, ipre, fpre, s0, *, chunk: int):
+    """Chunkwise-parallel mLSTM (beyond-paper perf: the sequential form
+    saves a (B,H,dh,dh) state per TOKEN for the backward pass — ~TB-scale
+    HBM traffic at T=4096; this form saves one state per CHUNK and turns
+    the intra-chunk work into MXU matmuls, mathematically equivalent to
+    the stabilized recurrence).
+
+    q/k/v: (B,T,H,dh) f32;  ipre/fpre: (B,T,H) f32;  s0: {C,n,m}.
+    Returns (h (B,T,H,dh), final state).
+    """
+    B, T, H, dh = q.shape
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+
+    def to_chunks(x):                      # (B,T,...) -> (nc, B, H, L, ...)
+        x = x.reshape(B, nc, L, *x.shape[2:])
+        if x.ndim == 5:                    # (B,nc,L,H,dh)
+            return x.transpose(1, 0, 3, 2, 4)
+        return x.transpose(1, 0, 3, 2)     # gates (B,nc,L,H)->(nc,B,H,L)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(ipre), to_chunks(fpre)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(s, xs):
+        qb, kb, vb, ib, fb = xs            # (B,H,L,dh) / (B,H,L)
+        C_in, n_in, m_in = s["C"], s["n"], s["m"]
+        logf = -jax.nn.softplus(-fb)       # log sigmoid(f)
+        F = jnp.cumsum(logf, axis=-1)      # (B,H,L) inclusive
+        g = ib - F
+        M = jnp.maximum(m_in[..., None],
+                        jax.lax.cummax(g, axis=2))       # (B,H,L)
+        inter_w = jnp.exp(m_in[..., None] - M)           # (B,H,L)
+        D = jnp.exp(g[..., None, :] - M[..., :, None])   # (B,H,L_q,L_s)
+        D = jnp.where(causal, D, 0.0)
+        scores = jnp.einsum("bhld,bhsd->bhls", qb, kb,
+                            preferred_element_type=jnp.float32)
+        intra = jnp.einsum("bhls,bhsd->bhld", scores * D, vb,
+                           preferred_element_type=jnp.float32)
+        h_num = inter_w[..., None] * jnp.einsum(
+            "bhde,bhle->bhld", C_in, qb,
+            preferred_element_type=jnp.float32) + intra
+        n_j = inter_w[..., None] * n_in[:, :, None, :] + \
+            jnp.einsum("bhls,bhsd->bhld", D, kb,
+                       preferred_element_type=jnp.float32)
+        m_j = F + M
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhld,bhld->bhl", qb.astype(jnp.float32),
+                               n_j)), jnp.exp(-m_j))
+        h = h_num / denom[..., None]
+        # ---- chunk-end state (one saved carry per chunk) ----------------
+        M_L = M[..., -1]
+        F_L = F[..., -1]
+        w = jnp.exp(g - M_L[..., None])                  # (B,H,L)
+        decay = jnp.exp(m_in - M_L)
+        C_out = decay[..., None, None] * C_in + \
+            jnp.einsum("bhs,bhsd,bhse->bhde", w, vb, kb,
+                       preferred_element_type=jnp.float32)
+        n_out = decay[..., None] * n_in + \
+            jnp.einsum("bhs,bhsd->bhd", w, kb,
+                       preferred_element_type=jnp.float32)
+        m_out = F_L + M_L
+        return {"C": C_out, "n": n_out, "m": m_out}, h
+
+    s_fin, hs = jax.lax.scan(body, s0, (qc, kc, vc, ic, fc))
+    # (nc,B,H,L,dh) -> (B,T,H,dh)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, dh)
+    return h, s_fin
+
+
+def mlstm_apply(x, p, cfg: ModelConfig, state=None, chunk: int = 128):
+    """x: (B,T,D) -> (B,T,D).  When state is given (decode, T==1) the
+    recurrence continues from it and the new state is returned.  T>1 uses
+    the chunkwise-parallel form (see mlstm_chunkwise)."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xn = rms_norm(x, p["ln"]["scale"])
+    # q/k/v/og stay in model dtype (bf16): the chunkwise matmuls accumulate
+    # in f32 (preferred_element_type) and only the gate math needs f32 —
+    # keeping (B,T,D)-sized tensors at 2 bytes halves the layer's HBM term
+    scale = 1.0 / math.sqrt(dh)
+    q = (xn @ p["wq"]).reshape(B, T, H, dh) * jnp.asarray(scale, cfg.dtype)
+    k = (xn @ p["wk"]).reshape(B, T, H, dh) * jnp.asarray(scale, cfg.dtype)
+    v = (xn @ p["wv"]).reshape(B, T, H, dh)
+    og = jax.nn.sigmoid((xn @ p["wog"]).astype(jnp.float32)).astype(cfg.dtype)
+    gates = (xn.astype(jnp.float32) @ p["wif"]) + p["bif"]
+    ipre, fpre = gates[..., :H], gates[..., H:]
+    s0 = state if state is not None else mlstm_state(cfg, B)
+
+    if T > 1 and T % min(chunk, T) == 0:
+        hq, s_fin = mlstm_chunkwise(q, k, v, ipre, fpre, s0,
+                                    chunk=min(chunk, T))
+        h = hq.reshape(B, T, D)
+    else:
+        def step(s, xs):
+            return _mlstm_step(s, *xs)
+
+        xs = (q.astype(jnp.float32).transpose(1, 0, 2, 3),
+              k.astype(jnp.float32).transpose(1, 0, 2, 3),
+              v.astype(jnp.float32).transpose(1, 0, 2, 3),
+              ipre.transpose(1, 0, 2), fpre.transpose(1, 0, 2))
+        s_fin, hs = jax.lax.scan(step, s0, xs)
+        h = hs.transpose(1, 0, 2, 3).reshape(B, T, D)
+    out = ((h.astype(cfg.dtype) * og.reshape(B, T, D))) @ p["wout"]
+    return out, s_fin
+
+
+def slstm_apply(x, p, cfg: ModelConfig, state=None):
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xn = rms_norm(x, p["ln"]["scale"])
+    z_in = (xn @ p["wz"]).reshape(B, T, H, dh).astype(jnp.float32)
+    o_in = (xn @ p["wo"]).reshape(B, T, H, dh).astype(jnp.float32)
+    i_in = (xn.astype(jnp.float32) @ p["wi"])
+    f_in = (xn.astype(jnp.float32) @ p["wf"]) + p["bf"]
+    s0 = state if state is not None else slstm_state(cfg, B)
+    rz = p["rz"].astype(jnp.float32)
+    ri, rf = p["ri"][..., 0], p["rf"][..., 0]
+
+    def step(s, xs):
+        zt, ot, it, ft = xs
+        h_prev = s["h"]
+        z = jnp.tanh(zt + jnp.einsum("bhd,hde->bhe", h_prev, rz))
+        ipre = it + jnp.einsum("bhd,hd->bh", h_prev, ri)
+        fpre = ft + jnp.einsum("bhd,hd->bh", h_prev, rf)
+        logf = -jax.nn.softplus(-fpre)
+        m_new = jnp.maximum(logf + s["m"], ipre)
+        i_g = jnp.exp(ipre - m_new)[..., None]
+        f_g = jnp.exp(logf + s["m"] - m_new)[..., None]
+        c = f_g * s["c"] + i_g * z
+        n = f_g * s["n"] + i_g
+        h = jax.nn.sigmoid(ot) * (c / jnp.maximum(n, 1e-6))
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    xs = (z_in.transpose(1, 0, 2, 3), o_in.transpose(1, 0, 2, 3),
+          i_in.transpose(1, 0, 2), f_in.transpose(1, 0, 2))
+    s_fin, hs = jax.lax.scan(step, s0, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, D)
+    return (h.astype(cfg.dtype) @ p["wout"]), s_fin
+
+
+# ------------------------------------------------------------- full model
+def init_xlstm(cfg: ModelConfig, rng):
+    assert cfg.n_layers % GROUP == 0
+    G = cfg.n_layers // GROUP
+    ks = jax.random.split(rng, 4)
+    d, V = cfg.d_model, cfg.vocab
+    return {
+        "embed": _dense(ks[0], (V, d), 1.0 / math.sqrt(d), cfg.dtype),
+        "groups": {
+            "m": jax.vmap(lambda r: jax.vmap(
+                lambda r2: init_mlstm(r2, cfg))(jax.random.split(r, GROUP - 1))
+            )(jax.random.split(ks[1], G)),
+            "s": jax.vmap(lambda r: init_slstm(r, cfg))(
+                jax.random.split(ks[2], G)),
+        },
+        "final_norm": init_norm(d, "rms"),
+        "head": _dense(ks[3], (d, V), 1.0 / math.sqrt(d), cfg.dtype),
+    }
+
+
+def xlstm_states(cfg: ModelConfig, B: int):
+    G = cfg.n_layers // GROUP
+
+    def stack(n, mk):
+        one = mk(cfg, B)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    return {"m": jax.tree.map(lambda a: jnp.broadcast_to(
+                a, (G,) + a.shape), stack(GROUP - 1, mlstm_state)),
+            "s": stack(G, slstm_state)}
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn)
+
+
+def xlstm_forward(params, batch, cfg: ModelConfig, ctx: MeshCtx | None):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def group(h, g):
+        def inner(h2, blk):
+            out, _ = mlstm_apply(h2, blk, cfg)
+            return h2 + out, None
+        h, _ = jax.lax.scan(inner, h, g["m"])
+        out, _ = slstm_apply(h, g["s"], cfg)
+        return h + out, None
+
+    x, _ = jax.lax.scan(_remat(group, cfg), x, params["groups"])
+    x = rms_norm(x, params["final_norm"]["scale"])
+    return (x @ params["head"]).astype(jnp.float32)
+
+
+def xlstm_loss(params, batch, cfg, ctx):
+    logits = xlstm_forward(params, batch, cfg, ctx)
+    t = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def xlstm_prefill(params, batch, cfg: ModelConfig, ctx):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def group(h, g):
+        def inner(h2, blk):
+            out, s = mlstm_apply(h2, blk, cfg)
+            return h2 + out, s
+        h, ms = jax.lax.scan(inner, h, g["m"])
+        out, ss = slstm_apply(h, g["s"], cfg)
+        return h + out, {"m": ms, "s": ss}
+
+    x, states = jax.lax.scan(_remat(group, cfg), x, params["groups"])
+    x = rms_norm(x[:, -1:], params["final_norm"]["scale"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits[:, 0], states
+
+
+def xlstm_decode_step(params, state, token, pos, cfg: ModelConfig, ctx):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def group(h, xs):
+        g, st = xs
+
+        def inner(h2, xs2):
+            blk, s = xs2
+            out, ns = mlstm_apply(h2, blk, cfg, state=s)
+            return h2 + out, ns
+        h, nms = jax.lax.scan(inner, h, (g["m"], st["m"]))
+        out, nss = slstm_apply(h, g["s"], cfg, state=st["s"])
+        return h + out, {"m": nms, "s": nss}
+
+    x, new_state = jax.lax.scan(group, x, (params["groups"], state))
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits[:, 0], new_state

@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWState, apply_updates
+
+__all__ = ["AdamW", "AdamWState", "apply_updates"]

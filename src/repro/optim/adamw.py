@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay, f32 moments over (possibly bf16)
+params, global-norm clipping, and linear-warmup/cosine schedules.  Pure
+pytree-functional (optax-style update/init pair) so opt-state sharding is
+fully controlled by the caller (ZeRO-1 in parallel/sharding.py)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        prog = jnp.clip((step - self.warmup_steps) /
+                        max(1, self.total_steps - self.warmup_steps), 0, 1)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * cos
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9)) \
+            if self.clip_norm else 1.0
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        lr = self.schedule(step)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, g32)
+
+        def upd(p, mm, vv):
+            mh = mm / bc1
+            vh = vv / bc2
+            u = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:                       # decay matrices only
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamWState(step=step, m=m, v=v), \
+            {"gnorm": gnorm, "lr": lr}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

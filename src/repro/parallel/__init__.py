@@ -1,0 +1,7 @@
+from .sharding import (MODEL_AXIS, batch_axes_for, batch_spec_tree,
+                       cache_spec_tree, make_ctx, named, param_spec_tree,
+                       zero_spec, zero_spec_tree)
+
+__all__ = ["MODEL_AXIS", "batch_axes_for", "batch_spec_tree",
+           "cache_spec_tree", "make_ctx", "named", "param_spec_tree",
+           "zero_spec", "zero_spec_tree"]

@@ -1,0 +1,178 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for the production
+meshes, derived from param-tree paths (see layout conventions in
+models/layers.py).
+
+TP strategy (baseline): megatron-style column/row parallel on the flat
+projection axes — the flat axis (H*hd, F, V, R, …) is always divisible by
+the 16-way model axis for the assigned archs, even when the head count is
+not; GSPMD resolves the (H*hd)->(H,hd) reshape, which is exactly the kind of
+layout decision the roofline analysis surfaces (and the perf loop tunes).
+EP: MoE expert tensors are sharded on the expert axis over 'model'.
+DP: batch over ('pod','data') when divisible.  ZeRO-1: optimizer moments are
+additionally sharded over 'data' (see zero_spec).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import MeshCtx, ModelConfig
+
+MODEL_AXIS = "model"
+# keys whose -2 axis (contracting / vocab-in) is model-sharded (row-parallel)
+_ROW_KEYS = {"wo", "wout", "w_out", "wd", "embed"}
+# keys never sharded.  rz: the sLSTM per-head recurrence matrix is 4 MB and
+# is consumed every token inside the sequential scan — sharding it forced a
+# per-step replicate+repartition (SPMD 'involuntary full rematerialization')
+_REPL_KEYS = {"scale", "bias", "ln", "xgate", "router", "lam", "bif", "bf",
+              "conv_b", "ri", "rf", "rz"}
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _leaf_key(path) -> str:
+    return str(getattr(path[-1], "key", ""))
+
+
+def param_spec_tree(param_shapes, mesh: Mesh):
+    """PartitionSpec for every param leaf, by path rules + divisibility."""
+    tp = mesh.shape.get(MODEL_AXIS, 1)
+
+    def rule(path, leaf):
+        key = _leaf_key(path)
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        none = (None,) * nd
+        if key in _REPL_KEYS or nd == 0:
+            return P(*none)
+        if "moe" in pstr and key in ("wg", "wu", "wd") and nd >= 3:
+            ax = nd - 3                      # expert axis of (.., E, D, F)
+            if shape[ax] % tp != 0:
+                return P(*none)
+            parts = list(none)
+            parts[ax] = MODEL_AXIS
+            # ZeRO-3 expert storage: per-expert FFN axis over 'data'
+            # (matches moe_apply's in_specs; gathered per layer on use)
+            dp = mesh.shape.get("data", 1)
+            f_ax = nd - 1 if key in ("wg", "wu") else nd - 2
+            if dp > 1 and shape[f_ax] % dp == 0:
+                parts[f_ax] = "data"
+            return P(*parts)
+        if key in _ROW_KEYS and nd >= 2:
+            ax = nd - 2
+            if shape[ax] % tp == 0:
+                return P(*none[:ax], MODEL_AXIS, *none[ax + 1:])
+            return P(*none)
+        # default: column-parallel on the last axis
+        if shape[-1] % tp == 0 and shape[-1] >= tp:
+            return P(*none[:-1], MODEL_AXIS)
+        return P(*none)
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def batch_axes_for(mesh: Mesh, batch: int) -> tuple:
+    """Largest prefix of (pod, data) that divides the global batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    chosen = []
+    size = 1
+    for a in axes:
+        if batch % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    return tuple(chosen)
+
+
+def make_ctx(mesh: Mesh | None, batch: int) -> MeshCtx:
+    if mesh is None:
+        return MeshCtx()
+    return MeshCtx(mesh=mesh, batch_axes=batch_axes_for(mesh, batch),
+                   model_axis=MODEL_AXIS if MODEL_AXIS in mesh.shape else None)
+
+
+def batch_spec_tree(batch_shapes, ctx: MeshCtx):
+    b = ctx.batch_axes if ctx.batch_axes else None
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        return P(b, *(None,) * (nd - 1))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_spec_tree(cache_shapes, ctx: MeshCtx, mesh: Mesh):
+    """KV caches: batch over DP axes; the S axis over 'model' when divisible
+    (sequence-sharded decode attention — see layers.decode_attention); SSM
+    states: last axis over 'model' when divisible."""
+    tp = mesh.shape.get(MODEL_AXIS, 1)
+    b = ctx.batch_axes if ctx.batch_axes else None
+
+    def rule(path, leaf):
+        key = _leaf_key(path)
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        none = [None] * nd
+        if key in ("k", "v", "pos") and "cross" not in pstr.split("/")[-1]:
+            # (.., B, S, Hkv, hd) or (.., B, S): locate B as the axis before S
+            s_ax = nd - 3 if key != "pos" else nd - 1
+            b_ax = s_ax - 1
+            none[b_ax] = b
+            if shape[s_ax] % tp == 0:
+                none[s_ax] = MODEL_AXIS
+            return P(*none)
+        if key in ("cross_k", "cross_v"):
+            none[nd - 4] = b                 # (.., B, S_enc, Hkv, hd)
+            return P(*none)
+        # ssm states.  mLSTM C (.., d, e) is contracted over e (h = C q):
+        # shard the OUTPUT axis d (-2) so per-step reads need no psum /
+        # resharding (sharding e forced a collective per recurrence step).
+        if key == "C" and nd >= 2:
+            if shape[-2] % tp == 0 and shape[-2] >= tp:
+                none[-2] = MODEL_AXIS
+            return P(*none)
+        if key in ("n", "m", "c", "h", "tail"):
+            if shape[-1] % tp == 0 and nd >= 2 and shape[-1] >= tp:
+                none[-1] = MODEL_AXIS
+            return P(*none)
+        return P(*none)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def named(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_spec(spec: P, shape, mesh: Mesh, axis: str = "data") -> P:
+    """ZeRO-1: additionally shard optimizer moments over the DP axis, on the
+    largest not-yet-sharded tensor axis that divides."""
+    if axis not in mesh.shape:
+        return spec
+    dp = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if axis in parts:
+        return spec          # already sharded over this axis (ZeRO-3 experts)
+    best, best_ax = 0, -1
+    for i, (s, cur) in enumerate(zip(shape, parts)):
+        if cur is None and s % dp == 0 and s > best:
+            best, best_ax = s, i
+    if best_ax < 0:
+        return spec
+    parts[best_ax] = axis
+    return P(*parts)
+
+
+def zero_spec_tree(spec_tree, shape_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda sp, sh: zero_spec(sp, sh.shape, mesh), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,266 @@
+"""Serving engine: continuous batching over the paged (BTT-style) KV cache.
+
+The engine runs dense/GQA decoder LMs (the transformer family) with the
+paged decode path: per layer, the new token's K/V are appended to the
+sequence's pages (block-table write = the lba->pba map update) and decode
+attention gathers pages through the table (the Pallas kernel on TPU,
+interpret/ref on CPU).
+
+Scheduling follows the paper's transit discipline:
+  * finished / preempted sequences are *eagerly* packed to the host tier
+    (``deactivate``) so the HBM pool stays near-empty, exactly like Caiti's
+    WBQ drain;
+  * when admission would overflow the pool anyway, the new sequence's pages
+    *bypass* to the host tier rather than stall a running decode;
+  * a step "fsync" (``barrier``) completes all migrations before the batch
+    shape changes.
+
+This is the host-driven reference engine (layer loop in Python, pools as
+per-layer arrays) — shaped for the CPU container and for tests; the mesh
+path for bulk decode lowers ``lm_decode_step`` with the dense ring cache
+(see launch/dryrun.py decode cells).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import Metrics
+from repro.models.common import ModelConfig
+from repro.models.layers import apply_norm, rope
+from .kvcache import PagedCacheConfig, PagedKVCache
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: list[int] = field(default_factory=list)
+    seq_id: int = -1
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+def _layer_params(params, i: int):
+    return jax.tree.map(lambda a: a[i], params["blocks"])
+
+
+class PagedLM:
+    """Paged decode path for the dense transformer family."""
+
+    def __init__(self, cfg: ModelConfig, params, cache: PagedKVCache,
+                 use_kernel: bool = True) -> None:
+        assert cfg.family == "dense", "paged engine serves dense LMs"
+        self.cfg = cfg
+        self.params = params
+        self.cache = cache
+        self.use_kernel = use_kernel
+
+    def prefill(self, tokens: np.ndarray, sid: int) -> jnp.ndarray:
+        """Run the prompt through the model, append K/V pages, return the
+        last-token logits. tokens: (T,) one sequence."""
+        cfg, p = self.cfg, self.params
+        T = len(tokens)
+        tok = jnp.asarray(tokens, jnp.int32)[None]
+        x = jnp.take(p["embed"], tok, axis=0)
+        positions = jnp.arange(T, dtype=jnp.int32)[None]
+        kv_per_layer = []
+        for li in range(cfg.n_layers):
+            blk = _layer_params(p, li)
+            xn = apply_norm(x, blk["ln1"], cfg.norm)
+            q = (xn @ blk["attn"]["wq"]).reshape(1, T, cfg.n_heads, cfg.hd)
+            k = (xn @ blk["attn"]["wk"]).reshape(1, T, cfg.n_kv_heads, cfg.hd)
+            v = (xn @ blk["attn"]["wv"]).reshape(1, T, cfg.n_kv_heads, cfg.hd)
+            if "bq" in blk["attn"]:
+                q = q + blk["attn"]["bq"].reshape(1, 1, cfg.n_heads, cfg.hd)
+                k = k + blk["attn"]["bk"].reshape(1, 1, cfg.n_kv_heads, cfg.hd)
+                v = v + blk["attn"]["bv"].reshape(1, 1, cfg.n_kv_heads, cfg.hd)
+            if cfg.pos == "rope":
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+            # dense causal attention for the prompt (prefill is compute-bound;
+            # pages are written below for the decode phase)
+            from repro.kernels.ref import flash_attention_ref
+            a = flash_attention_ref(q, k, v, causal=True,
+                                    window=cfg.attn_window)
+            x = x + a.reshape(1, T, -1) @ blk["attn"]["wo"]
+            h = apply_norm(x, blk["ln2"], cfg.norm)
+            from repro.models.layers import mlp_apply
+            x = x + mlp_apply(h, blk["mlp"], cfg.act)
+            kv_per_layer.append((k[0], v[0]))            # (T, Hkv, hd)
+        # append pages token-by-token (bulk write path)
+        for t in range(T):
+            self.cache.append_token(
+                sid,
+                [kv_per_layer[li][0][t] for li in range(cfg.n_layers)],
+                [kv_per_layer[li][1][t] for li in range(cfg.n_layers)])
+        x = apply_norm(x[:, -1:], p["final_norm"], cfg.norm)
+        w = p["embed"].T if cfg.tie_embeddings else p["head"]
+        return (x @ w).astype(jnp.float32)[0, 0]
+
+    def decode_step(self, tokens: np.ndarray, sids: list[int],
+                    positions: np.ndarray) -> jnp.ndarray:
+        """One token for each running sequence. tokens: (B,), returns
+        (B, V) logits."""
+        cfg, p = self.cfg, self.params
+        B = len(tokens)
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        pos = jnp.asarray(positions, jnp.int32)[:, None]
+        x = jnp.take(p["embed"], tok, axis=0)            # (B, 1, D)
+        new_kv = [[None] * cfg.n_layers for _ in range(B)]
+        for li in range(cfg.n_layers):
+            blk = _layer_params(p, li)
+            xn = apply_norm(x, blk["ln1"], cfg.norm)
+            q = (xn @ blk["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+            k = (xn @ blk["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+            v = (xn @ blk["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+            if "bq" in blk["attn"]:
+                q = q + blk["attn"]["bq"].reshape(1, 1, cfg.n_heads, cfg.hd)
+                k = k + blk["attn"]["bk"].reshape(1, 1, cfg.n_kv_heads, cfg.hd)
+                v = v + blk["attn"]["bv"].reshape(1, 1, cfg.n_kv_heads, cfg.hd)
+            if cfg.pos == "rope":
+                q = rope(q, pos, cfg.rope_theta)
+                k = rope(k, pos, cfg.rope_theta)
+            for bi in range(B):
+                new_kv[bi][li] = (k[bi, 0], v[bi, 0])
+            # append THIS layer's kv before attending (token attends to self)
+            if li == 0:
+                for bi, sid in enumerate(sids):
+                    self.cache.append_token(
+                        sid, [new_kv[bi][L][0] if new_kv[bi][L] else
+                              jnp.zeros((cfg.n_kv_heads, cfg.hd), cfg.dtype)
+                              for L in range(cfg.n_layers)],
+                        [new_kv[bi][L][1] if new_kv[bi][L] else
+                         jnp.zeros((cfg.n_kv_heads, cfg.hd), cfg.dtype)
+                         for L in range(cfg.n_layers)])
+            else:
+                # layers >0: write into the already-appended slot
+                for bi, sid in enumerate(sids):
+                    self._overwrite_token(sid, li, new_kv[bi][li])
+            a = self.cache.attention(li, q[:, 0], sids,
+                                     use_kernel=self.use_kernel)
+            x = x + a.reshape(B, 1, -1) @ blk["attn"]["wo"]
+            h = apply_norm(x, blk["ln2"], cfg.norm)
+            from repro.models.layers import mlp_apply
+            x = x + mlp_apply(h, blk["mlp"], cfg.act)
+        x = apply_norm(x, p["final_norm"], cfg.norm)
+        w = p["embed"].T if cfg.tie_embeddings else p["head"]
+        return (x @ w).astype(jnp.float32)[:, 0]
+
+    def _overwrite_token(self, sid: int, layer: int, kv) -> None:
+        seq = self.cache.seqs[sid]
+        pgsz = self.cache.cfg.page_size
+        tpos = seq.length - 1
+        entry = seq.table[tpos // pgsz]
+        off = tpos % pgsz
+        k_t, v_t = kv
+        if entry[0] == "hbm":
+            page = entry[1]
+            self.cache.k_pool[layer] = self.cache.k_pool[layer].at[
+                page, off].set(k_t.astype(self.cache.cfg.dtype))
+            self.cache.v_pool[layer] = self.cache.v_pool[layer].at[
+                page, off].set(v_t.astype(self.cache.cfg.dtype))
+        else:
+            entry[1]["k"][layer][off] = np.asarray(k_t, np.float32)
+            entry[1]["v"][layer][off] = np.asarray(v_t, np.float32)
+
+
+class ServeEngine:
+    """Continuous-batching front end."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 cache_cfg: PagedCacheConfig | None = None,
+                 max_batch: int = 8, eos_token: int = -1,
+                 use_kernel: bool = False, rng_seed: int = 0) -> None:
+        self.cfg = cfg
+        self.metrics = Metrics()
+        self.cache = PagedKVCache(cache_cfg or PagedCacheConfig(
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd), metrics=self.metrics)
+        self.lm = PagedLM(cfg, params, self.cache, use_kernel=use_kernel)
+        self.max_batch = max_batch
+        self.eos = eos_token
+        self.queue: list[Request] = []
+        self.running: list[Request] = []
+        self.finished: list[Request] = []
+        self._rng = np.random.default_rng(rng_seed)
+        self._next_id = 0
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               temperature: float = 0.0) -> Request:
+        req = Request(self._next_id, list(prompt), max_new_tokens,
+                      temperature, t_submit=time.perf_counter())
+        self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    # ----------------------------------------------------------- scheduling
+    def _admit(self) -> None:
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue.pop(0)
+            req.seq_id = self.cache.new_sequence()
+            logits = self.lm.prefill(np.asarray(req.prompt, np.int32),
+                                     req.seq_id)
+            tok = self._sample(logits[None], [req])[0]
+            req.out_tokens.append(int(tok))
+            req.t_first = time.perf_counter()
+            self.running.append(req)
+
+    def _sample(self, logits, reqs) -> np.ndarray:
+        out = np.zeros((len(reqs),), np.int64)
+        logits = np.asarray(logits)
+        for i, req in enumerate(reqs):
+            if req.temperature <= 0:
+                out[i] = int(np.argmax(logits[i]))
+            else:
+                z = logits[i] / req.temperature
+                z = z - z.max()
+                prob = np.exp(z) / np.exp(z).sum()
+                out[i] = int(self._rng.choice(len(prob), p=prob))
+        return out
+
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.cache.deactivate(req.seq_id)     # eager transit to host tier
+        self.cache.release(req.seq_id)
+        self.finished.append(req)
+
+    def step(self) -> int:
+        """One scheduler tick: admit, decode one token for every runner."""
+        self._admit()
+        if not self.running:
+            return 0
+        reqs = self.running
+        tokens = np.asarray([r.out_tokens[-1] for r in reqs], np.int64)
+        positions = np.asarray([len(r.prompt) + len(r.out_tokens) - 1
+                                for r in reqs], np.int64)
+        logits = self.lm.decode_step(tokens, [r.seq_id for r in reqs],
+                                     positions)
+        nxt = self._sample(logits, reqs)
+        still = []
+        for req, tok in zip(reqs, nxt):
+            req.out_tokens.append(int(tok))
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or tok == self.eos):
+                self._retire(req)
+            else:
+                still.append(req)
+        self.running = still
+        return len(reqs)
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or self.running) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

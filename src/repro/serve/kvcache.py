@@ -1,0 +1,323 @@
+"""Paged KV cache — BTT + Caiti re-expressed for the HBM/host tier pair.
+
+Mapping of the paper's structures:
+
+  BTT map (lba -> pba)        -> per-sequence block table (logical page ->
+                                 physical page in the HBM pool)
+  BTT lanes / free blocks     -> the pool's free list (CAS-style pops)
+  DRAM transit cache          -> the HBM pool itself is the *fast* tier;
+                                 the host tier (int8-packed) is the slow one
+  eager eviction              -> cold sequences' pages are packed
+                                 (gather_quantize) to the host tier as soon
+                                 as the sequence stops decoding
+  conditional bypass          -> a page allocation against a full pool goes
+                                 straight to the host tier (no stall evicting
+                                 someone else's hot page on the decode path)
+  fsync / PREFLUSH            -> ``barrier()``: complete all pending
+                                 migrations (used before pool reshape)
+
+The pool arrays live per layer: (P, page_size, Hkv, hd).  On TPU the decode
+attention resolves the table inside the Pallas kernel; on the CPU container
+the interpret-mode kernel (or the jnp ref) does the same resolution.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import Metrics
+from repro.kernels import ref as kref
+from repro.kernels.ops import gather_quantize, paged_attention, \
+    scatter_dequantize
+
+
+@dataclass
+class PagedCacheConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    page_size: int = 16
+    n_pages: int = 256            # HBM pool pages (per layer)
+    host_pages: int = 1024        # host-tier capacity (per layer)
+    max_pages_per_seq: int = 64
+    dtype: object = jnp.bfloat16
+    eager_eviction: bool = True
+    conditional_bypass: bool = True
+
+
+class HostTier:
+    """The slow tier: int8-packed pages + scales, keyed (layer, handle)."""
+
+    def __init__(self) -> None:
+        self.pages: dict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = {}
+        self._next = 0
+
+    def put(self, layer: int, q: np.ndarray, scale: np.ndarray) -> int:
+        h = self._next
+        self._next += 1
+        self.pages[(layer, h)] = (q, scale)
+        return h
+
+    def get(self, layer: int, handle: int):
+        return self.pages[(layer, handle)]
+
+    def pop(self, layer: int, handle: int):
+        return self.pages.pop((layer, handle))
+
+    def __len__(self) -> int:
+        return len(self.pages)
+
+
+@dataclass
+class Sequence:
+    seq_id: int
+    length: int = 0
+    # logical page -> ("hbm", phys_page) | ("host", (k_handle, v_handle))
+    table: list = field(default_factory=list)
+    active: bool = True
+
+
+class PagedKVCache:
+    """Host-side manager + on-device pools for one model's KV state."""
+
+    def __init__(self, cfg: PagedCacheConfig,
+                 metrics: Metrics | None = None) -> None:
+        self.cfg = cfg
+        self.metrics = metrics or Metrics()
+        L, P, pg, H, hd = (cfg.n_layers, cfg.n_pages, cfg.page_size,
+                          cfg.n_kv_heads, cfg.head_dim)
+        self.k_pool = [jnp.zeros((P, pg, H, hd), cfg.dtype) for _ in range(L)]
+        self.v_pool = [jnp.zeros((P, pg, H, hd), cfg.dtype) for _ in range(L)]
+        self._free: list[int] = list(range(P))          # global free set
+        self.host = HostTier()
+        self.seqs: dict[int, Sequence] = {}
+        self._next_seq = 0
+
+    # ------------------------------------------------------------ allocation
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def new_sequence(self) -> int:
+        sid = self._next_seq
+        self._next_seq += 1
+        self.seqs[sid] = Sequence(sid)
+        return sid
+
+    def _alloc_page(self) -> int | None:
+        if self._free:
+            return self._free.pop()                      # CAS-style pop
+        return None
+
+    def _evict_coldest(self) -> bool:
+        """Sync eviction (the staging fallback): pack the coldest inactive
+        sequence's first HBM page to the host tier."""
+        for seq in self.seqs.values():
+            if seq.active:
+                continue
+            for li, entry in enumerate(seq.table):
+                if entry[0] == "hbm":
+                    self._page_out(seq, li)
+                    return True
+        return False
+
+    # -------------------------------------------------------------- write path
+    def append_token(self, sid: int, k_token, v_token) -> None:
+        """k/v_token: per-layer list of (Hkv, hd) arrays for ONE new token."""
+        seq = self.seqs[sid]
+        pg = self.cfg.page_size
+        off = seq.length % pg
+        if off == 0:                                     # need a fresh page
+            page = self._alloc_page()
+            if page is None:
+                if self.cfg.conditional_bypass:
+                    # pool full -> the new page lives in the host tier
+                    self.metrics.bump("bypass_pages")
+                    seq.table.append(("host-fresh",
+                                      self._host_fresh_page()))
+                else:
+                    with self.metrics.timer("cache_eviction_and_write"):
+                        if not self._evict_coldest():
+                            raise MemoryError("KV pool exhausted")
+                    page = self._alloc_page()
+                    seq.table.append(("hbm", page))
+            else:
+                seq.table.append(("hbm", page))
+        entry = seq.table[seq.length // pg]
+        if entry[0] == "hbm":
+            page = entry[1]
+            for li in range(self.cfg.n_layers):
+                self.k_pool[li] = self.k_pool[li].at[page, off].set(
+                    k_token[li].astype(self.cfg.dtype))
+                self.v_pool[li] = self.v_pool[li].at[page, off].set(
+                    v_token[li].astype(self.cfg.dtype))
+        else:                                            # host-resident page
+            buf = entry[1]
+            for li in range(self.cfg.n_layers):
+                buf["k"][li][off] = np.asarray(k_token[li], np.float32)
+                buf["v"][li][off] = np.asarray(v_token[li], np.float32)
+        seq.length += 1
+
+    def _host_fresh_page(self) -> dict:
+        L, pg, H, hd = (self.cfg.n_layers, self.cfg.page_size,
+                        self.cfg.n_kv_heads, self.cfg.head_dim)
+        return {"k": np.zeros((L, pg, H, hd), np.float32),
+                "v": np.zeros((L, pg, H, hd), np.float32)}
+
+    # ----------------------------------------------------------- transit ops
+    def _page_out(self, seq: Sequence, logical: int) -> None:
+        """Transit one HBM page to the host tier (int8-packed)."""
+        kind, page = seq.table[logical]
+        assert kind == "hbm"
+        handles = []
+        ids = jnp.array([page], jnp.int32)
+        for li in range(self.cfg.n_layers):
+            pool_k = self.k_pool[li].reshape(self.cfg.n_pages,
+                                             self.cfg.page_size, -1)
+            pool_v = self.v_pool[li].reshape(self.cfg.n_pages,
+                                             self.cfg.page_size, -1)
+            qk, sk = gather_quantize(pool_k, ids)
+            qv, sv = gather_quantize(pool_v, ids)
+            hk = self.host.put(li, np.asarray(qk[0]), np.asarray(sk[0]))
+            hv = self.host.put(li, np.asarray(qv[0]), np.asarray(sv[0]))
+            handles.append((hk, hv))
+        seq.table[logical] = ("host", handles)
+        self._free.append(page)
+        self.metrics.bump("pages_out")
+
+    def _page_in(self, seq: Sequence, logical: int) -> bool:
+        """Bring a host page back into the pool (dequantize+scatter)."""
+        kind, payload = seq.table[logical]
+        page = self._alloc_page()
+        if page is None:
+            return False
+        pg, H, hd = self.cfg.page_size, self.cfg.n_kv_heads, self.cfg.head_dim
+        if kind == "host":
+            ids = jnp.array([page], jnp.int32)
+            for li, (hk, hv) in enumerate(payload):
+                qk, sk = self.host.pop(li, hk)
+                qv, sv = self.host.pop(li, hv)
+                pool_k = self.k_pool[li].reshape(self.cfg.n_pages, pg, -1)
+                pool_v = self.v_pool[li].reshape(self.cfg.n_pages, pg, -1)
+                pool_k = scatter_dequantize(pool_k, ids, jnp.asarray(qk)[None],
+                                            jnp.asarray(sk)[None])
+                pool_v = scatter_dequantize(pool_v, ids, jnp.asarray(qv)[None],
+                                            jnp.asarray(sv)[None])
+                self.k_pool[li] = pool_k.reshape(self.cfg.n_pages, pg, H, hd)
+                self.v_pool[li] = pool_v.reshape(self.cfg.n_pages, pg, H, hd)
+        else:                                            # host-fresh (raw f32)
+            for li in range(self.cfg.n_layers):
+                self.k_pool[li] = self.k_pool[li].at[page].set(
+                    jnp.asarray(payload["k"][li], self.cfg.dtype))
+                self.v_pool[li] = self.v_pool[li].at[page].set(
+                    jnp.asarray(payload["v"][li], self.cfg.dtype))
+        seq.table[logical] = ("hbm", page)
+        self.metrics.bump("pages_in")
+        return True
+
+    def deactivate(self, sid: int) -> None:
+        """Sequence paused/finished: eagerly transit its pages out."""
+        seq = self.seqs[sid]
+        seq.active = False
+        if self.cfg.eager_eviction:
+            for li, entry in enumerate(seq.table):
+                if entry[0] == "hbm":
+                    self._page_out(seq, li)
+
+    def activate(self, sid: int) -> None:
+        """Resume a sequence: page everything back in (may bypass)."""
+        seq = self.seqs[sid]
+        seq.active = True
+        for li, entry in enumerate(seq.table):
+            if entry[0] in ("host", "host-fresh"):
+                if not self._page_in(seq, li):
+                    self.metrics.bump("activate_stalls")
+                    return                                # partial: retry later
+
+    def release(self, sid: int) -> None:
+        seq = self.seqs.pop(sid)
+        for entry in seq.table:
+            if entry[0] == "hbm":
+                self._free.append(entry[1])
+            elif entry[0] == "host":
+                for li, (hk, hv) in enumerate(entry[1]):
+                    self.host.pop(li, hk)
+                    self.host.pop(li, hv)
+
+    # -------------------------------------------------------------- attention
+    def table_for(self, sids: list[int]) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Dense (B, max_pages) physical table + (B,) lengths for attention.
+        Sequences must be fully HBM-resident (activate() first)."""
+        mp = self.cfg.max_pages_per_seq
+        table = np.zeros((len(sids), mp), np.int32)
+        lens = np.zeros((len(sids),), np.int32)
+        for bi, sid in enumerate(sids):
+            seq = self.seqs[sid]
+            lens[bi] = seq.length
+            for li, entry in enumerate(seq.table):
+                assert entry[0] == "hbm", f"page {li} of seq {sid} not resident"
+                table[bi, li] = entry[1]
+        return jnp.asarray(table), jnp.asarray(lens)
+
+    def _page_kv(self, layer: int, entry) -> tuple[np.ndarray, np.ndarray]:
+        """One logical page's (page_size, Hkv, hd) k/v from whichever tier
+        holds it (the transit read path: cache hit OR backend read)."""
+        pg, H, hd = self.cfg.page_size, self.cfg.n_kv_heads, self.cfg.head_dim
+        if entry[0] == "hbm":
+            return (np.asarray(self.k_pool[layer][entry[1]], np.float32),
+                    np.asarray(self.v_pool[layer][entry[1]], np.float32))
+        if entry[0] == "host":
+            hk, hv = entry[1][layer]
+            qk, sk = self.host.get(layer, hk)
+            qv, sv = self.host.get(layer, hv)
+            k = (qk.astype(np.float32) * sk[:, None]).reshape(pg, H, hd)
+            v = (qv.astype(np.float32) * sv[:, None]).reshape(pg, H, hd)
+            return k, v
+        return (entry[1]["k"][layer].astype(np.float32),
+                entry[1]["v"][layer].astype(np.float32))   # host-fresh
+
+    def attention(self, layer: int, q, sids: list[int], *,
+                  use_kernel: bool = True):
+        """q: (B, H, hd) one decode step for the given sequences.
+
+        Fast path: every page HBM-resident -> block-table kernel (lba->pba
+        walk fused in).  Slow path (pages bypassed to the host tier under
+        pool pressure): materialize each sequence's KV from both tiers —
+        decode keeps running instead of stalling on page-in, the serving
+        analogue of Caiti's conditional bypass."""
+        resident = all(e[0] == "hbm" for sid in sids
+                       for e in self.seqs[sid].table)
+        if resident:
+            table, lens = self.table_for(sids)
+            if use_kernel:
+                return paged_attention(q, self.k_pool[layer],
+                                       self.v_pool[layer], table, lens)
+            return kref.paged_attention_ref(q, self.k_pool[layer],
+                                            self.v_pool[layer], table, lens)
+        self.metrics.bump("hybrid_attention")
+        pg, H, hd = self.cfg.page_size, self.cfg.n_kv_heads, self.cfg.head_dim
+        B = len(sids)
+        S = max(len(self.seqs[s].table) for s in sids) * pg
+        k = np.zeros((B, S, H, hd), np.float32)
+        v = np.zeros((B, S, H, hd), np.float32)
+        lens = np.zeros((B,), np.int32)
+        for bi, sid in enumerate(sids):
+            seq = self.seqs[sid]
+            lens[bi] = seq.length
+            for li, entry in enumerate(seq.table):
+                pk, pv = self._page_kv(layer, entry)
+                k[bi, li * pg:(li + 1) * pg] = pk
+                v[bi, li * pg:(li + 1) * pg] = pv
+        # single-"page" ref attention over the materialized view
+        kpool = jnp.asarray(k).reshape(B * 1, S, H, hd)
+        vpool = jnp.asarray(v).reshape(B * 1, S, H, hd)
+        table = jnp.arange(B, dtype=jnp.int32)[:, None]
+        return kref.paged_attention_ref(q, kpool, vpool, table,
+                                        jnp.asarray(lens))
+
+    # ---------------------------------------------------------------- stats
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.cfg.n_pages

@@ -1,0 +1,57 @@
+"""Train-step factory: value_and_grad over the model loss, optional
+microbatch gradient accumulation (scanned), optional int8-compressed
+data-parallel gradient reduction, AdamW update.
+
+The returned function has signature
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+and is pure — pjit-able with the spec trees from parallel/sharding.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.common import MeshCtx
+from repro.optim import AdamW, apply_updates
+
+
+def make_train_step(model: Model, opt: AdamW, ctx: MeshCtx | None = None,
+                    accum: int = 1, grad_compression: str = "none"):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, ctx)
+
+    def grads_of(params, batch):
+        if accum <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # microbatch accumulation: split the batch leading dim into
+        # `accum` chunks and scan, summing grads (bounded activation memory)
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(accum, b // accum, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return jax.tree.map(jnp.add, acc,
+                                (l / accum,
+                                 jax.tree.map(lambda x: x / accum, g))), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params))
+        (loss, grads), _ = jax.lax.scan(body, zero, micro)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if grad_compression == "int8" and ctx is not None \
+                and ctx.mesh is not None and ctx.batch_axes:
+            from repro.parallel.collectives import compressed_allreduce_tree
+            grads = compressed_allreduce_tree(grads, ctx)
+        updates, opt_state, om = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step

@@ -1,0 +1,166 @@
+"""Caiti transit cache + staging policies: functional semantics under the
+real threaded implementation."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CaitiCache, CaitiConfig, make_device, POLICIES
+
+
+def _blk(x: int) -> bytes:
+    return bytes([x % 256]) * 4096
+
+
+CACHED = ("caiti", "caiti-noee", "caiti-nobp", "pmbd", "pmbd70", "lru",
+          "coactive")
+
+
+@pytest.mark.parametrize("policy", CACHED)
+def test_read_your_writes(policy):
+    dev = make_device(policy, n_lbas=256, cache_bytes=64 * 4096)
+    try:
+        for lba in range(64):
+            dev.write(lba, _blk(lba + 1))
+        for lba in range(64):
+            assert bytes(dev.read(lba)) == _blk(lba + 1), (policy, lba)
+    finally:
+        dev.close()
+
+
+@pytest.mark.parametrize("policy", CACHED)
+def test_overwrite_latest_visible(policy):
+    dev = make_device(policy, n_lbas=64, cache_bytes=16 * 4096)
+    try:
+        for v in range(5):
+            dev.write(7, _blk(v + 1))
+        assert bytes(dev.read(7)) == _blk(5)
+        dev.fsync()
+        assert bytes(dev.read(7)) == _blk(5)
+    finally:
+        dev.close()
+
+
+@pytest.mark.parametrize("policy", CACHED)
+def test_fsync_persists_to_backend(policy):
+    """After fsync every written block must be readable from the BTT
+    directly (cache bypass)."""
+    dev = make_device(policy, n_lbas=256, cache_bytes=16 * 4096)
+    try:
+        for lba in range(48):
+            dev.write(lba, _blk(lba + 9))
+        dev.fsync()
+        btt = dev.impl.btt
+        for lba in range(48):
+            assert bytes(btt.read(lba)) == _blk(lba + 9), (policy, lba)
+    finally:
+        dev.close()
+
+
+def test_caiti_write_more_than_cache_capacity():
+    """Writes far beyond capacity must all land (transit or bypass)."""
+    dev = make_device("caiti", n_lbas=1024, cache_bytes=8 * 4096,
+                      n_workers=2)
+    try:
+        for lba in range(512):
+            dev.write(lba, _blk(lba))
+        dev.fsync()
+        for lba in range(0, 512, 37):
+            assert bytes(dev.read(lba)) == _blk(lba)
+    finally:
+        dev.close()
+
+
+def test_caiti_eager_eviction_drains():
+    """With eager eviction the cache empties without any flush call."""
+    dev = make_device("caiti", n_lbas=256, cache_bytes=32 * 4096)
+    try:
+        for lba in range(32):
+            dev.write(lba, _blk(lba))
+        # wait for the background pool (bounded)
+        import time
+        for _ in range(200):
+            if dev.occupancy() == 0.0:
+                break
+            time.sleep(0.01)
+        assert dev.occupancy() == 0.0
+        assert dev.impl.btt.writes >= 32
+    finally:
+        dev.close()
+
+
+def test_caiti_noee_keeps_buffered_until_flush():
+    dev = make_device("caiti-noee", n_lbas=256, cache_bytes=32 * 4096)
+    try:
+        for lba in range(16):
+            dev.write(lba, _blk(lba))
+        assert dev.occupancy() > 0.0
+        assert dev.impl.btt.writes == 0        # nothing transited yet
+        dev.fsync()
+        assert dev.impl.btt.writes >= 16
+    finally:
+        dev.close()
+
+
+def test_caiti_bypass_counted_on_full_cache():
+    dev = make_device("caiti-noee", n_lbas=256, cache_bytes=4 * 4096)
+    try:
+        for lba in range(32):
+            dev.write(lba, _blk(lba))
+        assert dev.metrics.count.get("bypass_writes", 0) > 0
+    finally:
+        dev.close()
+
+
+def test_caiti_concurrent_stress():
+    dev = make_device("caiti", n_lbas=512, cache_bytes=16 * 4096,
+                      n_workers=3)
+    errs = []
+
+    def w(base):
+        try:
+            for i in range(60):
+                dev.write((base + i) % 512, _blk(base + i))
+                if i % 20 == 19:
+                    dev.fsync()
+        except BaseException as e:
+            errs.append(e)
+
+    try:
+        ts = [threading.Thread(target=w, args=(j * 97,)) for j in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errs
+        dev.fsync()
+        # every block must be whole (untorn) after the dust settles
+        for lba in range(0, 512, 41):
+            data = bytes(dev.read(lba))
+            assert data == bytes([data[0]]) * 4096
+    finally:
+        dev.close()
+
+
+def test_all_policies_construct():
+    for policy in POLICIES:
+        dev = make_device(policy, n_lbas=64, cache_bytes=8 * 4096)
+        dev.write(1, _blk(1))
+        assert bytes(dev.read(1)) == _blk(1)
+        dev.close()
+
+
+def test_bio_interface_flags():
+    from repro.core import Bio, BioFlags, BioOp, fsync_bio
+    dev = make_device("caiti", n_lbas=64, cache_bytes=8 * 4096)
+    try:
+        bio = Bio(op=BioOp.WRITE, lba=3, data=_blk(7),
+                  flags=BioFlags.REQ_FUA)
+        dev.submit_bio(bio)
+        assert bio.wait(5.0) == 0
+        fb = fsync_bio()
+        dev.submit_bio(fb)
+        assert fb.wait(5.0) == 0
+        assert bytes(dev.impl.btt.read(3)) == _blk(7)
+    finally:
+        dev.close()

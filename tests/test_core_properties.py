@@ -1,0 +1,141 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import BTT, PMemSpace, make_device
+from repro.core.sim import run_sim_workload
+
+
+def _blk(x: int) -> bytes:
+    return bytes([x % 251]) * 4096
+
+
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("write"), st.integers(0, 31), st.integers(1, 250)),
+        st.tuples(st.just("read"), st.integers(0, 31), st.just(0)),
+        st.tuples(st.just("fsync"), st.just(0), st.just(0)),
+    ),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=OPS, policy=st.sampled_from(
+    ["caiti", "caiti-noee", "caiti-nobp", "pmbd", "lru", "coactive", "btt"]))
+def test_policy_matches_dict_model(ops, policy):
+    """Single-threaded linearizability: any op sequence behaves like a
+    dict (read-your-writes + durability via fsync)."""
+    dev = make_device(policy, n_lbas=32, cache_bytes=6 * 4096)
+    model = {}
+    try:
+        for op, lba, val in ops:
+            if op == "write":
+                dev.write(lba, _blk(val))
+                model[lba] = val
+            elif op == "read":
+                got = bytes(dev.read(lba))
+                want = _blk(model[lba]) if lba in model else b"\x00" * 4096
+                assert got == want
+            else:
+                dev.fsync()
+        dev.fsync()
+        for lba, val in model.items():
+            assert bytes(dev.read(lba)) == _blk(val)
+    finally:
+        dev.close()
+
+
+@settings(max_examples=20, deadline=None)
+@given(writes=st.lists(st.tuples(st.integers(0, 15), st.integers(1, 250)),
+                       min_size=1, max_size=40),
+       crash_at=st.integers(0, 39))
+def test_btt_crash_anywhere_leaves_committed_prefix(writes, crash_at):
+    """Crash DURING any write: every previously completed write is intact
+    and the in-flight lba shows either old or new data — never torn."""
+    pmem = PMemSpace(64)
+    btt = BTT(pmem, n_lbas=16, nfree=2)
+    model = {}
+    from repro.core import SimulatedCrash
+
+    crashed = False
+    for i, (lba, val) in enumerate(writes):
+        if i == crash_at:
+            state = {"arm": True}
+
+            def hook(label):
+                if label == "pmem_write_mid" and state["arm"]:
+                    state["arm"] = False
+                    raise SimulatedCrash(label)
+
+            pmem.crash_hook = hook
+            try:
+                btt.write(lba, _blk(val))
+                model[lba] = val       # survived (hook may not have fired)
+            except SimulatedCrash:
+                crashed = True
+            pmem.crash_hook = None
+            break
+        btt.write(lba, _blk(val))
+        model[lba] = val
+
+    btt2 = BTT(pmem, n_lbas=16, fresh=False)
+    btt2.recover()
+    for lba, val in model.items():
+        got = bytes(btt2.read(lba))
+        assert got == _blk(val), f"lba {lba} corrupted after recovery"
+    if crashed:
+        # the in-flight block: old value (or zero) — must be untorn
+        lba, val = writes[crash_at]
+        got = bytes(btt2.read(lba))
+        assert got == bytes([got[0]]) * 4096
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_ops=st.integers(500, 3000), slots=st.integers(16, 512),
+       depth=st.sampled_from([1, 8, 32]))
+def test_sim_caiti_never_slower_than_staging(n_ops, slots, depth):
+    """Virtual-time invariant: Caiti's makespan <= PMBD's and LRU's for
+    any uniform write-only workload (the paper's headline claim)."""
+    kw = dict(n_ops=n_ops, n_lbas=4096, cache_slots=slots, iodepth=depth)
+    mk = {p: run_sim_workload(p, **kw).counts["makespan_us"]
+          for p in ("caiti", "pmbd", "lru")}
+    assert mk["caiti"] <= mk["pmbd"] * 1.02
+    assert mk["caiti"] <= mk["lru"] * 1.02
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_sim_deterministic(seed):
+    a = run_sim_workload("caiti", n_ops=2000, n_lbas=4096, cache_slots=64,
+                         iodepth=16, seed=seed)
+    b = run_sim_workload("caiti", n_ops=2000, n_lbas=4096, cache_slots=64,
+                         iodepth=16, seed=seed)
+    assert a.response_us == b.response_us
+
+
+def test_transit_buffer_bypass_and_flush():
+    from repro.core import TransitBuffer
+    sunk = []
+    tb = TransitBuffer(lambda x: sunk.append(x), capacity_bytes=100,
+                       n_workers=2)
+    for i in range(20):
+        tb.put(i, nbytes=30)
+    tb.flush()
+    assert sorted(sunk) == list(range(20))
+    tb.close()
+
+
+def test_transit_buffer_error_surfaces_at_flush():
+    import pytest
+    from repro.core import TransitBuffer
+
+    def sink(x):
+        if x == 3:
+            raise RuntimeError("disk on fire")
+
+    tb = TransitBuffer(sink, capacity_bytes=1000, n_workers=1)
+    for i in range(5):
+        tb.put(i, nbytes=10)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        tb.flush()

