@@ -92,9 +92,38 @@ def run_random_writes(dev, *, n_ops: int, n_lbas: int, jobs: int = 1,
         raise errs[0]
     return {"wall_s": wall, "ops": n_ops,
             "mb_s": n_ops * 4096 / wall / 1e6,
-            "us_per_op": wall / n_ops * 1e6}
+            "us_per_op": wall / n_ops * 1e6,
+            "bypass_rate": bypass_rate(dev, n_ops)}
 
 
 def fmt_row(name: str, res: dict, extra: str = "") -> str:
-    return (f"{name:10s} wall={res['wall_s']:7.3f}s "
-            f"{res['mb_s']:7.1f} MB/s {res['us_per_op']:6.2f} us/op {extra}")
+    s = (f"{name:10s} wall={res['wall_s']:7.3f}s "
+         f"{res['mb_s']:7.1f} MB/s {res['us_per_op']:6.2f} us/op")
+    if "bypass_rate" in res:
+        s += f" bypass={res['bypass_rate']*100:5.1f}%"
+    return s + (f" {extra}" if extra else "")
+
+
+def bypass_rate(dev, n_writes: int) -> float:
+    """Fraction of writes that took the conditional-bypass path
+    (single devices expose .metrics, volumes aggregate over shards)."""
+    if hasattr(dev, "metrics_snapshot"):
+        count = dev.metrics_snapshot()["bypass_writes"]
+    else:
+        count = dev.metrics.snapshot()["count"].get("bypass_writes", 0)
+    return count / max(1, n_writes)
+
+
+def fmt_volume_row(name: str, res: dict) -> str:
+    """One line per policy/config for volume runs: the paper-style
+    breakdown plus the volume columns (bypass rate, per-tenant MB/s)."""
+    s = (f"{name:14s} makespan={res['makespan_us']/1e6:8.3f}s "
+         f"agg={res['agg_mb_s']:8.1f} MB/s "
+         f"bypass={res['bypass_rate']*100:5.1f}% "
+         f"stalls={res['counts'].get('stalls', 0):5d}")
+    tenants = res.get("per_tenant", {})
+    if tenants:
+        cols = " ".join(
+            f"{t}={d['mb_s']:7.1f}" for t, d in sorted(tenants.items()))
+        s += f" | per-tenant MB/s: {cols}"
+    return s

@@ -27,7 +27,7 @@ def main() -> None:
     results = {}
 
     from . import breakdown, ckpt_bench, fio_like, fsync_sweep, kvstore, \
-        roofline, serve_bench, ycsb
+        roofline, serve_bench, volume_bench, ycsb
 
     ops = 12_000 if args.fast else 50_000
 
@@ -59,6 +59,10 @@ def main() -> None:
     results["ckpt"] = ckpt_bench.run()
     _section("serve — transit vs staging on the paged KV tier (real engine)")
     results["serve"] = serve_bench.run()
+    _section("volume — striped multi-device scaling (sim)")
+    results["volume_shards"] = volume_bench.shards(n_ops=ops // 5)
+    _section("volume — per-tenant QoS fair shares (sim)")
+    results["volume_qos"] = volume_bench.qos(n_ops=ops // 10)
     _section("roofline — dry-run derived terms (deliverable g)")
     rows = roofline.run("experiments/dryrun", mesh="pod16x16")
     results["roofline_rows"] = len(rows)

@@ -1,0 +1,164 @@
+"""Multi-tenant striped-volume sweeps (fio-like, virtual time).
+
+Extends the paper's single-device tables to the volume manager:
+
+  --table shards     shard-count scaling under a 4-tenant workload
+                     (the acceptance contrast: 4-shard Caiti vs 1-shard)
+  --table tenants    tenant-count scaling on a 4-shard volume
+  --table watermark  global-bypass watermark sweep (bypass rate vs
+                     aggregate throughput/latency)
+  --table qos        weighted fair shares + a rate-capped tenant
+  --table policies   policy comparison on the same 4-shard volume
+
+Primary engine: ``repro.core.sim.run_volume_sim_workload`` (deterministic
+virtual time; same cost model as fio_like.py, printed with every table).
+``--real`` runs a scaled-down threaded volume instead (functional path;
+wall times reflect the 1-core container, not the paper's platform).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+try:                                                    # python -m benchmarks
+    from .common import fmt_row, fmt_volume_row, run_random_writes
+except ImportError:                                     # direct script run
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from common import fmt_row, fmt_volume_row, run_random_writes
+
+from repro.core.sim import CostModel, run_volume_sim_workload  # noqa: E402
+
+N_LBAS = 524_288
+SLOTS = 8_192
+OPS = 10_000          # per tenant
+WORKERS = 16          # eviction cores (volume total, all configs)
+
+
+def _tenants(n: int, ops: int = OPS) -> list[dict]:
+    return [{"name": f"t{j}", "n_ops": ops} for j in range(n)]
+
+
+def shards(n_ops: int = OPS) -> dict:
+    print(f"# shard scaling: 4 tenants x {n_ops} uniform 4K writes, "
+          f"{WORKERS} shared eviction cores, {SLOTS} total slots")
+    out = {}
+    base = None
+    for n in (1, 2, 4, 8):
+        r = run_volume_sim_workload("caiti", n_shards=n, n_lbas=N_LBAS,
+                                    cache_slots=SLOTS, n_workers=WORKERS,
+                                    tenants=_tenants(4, n_ops))
+        out[n] = r["agg_mb_s"]
+        base = base or r["agg_mb_s"]
+        print(fmt_volume_row(f"caiti x{n}", r) +
+              f"  ({r['agg_mb_s'] / base:.2f}x vs 1 shard)")
+    print(f"-> 4-shard vs single-device: {out[4] / out[1]:.2f}x aggregate "
+          f"write throughput (acceptance: >= 2x)")
+    return out
+
+
+def tenants(n_ops: int = OPS) -> dict:
+    print("# tenant scaling on a 4-shard caiti volume")
+    out = {}
+    for n in (1, 2, 4, 8):
+        r = run_volume_sim_workload("caiti", n_shards=4, n_lbas=N_LBAS,
+                                    cache_slots=SLOTS, n_workers=WORKERS,
+                                    tenants=_tenants(n, n_ops))
+        out[n] = r["agg_mb_s"]
+        print(fmt_volume_row(f"{n} tenants", r))
+    return out
+
+
+def watermark(n_ops: int = OPS) -> dict:
+    print("# global-bypass watermark sweep (4 shards, 4 tenants, small "
+          "cache so staging pressure is real)")
+    out = {}
+    for wm in (0.5, 0.7, 0.9, 1.0):
+        r = run_volume_sim_workload("caiti", n_shards=4, n_lbas=N_LBAS,
+                                    cache_slots=1024, n_workers=8,
+                                    watermark=wm,
+                                    tenants=_tenants(4, n_ops))
+        out[wm] = {"agg_mb_s": r["agg_mb_s"],
+                   "bypass_rate": r["bypass_rate"]}
+        print(fmt_volume_row(f"watermark={wm}", r))
+    return out
+
+
+def qos(n_ops: int = 6000) -> dict:
+    print("# QoS: weights 4:2:1 + one 50 MB/s rate-capped tenant "
+          "(contended-window MB/s shows the fair split)")
+    ts = [{"name": "gold", "n_ops": n_ops, "weight": 4.0, "jobs": 8},
+          {"name": "silver", "n_ops": n_ops, "weight": 2.0, "jobs": 8},
+          {"name": "bronze", "n_ops": n_ops, "weight": 1.0, "jobs": 8},
+          {"name": "capped", "n_ops": n_ops // 4, "rate_mbps": 50.0}]
+    # qdepth << submitting cores: the admission window is the contended
+    # resource, so the SFQ tags (weights) decide who dispatches
+    r = run_volume_sim_workload("caiti", n_shards=4, n_lbas=N_LBAS,
+                                cache_slots=1024, n_workers=6,
+                                qdepth=8, iodepth=32, tenants=ts)
+    print(fmt_volume_row("caiti x4", r))
+    for name, d in r["per_tenant"].items():
+        print(f"  {name:8s} w={d['weight']:<4} cap={d['rate_mbps'] or '-':<6} "
+              f"contended={d['contended_mb_s']:8.1f} MB/s "
+              f"own-span={d['mb_s']:8.1f} MB/s mean={d['mean_us']:7.1f}us")
+    return {n: d["contended_mb_s"] for n, d in r["per_tenant"].items()}
+
+
+def policies(n_ops: int = OPS) -> dict:
+    print("# policy comparison, 4-shard volume, 4 tenants")
+    out = {}
+    for policy in ("btt", "pmbd", "lru", "coactive", "caiti",
+                   "caiti-noee", "caiti-nobp"):
+        r = run_volume_sim_workload(policy, n_shards=4, n_lbas=N_LBAS,
+                                    cache_slots=SLOTS, n_workers=WORKERS,
+                                    tenants=_tenants(4, n_ops))
+        out[policy] = r["agg_mb_s"]
+        print(fmt_volume_row(policy, r))
+    return out
+
+
+def real(n_ops: int = 2000) -> dict:
+    """Threaded volume on the container (functional validation only)."""
+    from repro.volume import make_volume
+    print("# REAL threaded volume (1-core container wall time — "
+          "contrasts are not the paper's platform)")
+    out = {}
+    for n in (1, 4):
+        vol = make_volume("caiti", n_lbas=65536, n_shards=n,
+                          cache_bytes=8 << 20, shared_workers=4)
+        res = run_random_writes(vol, n_ops=n_ops, n_lbas=65536, jobs=4)
+        out[n] = res["mb_s"]
+        snap = vol.metrics_snapshot()
+        print(fmt_row(f"caiti x{n}", res,
+                      extra=f"bg_evictions={snap['bg_evictions']}"))
+        vol.close()
+    return out
+
+
+TABLES = {"shards": shards, "tenants": tenants, "watermark": watermark,
+          "qos": qos, "policies": policies}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default="shards",
+                    choices=list(TABLES) + ["all"])
+    ap.add_argument("--ops", type=int, default=0)
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print(f"cost model: {CostModel()}")
+    kw = {"n_ops": args.ops} if args.ops else {}
+    if args.real:
+        res = real(**({"n_ops": args.ops} if args.ops else {}))
+    elif args.table == "all":
+        res = {name: fn(**kw) for name, fn in TABLES.items()}
+    else:
+        res = TABLES[args.table](**kw)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Multi-tenant striped volume walkthrough.
+
+    PYTHONPATH=src python examples/multi_tenant_volume.py
+
+1. Build a 4-shard Caiti volume (shared eviction pool, global bypass
+   watermark) and serve three QoS-tiered tenants concurrently.
+2. Crash it mid multi-shard write and reopen: per-shard Flog replay plus
+   volume-journal replay make the torn write invisible-or-whole.
+3. Virtual-time contrast: the same topology in the discrete-event
+   simulator, where the >= 2x single-device speedup is measurable.
+"""
+import os
+import tempfile
+import threading
+
+import numpy as np
+
+from repro.core import SimulatedCrash
+from repro.core.sim import run_volume_sim_workload
+from repro.volume import TenantSpec, make_volume
+
+
+def blk(x):
+    return bytes([x % 256]) * 4096
+
+
+# -- 1. three tenants on one volume -----------------------------------------
+vol = make_volume("caiti", n_lbas=65536, n_shards=4, cache_bytes=16 << 20,
+                  tenants=[TenantSpec("gold", weight=4.0),
+                           TenantSpec("silver", weight=2.0),
+                           TenantSpec("bronze", weight=1.0,
+                                      rate_mbps=200.0)])
+
+
+def client(name, base):
+    rng = np.random.default_rng(base)
+    for lba in rng.integers(0, 65536, size=400):
+        vol.write(int(lba), blk(base), tenant=name)
+
+
+threads = [threading.Thread(target=client, args=(n, i * 7 + 1))
+           for i, n in enumerate(("gold", "silver", "bronze"))]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+vol.fsync()
+snap = vol.metrics_snapshot()
+print(f"[qos] 3 tenants, 1200 writes: bg_evictions={snap['bg_evictions']} "
+      f"bypass={snap['bypass_writes']} "
+      f"admitted={ {k: v // 4096 for k, v in vol._gate.admitted_bytes.items()} }")
+vol.close()
+
+# -- 2. crash mid multi-shard write, then recover ---------------------------
+tmp = tempfile.mkdtemp()
+path = os.path.join(tmp, "vol")
+vol = make_volume("btt", n_lbas=4096, n_shards=4, stripe_blocks=1,
+                  backend="file", path=path)
+vol.write_multi(40, [blk(1)] * 4)                 # committed baseline
+vol.fsync()
+
+armed = {"on": True}
+
+
+def power_cut(label):
+    if label == "pmem_write_begin" and armed["on"]:
+        armed["on"] = False
+        raise SimulatedCrash(label)
+
+
+shard, _ = vol._map(41, 0)                        # cut power on block 2's shard
+vol.shards[shard].impl.btt.pmem.crash_hook = power_cut
+try:
+    vol.write_multi(40, [blk(9)] * 4)             # torn: block 1 lands, 2 dies
+except SimulatedCrash:
+    print("[crash] power lost mid multi-shard write (after journal commit)")
+for d in vol.shards:
+    d.impl.btt.pmem.crash_hook = None
+
+vol2 = make_volume("btt", n_lbas=4096, n_shards=4, stripe_blocks=1,
+                   backend="file", path=path)
+got = {bytes(vol2.read(40 + i))[0] for i in range(4)}
+print(f"[recover] replayed_txs={vol2.recovery_stats['replayed_txs']} "
+      f"-> all 4 blocks read pattern {got} (whole, never torn)")
+assert got == {9}
+vol2.close()
+
+# -- 3. virtual-time scaling contrast ---------------------------------------
+tenants = [{"name": f"t{j}", "n_ops": 4000} for j in range(4)]
+r1 = run_volume_sim_workload("caiti", n_shards=1, n_lbas=262144,
+                             cache_slots=8192, n_workers=16, tenants=tenants)
+r4 = run_volume_sim_workload("caiti", n_shards=4, n_lbas=262144,
+                             cache_slots=8192, n_workers=16, tenants=tenants)
+print(f"[sim] caiti aggregate write throughput: 1 shard "
+      f"{r1['agg_mb_s']:.0f} MB/s -> 4 shards {r4['agg_mb_s']:.0f} MB/s "
+      f"({r4['agg_mb_s'] / r1['agg_mb_s']:.2f}x)")

@@ -33,11 +33,14 @@ _ROOT_FMT = "<QQQQQ"          # magic, generation, manifest_lba, manifest_len(by
 class BlockStore:
     """Keyed object store with generation-atomic commits."""
 
-    def __init__(self, device: BlockDevice, n_lbas: int,
+    def __init__(self, device, n_lbas: int,
                  manifest_blocks: int = 256) -> None:
+        # ``device`` is anything speaking write/read/fsync/close — a single
+        # BlockDevice or a repro.volume.StripedVolume (sharded checkpoints)
         self.dev = device
-        self.block_size = device.impl.btt.block_size \
-            if hasattr(device.impl, "btt") else 4096
+        self.block_size = getattr(device, "block_size", None) or \
+            (device.impl.btt.block_size
+             if hasattr(getattr(device, "impl", None), "btt") else 4096)
         self.n_lbas = n_lbas
         self._manifest_cap = manifest_blocks
         self._data_base = 1 + 2 * manifest_blocks
@@ -86,6 +89,9 @@ class BlockStore:
         n_blocks = max(1, (nbytes + bs - 1) // bs)
         lba = self._alloc(n_blocks)
         mv = memoryview(payload)
+        # plain per-block writes even on a striped volume: torn puts are
+        # already invisible until commit() flips the root, so the volume's
+        # redo journal would only double the write volume here
         for i in range(n_blocks):
             chunk = bytes(mv[i * bs:(i + 1) * bs])
             if len(chunk) < bs:
@@ -143,10 +149,21 @@ class BlockStore:
 def make_blockstore(path: str | None = None, *, policy: str = "caiti",
                     capacity_bytes: int = 1 << 30, block_size: int = 4096,
                     cache_bytes: int = 64 << 20,
-                    latency: LatencyModel | None = None) -> BlockStore:
+                    latency: LatencyModel | None = None,
+                    n_shards: int = 1) -> BlockStore:
+    """``n_shards > 1`` stripes the store over a multi-device volume:
+    checkpoint blocks spread across all shards' PMem (aggregate bandwidth)
+    and multi-block puts ride the volume journal."""
     n_lbas = capacity_bytes // block_size
-    dev = make_device(policy, n_lbas=n_lbas, block_size=block_size,
-                      cache_bytes=cache_bytes,
-                      backend="file" if path else "ram", path=path,
-                      latency=latency)
+    if n_shards > 1:
+        from repro.volume import make_volume
+        dev = make_volume(policy, n_lbas=n_lbas, n_shards=n_shards,
+                          block_size=block_size, cache_bytes=cache_bytes,
+                          backend="file" if path else "ram", path=path,
+                          latency=latency)
+    else:
+        dev = make_device(policy, n_lbas=n_lbas, block_size=block_size,
+                          cache_bytes=cache_bytes,
+                          backend="file" if path else "ram", path=path,
+                          latency=latency)
     return BlockStore(dev, n_lbas)

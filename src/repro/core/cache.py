@@ -85,14 +85,25 @@ class CaitiConfig:
 
 
 class CaitiCache:
-    """The I/O transit cache in front of a BTT block device."""
+    """The I/O transit cache in front of a BTT block device.
+
+    ``evict_pool`` (optional) hands background write-back to a shared
+    multi-device pool (``repro.volume.SharedEvictionPool``) instead of
+    per-device worker threads — the volume manager drains all shards from
+    one set of eviction cores.  ``bypass_hook`` (optional) extends the
+    paper's conditional bypass with a *global* condition: when the hook
+    returns True a write miss transits straight to BTT even though this
+    shard still has free slots (the volume's aggregate-staged watermark).
+    """
 
     def __init__(self, btt: BTT, cfg: CaitiConfig | None = None,
-                 metrics: Metrics | None = None) -> None:
+                 metrics: Metrics | None = None, evict_pool=None,
+                 bypass_hook=None) -> None:
         self.btt = btt
         self.cfg = cfg or CaitiConfig(block_size=btt.block_size)
         assert self.cfg.block_size == btt.block_size
         self.metrics = metrics or Metrics()
+        self.bypass_hook = bypass_hook
         n = self.cfg.n_slots
         self._buf = np.zeros((n, self.cfg.block_size), dtype=np.uint8)
         self._slots = [SlotHeader(i) for i in range(n)]
@@ -106,16 +117,21 @@ class CaitiCache:
         self._evict_cond = threading.Condition(self._evict_lock)
         self._enqueued = 0
         self._completed = 0
-        # background pool
+        # background pool: private threads, or a shared cross-shard pool
+        self._pool = evict_pool
         self._work: queue.SimpleQueue[SlotHeader | None] = queue.SimpleQueue()
         self._stop = False
-        self._workers = [
-            threading.Thread(target=self._evict_worker, daemon=True,
-                             name=f"caiti-evict-{i}")
-            for i in range(self.cfg.n_workers)
-        ]
-        for w in self._workers:
-            w.start()
+        if evict_pool is not None:
+            evict_pool.register(self)
+            self._workers = []
+        else:
+            self._workers = [
+                threading.Thread(target=self._evict_worker, daemon=True,
+                                 name=f"caiti-evict-{i}")
+                for i in range(self.cfg.n_workers)
+            ]
+            for w in self._workers:
+                w.start()
 
     # ----------------------------------------------------------- internals
     def _set_for(self, lba: int) -> CacheSet:
@@ -133,7 +149,14 @@ class CaitiCache:
     def _notify_eviction(self, sh: SlotHeader) -> None:
         with self._evict_lock:
             self._enqueued += 1
-        self._work.put(sh)
+        if self._pool is not None:
+            self._pool.submit(self, sh)
+        else:
+            self._work.put(sh)
+
+    def staged_slots(self) -> int:
+        """Slots currently occupied (Pending/Valid/Evicting)."""
+        return len(self._slots) - len(self._free)
 
     def _complete_eviction(self, n: int = 1) -> None:
         with self._evict_cond:
@@ -166,8 +189,13 @@ class CaitiCache:
                     # the slot between Valid and queued (no recycle window)
                     self._enqueue_for_eviction(cs, sh)
                 break
-            # ---- write miss
-            sh = self._alloc_slot()
+            # ---- write miss.  The volume's global watermark extends the
+            # paper's bypass condition: under aggregate staging pressure a
+            # write transits straight to BTT even with local slots free.
+            globally_full = (self.cfg.conditional_bypass
+                             and self.bypass_hook is not None
+                             and self.bypass_hook())
+            sh = None if globally_full else self._alloc_slot()
             if sh is None:
                 if self.cfg.conditional_bypass:
                     # L20-22: cache full -> transit straight to PMem

@@ -144,12 +144,17 @@ def make_device(policy: str, *, n_lbas: int, block_size: int = 4096,
                 path: str | None = None,
                 latency: LatencyModel | None = None,
                 n_workers: int = 4, nfree: int | None = None,
-                record_latencies: bool = False) -> BlockDevice:
+                record_latencies: bool = False,
+                evict_pool=None) -> BlockDevice:
     """Build a complete device stack for the given policy name.
 
     A file-backed pool that already carries a BTT info block is RECOVERED
     (Flog replay), not re-formatted — reopening after a crash must land on
     the last committed state.
+
+    ``evict_pool`` (caiti policies only) hands background eviction to a
+    shared cross-device pool (see ``repro.volume.SharedEvictionPool``)
+    instead of private worker threads.
     """
     assert policy in POLICIES, f"unknown policy {policy!r}"
     latency = NO_LATENCY if latency is None else latency
@@ -174,7 +179,7 @@ def make_device(policy: str, *, n_lbas: int, block_size: int = 4096,
                           n_workers=n_workers,
                           eager_eviction=(policy != "caiti-noee"),
                           conditional_bypass=(policy != "caiti-nobp"))
-        impl = CaitiCache(btt, cfg, metrics=metrics)
+        impl = CaitiCache(btt, cfg, metrics=metrics, evict_pool=evict_pool)
     elif policy == "pmbd":
         impl = PMBDCache(btt, cache_bytes, metrics=metrics)
     elif policy == "pmbd70":

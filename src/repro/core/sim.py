@@ -364,11 +364,18 @@ class SimCaiti(PolicyBase):
     BTT write completes (Free→Pending→Valid→Evicting→Free)."""
 
     def __init__(self, cost, media, n_slots, n_workers: int = 8,
-                 eager: bool = True, bypass: bool = True) -> None:
+                 eager: bool = True, bypass: bool = True,
+                 workers: list | None = None, global_full=None) -> None:
         super().__init__(cost, media, n_slots)
         self.eager = eager
         self.bypass = bypass
-        self.workers = [Bank() for _ in range(n_workers)]
+        # ``workers`` shares one eviction-core pool across volume shards;
+        # a shared pool is drained congestion-aware (earliest-free core)
+        # instead of round-robin.
+        self.shared_pool = workers is not None
+        self.workers = workers if workers is not None \
+            else [Bank() for _ in range(n_workers)]
+        self.global_full = global_full     # volume aggregate watermark hook
         self._rr = 0
         self.freed: deque[tuple[float, int]] = deque()   # (free_t, lba)
         self.occupied = 0
@@ -376,8 +383,11 @@ class SimCaiti(PolicyBase):
 
     def _evict_bg(self, t_valid: float, lba: int) -> float:
         """Background write-back; returns slot-free time."""
-        self._rr = (self._rr + 1) % len(self.workers)
-        w = self.workers[self._rr]
+        if self.shared_pool:
+            w = min(self.workers, key=lambda b: b.free_at)
+        else:
+            self._rr = (self._rr + 1) % len(self.workers)
+            w = self.workers[self._rr]
         start = max(t_valid, w.free_at)
         done = self.media.write(start + self.cost.meta,
                                 self.cost.btt_write())
@@ -401,7 +411,9 @@ class SimCaiti(PolicyBase):
                 self.freed.append((self._evict_bg(end, lba), lba))
             self.m.breakdown["wbq_enqueue"] += 0.05
             return end + 0.05
-        if self.occupied >= self.n_slots:
+        locally_full = self.occupied >= self.n_slots
+        if locally_full or (self.bypass and self.global_full is not None
+                            and self.global_full()):
             if self.bypass:
                 end = self.media.write(t + self.cost.meta,
                                        self.cost.btt_write())
@@ -561,3 +573,241 @@ def run_sim_workload(policy: str, *, n_ops: int, n_lbas: int,
                         dev.flush(t_global_done, sync=True))
     dev.m.counts["makespan_us"] = int(t_global_done)
     return dev.m
+
+
+# ---------------------------------------------------------------- volumes
+class SimVolume:
+    """Virtual-time model of the striped multi-device volume.
+
+    Each shard is a full device (its own interleaved DIMM set = ``Media``)
+    fronted by the per-policy cache; caiti shards share ONE background
+    eviction-core pool, drained congestion-aware (earliest-free core), and
+    honor the volume's aggregate-staged watermark for global conditional
+    bypass.  ``cache_slots`` and ``n_workers`` are VOLUME totals, so a
+    1-shard and an N-shard volume stage the same bytes with the same
+    eviction cores — what N buys is media parallelism and shorter
+    per-shard queues, which is the paper's contended resource.
+    """
+
+    def __init__(self, policy: str, cost: CostModel, *, n_shards: int,
+                 cache_slots: int, n_workers: int = 8,
+                 stripe_blocks: int = 64, watermark: float = 1.0) -> None:
+        self.policy = policy
+        self.n_shards = n_shards
+        self.stripe_blocks = stripe_blocks
+        self.medias = [Media(cost) for _ in range(n_shards)]
+        slots_per = max(1, cache_slots // n_shards)
+        self._watermark_slots = watermark * slots_per * n_shards
+        self._use_watermark = policy.startswith("caiti") and watermark < 1.0
+        if policy.startswith("caiti"):
+            pool = [Bank() for _ in range(n_workers)]
+            self.shards = [
+                SimCaiti(cost, self.medias[i], slots_per,
+                         eager=(policy != "caiti-noee"),
+                         bypass=(policy != "caiti-nobp"),
+                         workers=pool,
+                         global_full=(self._over_watermark
+                                      if self._use_watermark else None))
+                for i in range(n_shards)
+            ]
+        else:
+            self.shards = [make_sim_policy(policy, cost, self.medias[i],
+                                           slots_per)
+                           for i in range(n_shards)]
+
+    def _over_watermark(self) -> bool:
+        staged = sum(s.occupied for s in self.shards)
+        return staged >= self._watermark_slots
+
+    def _map(self, lba: int) -> tuple[int, int]:
+        st, within = divmod(lba, self.stripe_blocks)
+        row, shard = divmod(st, self.n_shards)
+        return shard, row * self.stripe_blocks + within
+
+    def write(self, t: float, lba: int) -> float:
+        shard, local = self._map(lba)
+        return self.shards[shard].write(t, local)
+
+    def read(self, t: float, lba: int) -> float:
+        shard, local = self._map(lba)
+        return self.shards[shard].read(t, local)
+
+    def flush(self, t: float, sync: bool) -> float:
+        return max(s.flush(t, sync) for s in self.shards)
+
+    def counts(self) -> dict:
+        agg: dict = defaultdict(int)
+        for s in self.shards:
+            for k, v in s.m.counts.items():
+                agg[k] += v
+        return dict(agg)
+
+
+def run_volume_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
+                            cache_slots: int, tenants: list[dict],
+                            iodepth: int = 32, qdepth: int = 32,
+                            n_workers: int = 8, stripe_blocks: int = 64,
+                            watermark: float = 1.0, fsync_every: int = 0,
+                            read_frac: float = 0.0,
+                            flush_period_us: float = 5e4, seed: int = 0,
+                            cost: CostModel | None = None) -> dict:
+    """Closed-loop multi-tenant fio workload against a striped volume.
+
+    ``tenants`` — dicts with keys ``n_ops`` plus optional ``name``,
+    ``jobs`` (submitting cores for this tenant, default 4), ``weight``
+    (WFQ share, default 1.0) and ``rate_mbps`` (token-bucket cap, 0 =
+    unlimited; MB/s == bytes/µs, so bucket math is exact in virtual time).
+
+    Execution model matches ``run_sim_workload``: every job is a serial
+    submitting core (inline bio execution), with an ``iodepth``-window
+    closed loop feeding arrival times.  On top, the volume applies the QoS
+    disciplines of ``repro.volume.qos`` in virtual time: at most
+    ``qdepth`` requests are dispatched-but-incomplete volume-wide, and
+    when cores contend for a dispatch slot the smallest SFQ start tag
+    ``S = max(V, F_tenant)`` wins, with ``F_tenant += bytes/weight``.
+    Token buckets delay a job's arrival before tags are assigned, so a
+    rate-capped tenant never accrues scheduling credit while throttled.
+    """
+    cost = cost or CostModel()
+    vol = SimVolume(policy, cost, n_shards=n_shards, cache_slots=cache_slots,
+                    n_workers=n_workers, stripe_blocks=stripe_blocks,
+                    watermark=watermark)
+    rng = np.random.default_rng(seed)
+    nt = len(tenants)
+    names = [t.get("name", f"t{j}") for j, t in enumerate(tenants)]
+    weights = [float(t.get("weight", 1.0)) for t in tenants]
+    rates = [float(t.get("rate_mbps", 0.0)) for t in tenants]   # bytes/us
+    bursts = [float(t.get("burst_bytes", 64 << 10)) for t in tenants]
+    bs = 4096.0
+    stack = cost.bio_stack / max(1, min(iodepth, 16))
+
+    # expand tenants into streams (one per submitting core)
+    st_tenant: list[int] = []
+    st_ops: list[np.ndarray] = []
+    st_reads: list = []
+    for j, t in enumerate(tenants):
+        jobs = max(1, int(t.get("jobs", 4)))
+        per = max(1, int(t["n_ops"]) // jobs)
+        for _ in range(jobs):
+            st_tenant.append(j)
+            st_ops.append(rng.integers(0, n_lbas, size=per))
+            st_reads.append(rng.random(per) < read_frac if read_frac
+                            else None)
+    ns = len(st_tenant)
+    heads = [0] * ns
+    core_free = [0.0] * ns
+    completions: list[list[float]] = [[] for _ in range(ns)]
+    metrics = [SimMetrics() for _ in range(nt)]
+    finish = [0.0] * nt                  # SFQ per-tenant finish tags
+    vtime = 0.0                          # virtual time = last start tag
+    tb_tokens = list(bursts)
+    tb_time = [0.0] * nt
+    inflight: list[float] = []           # completion-time heap
+    t_now = 0.0
+    next_tick = flush_period_us
+    t_done = 0.0
+
+    def tb_ready(j: int, arrive: float) -> float:
+        if rates[j] <= 0:
+            return arrive
+        avail = min(bursts[j], tb_tokens[j]
+                    + (arrive - tb_time[j]) * rates[j])
+        if avail >= bs:
+            return arrive
+        return tb_time[j] + (bs - tb_tokens[j]) / rates[j]
+
+    def tb_take(j: int, start: float) -> None:
+        if rates[j] <= 0:
+            return
+        tb_tokens[j] = min(bursts[j], tb_tokens[j]
+                           + (start - tb_time[j]) * rates[j]) - bs
+        tb_time[j] = start
+
+    while True:
+        # bounded volume window: wait for a slot before dispatching
+        while len(inflight) >= qdepth:
+            t_now = max(t_now, heapq.heappop(inflight))
+        # candidate request per stream: (ready time, tenant SFQ tag)
+        cands = []
+        for s in range(ns):
+            k = heads[s]
+            if k >= len(st_ops[s]):
+                continue
+            j = st_tenant[s]
+            arrive = completions[s][k - iodepth] if k >= iodepth else 0.0
+            ready = max(tb_ready(j, arrive), core_free[s])
+            s_tag = max(vtime, finish[j])
+            cands.append((ready, s_tag, s, arrive))
+        if not cands:
+            break
+        elig = [c for c in cands if c[0] <= t_now + 1e-9]
+        if not elig:
+            t_now = min(c[0] for c in cands)
+            elig = [c for c in cands if c[0] <= t_now + 1e-9]
+        ready, s_tag, s, arrive = min(elig, key=lambda c: (c[1], c[0], c[2]))
+        j = st_tenant[s]
+        heads[s] += 1
+        finish[j] = s_tag + bs / weights[j]
+        vtime = max(vtime, s_tag)
+        start = max(t_now, ready)
+        tb_take(j, start)
+        while start >= next_tick:          # ext4 journal tick
+            vol.flush(next_tick, sync=False)
+            next_tick += flush_period_us
+        i = heads[s] - 1
+        lba = int(st_ops[s][i])
+        t_proc = start + stack
+        metrics[j].breakdown["others"] += stack
+        if st_reads[s] is not None and st_reads[s][i]:
+            done = vol.read(t_proc, lba)
+        else:
+            done = vol.write(t_proc, lba)
+        if fsync_every and (i + 1) % fsync_every == 0:
+            done = vol.flush(done, sync=True)
+        heapq.heappush(inflight, done)
+        completions[s].append(done)
+        core_free[s] = done              # inline bio: core busy to completion
+        metrics[j].lat(arrive, done)
+        t_now = start
+        t_done = max(t_done, done)
+
+    t_done = max(t_done, vol.flush(t_done, sync=True))   # exit fsync
+    counts = vol.counts()
+    counts["makespan_us"] = int(t_done)
+    writes = sum(len(ops) for ops in st_ops)
+    per_tenant = {}
+    spans = [0.0] * nt
+    done_ops = [0] * nt
+    for s in range(ns):
+        j = st_tenant[s]
+        done_ops[j] += len(completions[s])
+        if completions[s]:
+            spans[j] = max(spans[j], completions[s][-1])
+    # fair-share window: while EVERY tenant still has work, throughput
+    # must split by weight; after the fastest stream drains the remaining
+    # tenants legitimately speed up, so whole-span ratios understate QoS
+    t_contended = min((s for s in spans if s > 0), default=0.0)
+    for j in range(nt):
+        c_ops = sum(1 for s in range(ns) if st_tenant[s] == j
+                    for c in completions[s] if c <= t_contended + 1e-9)
+        per_tenant[names[j]] = {
+            "ops": done_ops[j],
+            # a tenant's throughput is over ITS OWN stream's span (closed
+            # loop: a favored tenant finishes its ops sooner, not "more")
+            "mb_s": done_ops[j] * bs / max(spans[j], 1e-9),  # B/us == MB/s
+            "span_us": spans[j],
+            "contended_mb_s": c_ops * bs / max(t_contended, 1e-9),
+            "mean_us": metrics[j].mean(),
+            "p9999_us": metrics[j].pct(99.99),
+            "weight": weights[j],
+            "rate_mbps": rates[j],
+        }
+    return {
+        "policy": policy,
+        "n_shards": n_shards,
+        "makespan_us": t_done,
+        "agg_mb_s": writes * bs / max(t_done, 1e-9),
+        "bypass_rate": counts.get("bypass", 0) / max(1, writes),
+        "counts": counts,
+        "per_tenant": per_tenant,
+    }

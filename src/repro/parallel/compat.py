@@ -1,0 +1,33 @@
+"""Version compatibility shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (keyword
+``check_rep``) to ``jax.shard_map`` (keyword ``check_vma``).  Call sites
+use the modern spelling; this shim translates on older jax.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map            # jax >= 0.6
+    _CHECK_KW = "check_vma"
+except AttributeError:                    # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
+def axis_size(axis) -> int:
+    """Static size of a named mesh axis, from inside shard_map.
+
+    ``jax.lax.axis_size`` is recent; on older jax ``jax.core.axis_frame``
+    resolves the bound axis (returning either a frame or the bare size).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    frame = jax.core.axis_frame(axis)         # pragma: no cover - versioned
+    return getattr(frame, "size", frame)

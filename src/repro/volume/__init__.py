@@ -1,0 +1,24 @@
+"""repro.volume — striped multi-device volume manager over PMem shards.
+
+Generalizes the paper's single-device Caiti mechanism to a logical volume:
+
+    make_volume(...)       — N-shard RAID-0 (optionally replicated) volume
+    StripedVolume          — the volume manager itself
+    VolumeConfig           — geometry + policy knobs
+    SharedEvictionPool     — one background eviction pool drained
+                             congestion-aware across all shards
+    VolumeJournal          — redo journal giving multi-shard logical writes
+                             all-or-nothing crash semantics
+    TokenBucket, WFQGate   — per-tenant QoS (rate limits + weighted fair
+                             scheduling)
+    TenantSpec             — declarative tenant weight/rate description
+"""
+from .evict_pool import SharedEvictionPool
+from .journal import VolumeJournal
+from .qos import QoSError, TenantSpec, TokenBucket, WFQGate
+from .volume import StripedVolume, VolumeConfig, make_volume
+
+__all__ = [
+    "SharedEvictionPool", "VolumeJournal", "TokenBucket", "WFQGate",
+    "TenantSpec", "QoSError", "StripedVolume", "VolumeConfig", "make_volume",
+]

@@ -1,0 +1,111 @@
+"""Shared background-eviction worker pool for multi-shard volumes.
+
+The paper's Caiti gives *each* device its own eviction threads.  On a
+volume composed of N shards that wastes cores: a bursty shard starves
+while an idle shard's workers spin.  This pool owns the eviction cores
+for the whole volume and drains the shards' write-back queues
+congestion-aware: workers prefer the shard with the deepest backlog and
+fall back to round-robin among ties, so aggregate PMem bandwidth — the
+contended resource — is spent where the staging pressure is.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+
+class SharedEvictionPool:
+    """N worker threads draining eviction work for many ``CaitiCache`` shards.
+
+    Caches register themselves (``CaitiCache(..., evict_pool=pool)`` does it
+    in its constructor); each registered cache gets a private backlog deque.
+    ``submit(cache, slot)`` enqueues one slot for background transit; a
+    worker later calls the cache's ``_evict_slot``/``_complete_eviction``
+    exactly as the cache's private threads would, so per-cache flush
+    accounting is unchanged.
+    """
+
+    def __init__(self, n_workers: int = 4, name: str = "vol") -> None:
+        self.n_workers = n_workers
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queues: list[tuple[object, deque]] = []   # (cache, backlog)
+        self._rr = 0
+        self._picks = 0
+        self._stop = False
+        self._pending = 0
+        self._workers = [
+            threading.Thread(target=self._run, daemon=True,
+                             name=f"{name}-evict-{i}")
+            for i in range(n_workers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    # ------------------------------------------------------------ interface
+    def register(self, cache) -> None:
+        with self._lock:
+            self._queues.append((cache, deque()))
+
+    def submit(self, cache, slot) -> None:
+        with self._cond:
+            for c, q in self._queues:
+                if c is cache:
+                    q.append(slot)
+                    self._pending += 1
+                    self._cond.notify()
+                    return
+        raise ValueError("cache not registered with this pool")
+
+    def backlog(self) -> int:
+        """Total slots queued across all shards (not yet picked up)."""
+        with self._lock:
+            return self._pending
+
+    # ------------------------------------------------------------- workers
+    def _pick(self):
+        """Congestion-aware, starvation-free pick: picks alternate between
+        the deepest backlog and plain round-robin over non-empty queues —
+        a strictly-deepest rule would let a shard with one queued slot
+        wait forever behind busier shards, wedging that shard's flush."""
+        best = None
+        best_depth = 0
+        n = len(self._queues)
+        self._picks += 1
+        for off in range(n):
+            i = (self._rr + off) % n
+            depth = len(self._queues[i][1])
+            if self._picks % 2 and depth > 0:       # RR turn: first non-empty
+                best, best_depth = i, depth
+                break
+            if depth > best_depth:                  # congestion turn: deepest
+                best, best_depth = i, depth
+        if best is None:
+            return None
+        self._rr = (best + 1) % n
+        cache, q = self._queues[best]
+        self._pending -= 1
+        return cache, q.popleft()
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while self._pending == 0 and not self._stop:
+                    self._cond.wait(timeout=0.5)
+                if self._stop and self._pending == 0:
+                    return
+                picked = self._pick()
+            if picked is None:
+                continue
+            cache, slot = picked
+            try:
+                cache._evict_slot(slot)
+            finally:
+                cache._complete_eviction()
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        for w in self._workers:
+            w.join(timeout=2.0)

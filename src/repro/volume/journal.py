@@ -1,0 +1,139 @@
+"""Redo journal for cross-shard write atomicity.
+
+A shard's BTT makes each *single-block* write atomic (CoW + Flog), but a
+logical write that spans shards has no such guarantee: a crash between the
+per-shard writes leaves a torn multi-block write.  The volume closes the
+gap with physical redo journaling, the same discipline ext4's data journal
+and md's write journal use, built out of the atomicity primitive we
+already have — one BTT block write:
+
+  1. the payload blocks are written into a journal slot (direct to the
+     slot shard's BTT, bypassing any staging cache);
+  2. the header block — {magic, txid, logical lba, n_blocks, payload crc}
+     — is written LAST via one atomic BTT write.  That is the commit
+     point: a valid header proves the whole payload is on media;
+  3. only then do the in-place data writes start (through the shards'
+     transit caches, eagerly evicted in the background).
+
+Recovery replays every journal slot whose header is valid and whose txid
+is newer than the checkpointed ``applied`` txid, in txid order — torn
+in-place writes are rolled forward to the complete image, and a tx whose
+header never landed is invisible (old data intact on every shard).
+``fsync`` checkpoints: after the caches drain, all journaled txids are
+durable in place, so the applied mark advances and old slots are skipped
+at recovery (a later un-journaled overwrite can no longer be clobbered by
+a stale replay).
+
+Slots are striped round-robin across shards so journal bandwidth scales
+with the volume.
+"""
+from __future__ import annotations
+
+import struct
+import threading
+import zlib
+
+import numpy as np
+
+_JMAGIC = 0x10CA171          # "IO CAITI" journal
+_HDR_FMT = "<QQQQQ"          # magic, txid, lba, n_blocks, crc
+
+
+class VolumeJournal:
+    """Ring of ``n_slots`` redo slots striped over the shard BTTs.
+
+    ``btts``      — one BTT per shard (journal I/O bypasses caches).
+    ``base_lba``  — first shard-local lba of the journal region (the same
+                    on every shard; the volume reserves the region).
+    ``span``      — max payload blocks per transaction (slot size - 1).
+    """
+
+    def __init__(self, btts, *, base_lba: int, n_slots: int = 64,
+                 span: int = 8, block_size: int = 4096) -> None:
+        self.btts = list(btts)
+        self.n_shards = len(self.btts)
+        self.base_lba = base_lba
+        self.n_slots = n_slots
+        self.span = span
+        self.block_size = block_size
+        self.slot_blocks = 1 + span                    # header + payload
+        self._lock = threading.Lock()
+        self.next_txid = 1          # 0 means "nothing applied yet"
+        self.applied_txid = 0       # persisted by the volume superblock
+
+    # ------------------------------------------------------------ geometry
+    def blocks_per_shard(self) -> int:
+        slots_here = (self.n_slots + self.n_shards - 1) // self.n_shards
+        return slots_here * self.slot_blocks
+
+    def _slot_home(self, slot: int) -> tuple[int, int]:
+        """(shard, shard-local lba of the slot's header block)."""
+        shard = slot % self.n_shards
+        local = slot // self.n_shards
+        return shard, self.base_lba + local * self.slot_blocks
+
+    # ------------------------------------------------------------- logging
+    def log(self, lba: int, blocks: list[bytes],
+            checkpoint_cb=None) -> int:
+        """Persist one redo record; returns the committed txid.
+
+        ``checkpoint_cb`` is invoked (outside no locks we need re-entrant)
+        when the ring wraps onto a slot whose previous occupant has not
+        been checkpointed yet — the volume drains its caches and advances
+        ``applied_txid`` so the slot is safe to reuse.
+        """
+        assert 0 < len(blocks) <= self.span, \
+            f"tx of {len(blocks)} blocks exceeds journal span {self.span}"
+        with self._lock:
+            txid = self.next_txid
+            self.next_txid += 1
+            need_ckpt = txid - self.n_slots > self.applied_txid \
+                and txid > self.n_slots
+        if need_ckpt and checkpoint_cb is not None:
+            # checkpoint strictly BELOW this txid: the current tx has not
+            # written in place yet, so marking it applied would let a
+            # crash skip its replay and surface a torn write
+            checkpoint_cb(txid - 1)
+        slot = txid % self.n_slots
+        shard, hdr_lba = self._slot_home(slot)
+        btt = self.btts[shard]
+        payload = b"".join(bytes(b) for b in blocks)
+        crc = zlib.crc32(payload)
+        for i, blk in enumerate(blocks):
+            btt.write(hdr_lba + 1 + i, np.frombuffer(bytes(blk), np.uint8))
+        hdr = struct.pack(_HDR_FMT, _JMAGIC, txid, lba, len(blocks), crc)
+        hdr = hdr + b"\x00" * (self.block_size - len(hdr))
+        # the commit point: one atomic BTT block write
+        btt.write(hdr_lba, np.frombuffer(hdr, np.uint8))
+        return txid
+
+    def mark_applied(self, txid: int) -> None:
+        with self._lock:
+            self.applied_txid = max(self.applied_txid, txid)
+
+    def last_txid(self) -> int:
+        with self._lock:
+            return self.next_txid - 1
+
+    # ------------------------------------------------------------ recovery
+    def scan(self) -> list[tuple[int, int, list[bytes]]]:
+        """All valid records newer than ``applied_txid``: (txid, lba, blocks),
+        sorted ascending by txid."""
+        found = []
+        hdr_len = struct.calcsize(_HDR_FMT)
+        for slot in range(self.n_slots):
+            shard, hdr_lba = self._slot_home(slot)
+            btt = self.btts[shard]
+            raw = bytes(btt.read(hdr_lba)[:hdr_len])
+            magic, txid, lba, n_blocks, crc = struct.unpack(_HDR_FMT, raw)
+            if magic != _JMAGIC or txid <= self.applied_txid:
+                continue
+            if not 0 < n_blocks <= self.span:
+                continue
+            blocks = [bytes(btt.read(hdr_lba + 1 + i))
+                      for i in range(n_blocks)]
+            if zlib.crc32(b"".join(blocks)) != crc:
+                continue                     # torn journal write: not committed
+            found.append((txid, lba, blocks))
+        found.sort(key=lambda r: r[0])
+        return found

@@ -1,0 +1,134 @@
+"""Per-tenant QoS for the striped volume: rate limits + weighted fairness.
+
+Two cooperating mechanisms, both standard in block-layer QoS stacks
+(blk-iocost / dm-qos lineage):
+
+  * :class:`TokenBucket` — hard per-tenant throughput cap.  Tokens are
+    bytes, refilled continuously at ``rate_bytes_s`` up to ``burst_bytes``;
+    ``acquire`` blocks the submitting thread until the deficit drains.
+  * :class:`WFQGate` — start-time fair queuing (SFQ) over a bounded
+    in-flight window.  Each admitted request gets a virtual start tag
+    ``S = max(V, F_tenant)`` and advances its tenant's finish tag by
+    ``nbytes / weight``; the gate dispatches the waiter with the smallest
+    start tag whenever an in-flight slot frees.  When the volume is the
+    bottleneck, tenant throughput converges to the weight ratio.
+
+Both are time-driven with ``time.monotonic`` — real-thread QoS for the
+threaded volume.  The discrete-event simulator reimplements the same two
+disciplines in virtual time (``repro.core.sim.run_volume_sim_workload``)
+so the fairness claims are measurable deterministically.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from dataclasses import dataclass
+
+
+class QoSError(RuntimeError):
+    pass
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """Declarative tenant description for ``make_volume(tenants=[...])``."""
+
+    name: str
+    weight: float = 1.0              # WFQ share when the volume saturates
+    rate_mbps: float = 0.0           # hard cap; 0 = unlimited
+    burst_bytes: int = 4 << 20
+
+
+class TokenBucket:
+    """Continuous-refill token bucket (tokens are bytes)."""
+
+    def __init__(self, rate_bytes_s: float, burst_bytes: int = 4 << 20,
+                 clock=time.monotonic) -> None:
+        assert rate_bytes_s > 0
+        self.rate = float(rate_bytes_s)
+        self.burst = float(burst_bytes)
+        self._clock = clock
+        self._tokens = self.burst
+        self._last = clock()
+        self._lock = threading.Lock()
+
+    def _refill(self, now: float) -> None:
+        self._tokens = min(self.burst,
+                           self._tokens + (now - self._last) * self.rate)
+        self._last = now
+
+    def acquire(self, nbytes: int) -> float:
+        """Block until ``nbytes`` tokens are available; returns wait seconds."""
+        waited = 0.0
+        while True:
+            with self._lock:
+                now = self._clock()
+                self._refill(now)
+                if self._tokens >= nbytes:
+                    self._tokens -= nbytes
+                    return waited
+                need = (nbytes - self._tokens) / self.rate
+            time.sleep(min(need, 0.05))
+            waited += need
+
+    def try_acquire(self, nbytes: int) -> bool:
+        with self._lock:
+            self._refill(self._clock())
+            if self._tokens >= nbytes:
+                self._tokens -= nbytes
+                return True
+            return False
+
+
+class WFQGate:
+    """Start-time fair queuing admission gate with a bounded window.
+
+    ``admit(tenant, nbytes)`` blocks until the request is scheduled and an
+    in-flight slot is free, then returns a ticket; ``done(ticket)`` frees
+    the slot.  Weights are set per tenant via ``set_tenant``.
+    """
+
+    def __init__(self, max_inflight: int = 16) -> None:
+        assert max_inflight >= 1
+        self.max_inflight = max_inflight
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._weights: dict[str, float] = {}
+        self._finish: dict[str, float] = {}   # per-tenant virtual finish tag
+        self._vtime = 0.0                     # virtual time = last start tag
+        self._inflight = 0
+        self._waiting: list[tuple[float, int]] = []   # heap of (S, seq)
+        self._seq = itertools.count()
+        self.admitted_bytes: dict[str, int] = {}
+
+    def set_tenant(self, name: str, weight: float = 1.0) -> None:
+        with self._lock:
+            assert weight > 0
+            self._weights[name] = float(weight)
+            self._finish.setdefault(name, 0.0)
+            self.admitted_bytes.setdefault(name, 0)
+
+    def admit(self, tenant: str, nbytes: int) -> tuple[float, int]:
+        with self._cond:
+            if tenant not in self._weights:
+                raise QoSError(f"unknown tenant {tenant!r}")
+            s_tag = max(self._vtime, self._finish[tenant])
+            self._finish[tenant] = s_tag + nbytes / self._weights[tenant]
+            seq = next(self._seq)
+            heapq.heappush(self._waiting, (s_tag, seq))
+            while not (self._inflight < self.max_inflight
+                       and self._waiting and self._waiting[0][1] == seq):
+                self._cond.wait(timeout=0.5)
+            heapq.heappop(self._waiting)
+            self._inflight += 1
+            self._vtime = max(self._vtime, s_tag)
+            self.admitted_bytes[tenant] += nbytes
+            self._cond.notify_all()
+            return (s_tag, seq)
+
+    def done(self, ticket) -> None:
+        with self._cond:
+            self._inflight -= 1
+            self._cond.notify_all()

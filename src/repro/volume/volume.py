@@ -1,0 +1,393 @@
+"""Striped multi-device volume manager (RAID-0, optional replication).
+
+Composes N ``BlockDevice`` shards — each the paper's full stack (transit
+cache over BTT over PMem) — into one logical LBA space:
+
+  * **striping**: logical stripe ``st = lba // stripe_blocks`` lives on
+    shard ``st % n_shards``; consecutive stripes rotate shards so a
+    sequential writer spreads over all PMem DIMM sets;
+  * **shared eviction pool**: one :class:`SharedEvictionPool` drains every
+    shard's write-back queue congestion-aware instead of per-device
+    thread pools;
+  * **global conditional bypass**: a write miss transits straight to BTT
+    when its shard's buffer is full (the paper's per-device rule) OR when
+    the volume's aggregate staged bytes cross ``bypass_watermark`` — under
+    volume-wide pressure the staging detour stops paying for itself
+    before any single shard is full;
+  * **per-tenant QoS**: token-bucket rate caps and weighted fair (SFQ)
+    admission, so many clients share one volume predictably;
+  * **crash recovery**: per-shard BTT Flog replay (device open) plus the
+    volume redo journal (:class:`VolumeJournal`) replayed in txid order —
+    multi-shard logical writes are all-or-nothing.
+
+Crash semantics: like any write-back device, writes are durable at
+``fsync``.  After a crash, a journaled multi-block write is either fully
+visible or fully invisible (never torn); un-fsynced single-block writes
+that landed *after* a journaled write to the same blocks may be rolled
+back to the journaled image when that journal record replays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import numpy as np
+
+from repro.core import make_device
+from repro.core.pmem import LatencyModel
+
+from .evict_pool import SharedEvictionPool
+from .journal import VolumeJournal
+from .qos import TenantSpec, TokenBucket, WFQGate
+
+_SB_MAGIC = "caiti-volume-v1"
+
+
+class VolumeConfig:
+    """Geometry + policy for a striped volume (kept explicit for the
+    superblock round-trip; all sizes in 4K blocks unless noted)."""
+
+    def __init__(self, *, n_lbas: int, n_shards: int = 4,
+                 stripe_blocks: int = 64, replicas: int = 1,
+                 policy: str = "caiti", block_size: int = 4096,
+                 cache_bytes: int = 64 << 20, shared_workers: int = 4,
+                 bypass_watermark: float = 0.9, journal_slots: int = 64,
+                 journal_span: int = 8, max_inflight: int = 16) -> None:
+        assert n_shards >= 1 and stripe_blocks >= 1
+        assert 1 <= replicas <= n_shards
+        assert policy not in ("raw", "dax"), \
+            "volume shards need BTT atomicity (journal + recovery)"
+        self.n_lbas = n_lbas
+        self.n_shards = n_shards
+        self.stripe_blocks = stripe_blocks
+        self.replicas = replicas
+        self.policy = policy
+        self.block_size = block_size
+        self.cache_bytes = cache_bytes
+        self.shared_workers = shared_workers
+        self.bypass_watermark = bypass_watermark
+        self.journal_slots = journal_slots
+        self.journal_span = journal_span
+        self.max_inflight = max_inflight
+
+    # derived geometry -------------------------------------------------------
+    @property
+    def n_stripes(self) -> int:
+        return -(-self.n_lbas // self.stripe_blocks)
+
+    @property
+    def rows_per_shard(self) -> int:
+        return -(-self.n_stripes // self.n_shards)
+
+    @property
+    def data_per_shard(self) -> int:
+        return self.rows_per_shard * self.stripe_blocks
+
+    def journal_blocks_per_shard(self) -> int:
+        slots_here = -(-self.journal_slots // self.n_shards)
+        return slots_here * (1 + self.journal_span)
+
+    @property
+    def meta_blocks(self) -> int:
+        return 1 + self.journal_blocks_per_shard()      # superblock + journal
+
+    @property
+    def shard_n_lbas(self) -> int:
+        return self.meta_blocks + self.data_per_shard * self.replicas
+
+    def to_sb(self, shard: int, uuid: str, applied_txid: int = 0) -> dict:
+        return {"magic": _SB_MAGIC, "uuid": uuid, "shard": shard,
+                "n_shards": self.n_shards, "n_lbas": self.n_lbas,
+                "stripe_blocks": self.stripe_blocks,
+                "replicas": self.replicas,
+                "journal_slots": self.journal_slots,
+                "journal_span": self.journal_span,
+                "applied_txid": applied_txid}
+
+
+class StripedVolume:
+    """The logical device: bio-free convenience API (write/read/flush/fsync)
+    mirroring ``BlockDevice`` plus ``write_multi`` (atomic) and tenants."""
+
+    def __init__(self, shards, cfg: VolumeConfig, *, uuid: str,
+                 evict_pool: SharedEvictionPool | None = None) -> None:
+        self.shards = list(shards)
+        self.cfg = cfg
+        self.uuid = uuid
+        self.block_size = cfg.block_size
+        self.n_lbas = cfg.n_lbas
+        self.pool = evict_pool
+        self._txlock = threading.Lock()
+        self._caches = [d.impl for d in self.shards
+                        if hasattr(d.impl, "bypass_hook")]
+        self._watermark_slots = max(1, int(
+            cfg.bypass_watermark
+            * sum(len(c._slots) for c in self._caches))) if self._caches \
+            else 0
+        for c in self._caches:
+            c.bypass_hook = self._over_watermark
+        self.journal = VolumeJournal(
+            [d.impl.btt for d in self.shards], base_lba=1,
+            n_slots=cfg.journal_slots, span=cfg.journal_span,
+            block_size=cfg.block_size)
+        # QoS (lazy: volumes without tenants pay nothing)
+        self._gate: WFQGate | None = None
+        self._buckets: dict[str, TokenBucket] = {}
+        self.recovery_stats: dict = {}
+
+    # -------------------------------------------------------------- mapping
+    def _map(self, lba: int, replica: int = 0) -> tuple[int, int]:
+        assert 0 <= lba < self.n_lbas, f"lba {lba} out of volume range"
+        cfg = self.cfg
+        st, within = divmod(lba, cfg.stripe_blocks)
+        row, shard = divmod(st, cfg.n_shards)
+        shard = (shard + replica) % cfg.n_shards
+        local = (cfg.meta_blocks + cfg.data_per_shard * replica
+                 + row * cfg.stripe_blocks + within)
+        return shard, local
+
+    def _over_watermark(self) -> bool:
+        staged = sum(c.staged_slots() for c in self._caches)
+        return staged >= self._watermark_slots
+
+    # ------------------------------------------------------------------ QoS
+    def add_tenant(self, name: str, weight: float = 1.0,
+                   rate_mbps: float = 0.0, burst_bytes: int = 4 << 20) -> None:
+        if self._gate is None:
+            self._gate = WFQGate(max_inflight=self.cfg.max_inflight)
+        self._gate.set_tenant(name, weight)
+        if rate_mbps > 0:
+            self._buckets[name] = TokenBucket(rate_mbps * 1e6,
+                                              burst_bytes=burst_bytes)
+
+    def _admit(self, tenant: str | None, nbytes: int):
+        if tenant is None or self._gate is None:
+            return None
+        bucket = self._buckets.get(tenant)
+        if bucket is not None:
+            bucket.acquire(nbytes)
+        return self._gate.admit(tenant, nbytes)
+
+    def _release(self, ticket) -> None:
+        if ticket is not None:
+            self._gate.done(ticket)
+
+    # ------------------------------------------------------------------ I/O
+    def _write_block(self, lba: int, data) -> None:
+        for r in range(self.cfg.replicas):
+            shard, local = self._map(lba, r)
+            self.shards[shard].write(local, data)
+
+    def write(self, lba: int, data, tenant: str | None = None) -> int:
+        """One-block write: atomic per shard BTT, no journaling needed."""
+        ticket = self._admit(tenant, self.block_size)
+        try:
+            self._write_block(lba, data)
+            return 0
+        finally:
+            self._release(ticket)
+
+    def write_multi(self, lba: int, blocks, tenant: str | None = None) -> int:
+        """Multi-block logical write with all-or-nothing crash semantics
+        per journal transaction (``journal_span`` blocks); longer writes
+        are split into consecutive atomic transactions."""
+        blocks = list(blocks)
+        ticket = self._admit(tenant, self.block_size * len(blocks))
+        try:
+            if len(blocks) == 1:
+                self._write_block(lba, blocks[0])
+                return 0
+            span = self.cfg.journal_span
+            for off in range(0, len(blocks), span):
+                self._write_tx(lba + off, blocks[off:off + span])
+            return 0
+        finally:
+            self._release(ticket)
+
+    def _write_tx(self, lba: int, blocks) -> None:
+        with self._txlock:
+            self.journal.log(lba, blocks,
+                             checkpoint_cb=self._checkpoint_locked)
+            for i, blk in enumerate(blocks):
+                self._write_block(lba + i, blk)
+
+    def read(self, lba: int, out: np.ndarray | None = None) -> np.ndarray:
+        shard, local = self._map(lba, 0)
+        return self.shards[shard].read(local, out=out)
+
+    def flush(self) -> int:
+        for d in self.shards:
+            d.flush()
+        return 0
+
+    def fsync(self) -> int:
+        """Drain every shard, then checkpoint the journal (all journaled
+        transactions are now durable in place)."""
+        with self._txlock:
+            self._checkpoint_locked()
+        return 0
+
+    def _checkpoint_locked(self, upto: int | None = None) -> None:
+        for d in self.shards:
+            d.fsync()
+        upto = self.journal.last_txid() if upto is None else upto
+        self.journal.mark_applied(upto)
+        self._write_superblocks()
+
+    # ------------------------------------------------------------- metadata
+    def _write_superblocks(self) -> None:
+        for i, d in enumerate(self.shards):
+            sb = self.cfg.to_sb(i, self.uuid,
+                                applied_txid=self.journal.applied_txid)
+            raw = json.dumps(sb).encode()
+            raw = raw + b"\x00" * (self.block_size - len(raw))
+            d.impl.btt.write(0, np.frombuffer(raw, np.uint8))
+            d.impl.btt.flush()
+
+    @staticmethod
+    def read_superblock(dev) -> dict | None:
+        raw = bytes(dev.impl.btt.read(0)).rstrip(b"\x00")
+        if not raw:
+            return None
+        try:
+            sb = json.loads(raw.decode())
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            return None
+        return sb if sb.get("magic") == _SB_MAGIC else None
+
+    # ------------------------------------------------------------- recovery
+    def recover(self) -> dict:
+        """Replay the volume journal (per-shard Flog replay already happened
+        when the shard devices were opened)."""
+        records = self.journal.scan()
+        for txid, lba, blocks in records:
+            for i, blk in enumerate(blocks):
+                for r in range(self.cfg.replicas):
+                    shard, local = self._map(lba + i, r)
+                    self.shards[shard].impl.btt.write(
+                        local, np.frombuffer(blk, np.uint8))
+        last = max([t for t, _, _ in records],
+                   default=self.journal.applied_txid)
+        self.journal.next_txid = max(self.journal.next_txid, last + 1)
+        self.journal.mark_applied(last)
+        for d in self.shards:
+            d.impl.btt.flush()
+        self._write_superblocks()
+        stats = {
+            "replayed_txs": len(records),
+            "shards": [getattr(d.impl.btt, "recovery_stats", {})
+                       for d in self.shards],
+        }
+        self.recovery_stats = stats
+        return stats
+
+    def scrub_replicas(self, sample_every: int = 1) -> int:
+        """Compare primary vs replica contents; returns mismatch count.
+        (Repair is a roadmap follow-on; this surfaces divergence.)"""
+        if self.cfg.replicas < 2:
+            return 0
+        mismatches = 0
+        for lba in range(0, self.n_lbas, sample_every):
+            shard, local = self._map(lba, 0)
+            want = bytes(self.shards[shard].impl.btt.read(local))
+            for r in range(1, self.cfg.replicas):
+                s2, l2 = self._map(lba, r)
+                if bytes(self.shards[s2].impl.btt.read(l2)) != want:
+                    mismatches += 1
+        return mismatches
+
+    # ---------------------------------------------------------------- stats
+    def occupancy(self) -> float:
+        if not self._caches:
+            return 0.0
+        return float(np.mean([d.occupancy() for d in self.shards]))
+
+    def metrics_snapshot(self) -> dict:
+        out = {"bypass_writes": 0, "bg_evictions": 0}
+        for d in self.shards:
+            snap = d.metrics.snapshot()["count"]
+            for k in out:
+                out[k] += snap.get(k, 0)
+        out["journal_txs"] = self.journal.last_txid()
+        out["applied_txid"] = self.journal.applied_txid
+        return out
+
+    def close(self) -> None:
+        self.fsync()
+        for d in self.shards:
+            d.close()
+        if self.pool is not None:
+            self.pool.close()
+
+
+def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
+                stripe_blocks: int = 64, replicas: int = 1,
+                block_size: int = 4096, cache_bytes: int = 64 << 20,
+                shared_workers: int = 4, bypass_watermark: float = 0.9,
+                journal_slots: int = 64, journal_span: int = 8,
+                backend: str = "ram", path: str | None = None,
+                latency: LatencyModel | None = None,
+                tenants: list[TenantSpec] | None = None,
+                nfree: int | None = None,
+                max_inflight: int = 16) -> StripedVolume:
+    """Build (or reopen + recover) a striped volume.
+
+    ``path`` is a prefix for file-backed shards (``{path}.shard{i}``); a
+    prefix whose shard files already carry volume superblocks is RECOVERED
+    (per-shard Flog replay + volume journal replay), not re-formatted.
+    """
+    cfg = VolumeConfig(n_lbas=n_lbas, n_shards=n_shards,
+                       stripe_blocks=stripe_blocks, replicas=replicas,
+                       policy=policy, block_size=block_size,
+                       cache_bytes=cache_bytes, shared_workers=shared_workers,
+                       bypass_watermark=bypass_watermark,
+                       journal_slots=journal_slots, journal_span=journal_span,
+                       max_inflight=max_inflight)
+    paths = [None] * n_shards
+    if backend == "file":
+        assert path is not None, "file backend needs a path prefix"
+        paths = [f"{path}.shard{i}" for i in range(n_shards)]
+    pool = SharedEvictionPool(shared_workers, name="vol") \
+        if policy.startswith("caiti") else None
+    shards = []
+    per_shard_cache = max(block_size, cache_bytes // n_shards)
+    for i in range(n_shards):
+        shards.append(make_device(
+            policy, n_lbas=cfg.shard_n_lbas, block_size=block_size,
+            cache_bytes=per_shard_cache, backend=backend, path=paths[i],
+            latency=latency, nfree=nfree, evict_pool=pool))
+
+    sbs = [StripedVolume.read_superblock(d) for d in shards]
+    existing = all(sb is not None for sb in sbs)
+    # a PARTIAL member set is a damaged volume, never a fresh one:
+    # re-formatting would silently orphan the surviving shards' data
+    assert existing or not any(sb is not None for sb in sbs), \
+        "volume member missing/damaged: shards without superblock " \
+        f"{[i for i, sb in enumerate(sbs) if sb is None]}"
+    if existing:
+        # geometry + membership must agree before we trust the stripes
+        uuids = {sb["uuid"] for sb in sbs}
+        assert len(uuids) == 1, f"mixed volumes: {uuids}"
+        for i, sb in enumerate(sbs):
+            assert sb["shard"] == i, f"shard {i} holds member {sb['shard']}"
+            want = cfg.to_sb(i, sb["uuid"])
+            mismatch = [k for k in ("n_shards", "n_lbas", "stripe_blocks",
+                                    "replicas", "journal_slots",
+                                    "journal_span")
+                        if sb.get(k) != want[k]]
+            assert not mismatch, \
+                f"geometry mismatch on shard {i}: {mismatch}"
+        vol = StripedVolume(shards, cfg, uuid=sbs[0]["uuid"], evict_pool=pool)
+        vol.journal.applied_txid = max(sb.get("applied_txid", 0)
+                                       for sb in sbs)
+        vol.journal.next_txid = vol.journal.applied_txid + 1
+        vol.recover()
+    else:
+        uuid = os.urandom(8).hex()
+        vol = StripedVolume(shards, cfg, uuid=uuid, evict_pool=pool)
+        vol._write_superblocks()
+    for t in (tenants or []):
+        vol.add_tenant(t.name, weight=t.weight, rate_mbps=t.rate_mbps,
+                       burst_bytes=t.burst_bytes)
+    return vol

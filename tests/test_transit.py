@@ -1,0 +1,106 @@
+"""TransitBuffer edge paths: the no-bypass blocking branch, sink-error
+propagation through flush(), and close() after errors (previously
+untested)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import TransitBuffer
+
+
+def test_nobypass_put_blocks_until_drain():
+    """With bypass disabled, put() on a full buffer must BLOCK until the
+    background drain frees capacity — never invoke the sink inline."""
+    sunk = []
+    gate = threading.Event()
+
+    def slow_sink(item):
+        gate.wait(5.0)
+        sunk.append(item)
+
+    tb = TransitBuffer(slow_sink, capacity_bytes=100, n_workers=1,
+                       eager=True, bypass=False)
+    tb.put("a", 60)                       # fits; worker blocks on gate
+    done = threading.Event()
+
+    def overfill():
+        tb.put("b", 60)                   # 60+60 > 100: must wait
+        done.set()
+
+    t = threading.Thread(target=overfill, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    assert not done.is_set(), "put must block while the buffer is full"
+    assert tb.staged_bytes() == 60        # nothing bypassed inline
+    gate.set()                            # drain proceeds, capacity frees
+    assert done.wait(5.0)
+    tb.flush()
+    assert sorted(sunk) == ["a", "b"]
+    assert tb.metrics.count.get("bypass_writes", 0) == 0
+    tb.close()
+
+
+def test_bypass_sinks_inline_when_full():
+    gate = threading.Event()
+    sunk = []
+
+    def slow_sink(item):
+        if item == "slow":
+            gate.wait(5.0)
+        sunk.append(item)
+
+    tb = TransitBuffer(slow_sink, capacity_bytes=100, n_workers=1,
+                       eager=True, bypass=True)
+    tb.put("slow", 80)
+    assert tb.put("b", 80) == "bypass"    # full -> sunk synchronously
+    assert "b" in sunk                    # inline, before any drain
+    assert tb.metrics.count["bypass_writes"] == 1
+    gate.set()
+    tb.close()
+
+
+def test_flush_raises_sink_error_once():
+    def sink(item):
+        if item == "bad":
+            raise ValueError("sink exploded")
+
+    tb = TransitBuffer(sink, capacity_bytes=1 << 20, n_workers=2)
+    tb.put("ok", 10)
+    tb.put("bad", 10)
+    with pytest.raises(ValueError, match="sink exploded"):
+        tb.flush()
+    # the error was consumed: the buffer is usable again afterwards
+    tb.put("ok2", 10)
+    tb.flush()
+    tb.close()
+
+
+def test_close_after_error_propagates_then_recovers():
+    fail = {"on": True}
+
+    def sink(item):
+        if fail["on"]:
+            raise RuntimeError("still broken")
+
+    tb = TransitBuffer(sink, capacity_bytes=1 << 20, n_workers=1)
+    tb.put("x", 10)
+    with pytest.raises(RuntimeError):
+        tb.close()                        # close -> flush -> surfaced error
+    fail["on"] = False
+    tb.close()                            # errors drained: clean shutdown
+    for w in tb._workers:
+        assert not w.is_alive()
+
+
+def test_lazy_mode_defers_sink_until_flush():
+    sunk = []
+    tb = TransitBuffer(sunk.append, capacity_bytes=1 << 20, n_workers=1,
+                       eager=False)
+    for i in range(5):
+        tb.put(i, 10)
+    time.sleep(0.05)
+    assert sunk == []                     # nothing transits before flush
+    tb.flush()
+    assert sorted(sunk) == [0, 1, 2, 3, 4]
+    tb.close()

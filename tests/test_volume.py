@@ -1,0 +1,384 @@
+"""Striped volume manager: striping, shared eviction pool, global bypass,
+QoS, and — the acceptance core — cross-shard write atomicity after a
+simulated crash (torn multi-shard writes never surface on read)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SimulatedCrash
+from repro.core.sim import run_volume_sim_workload
+from repro.volume import (SharedEvictionPool, TenantSpec, TokenBucket,
+                          WFQGate, make_volume)
+
+
+def _blk(x: int) -> bytes:
+    return bytes([x % 256]) * 4096
+
+
+# ------------------------------------------------------------ functional
+def test_striping_read_your_writes():
+    vol = make_volume("caiti", n_lbas=2048, n_shards=4, stripe_blocks=4,
+                      cache_bytes=64 * 4096)
+    try:
+        for lba in range(0, 2048, 11):
+            vol.write(lba, _blk(lba + 1))
+        for lba in range(0, 2048, 11):
+            assert bytes(vol.read(lba)) == _blk(lba + 1), lba
+        vol.fsync()
+        # every shard's BTT must have taken real writes (striping spreads)
+        for d in vol.shards:
+            assert d.impl.btt.writes > 0
+        for lba in range(0, 2048, 11):
+            assert bytes(vol.read(lba)) == _blk(lba + 1), lba
+    finally:
+        vol.close()
+
+
+def test_write_multi_roundtrip_spans_shards():
+    vol = make_volume("caiti", n_lbas=1024, n_shards=4, stripe_blocks=1,
+                      cache_bytes=64 * 4096)
+    try:
+        blocks = [_blk(40 + i) for i in range(8)]
+        vol.write_multi(100, blocks)          # stripe_blocks=1: 8 shard hops
+        for i in range(8):
+            assert bytes(vol.read(100 + i)) == _blk(40 + i)
+        assert vol.journal.last_txid() >= 1
+    finally:
+        vol.close()
+
+
+def test_shared_pool_drains_all_shards():
+    vol = make_volume("caiti", n_lbas=1024, n_shards=4, stripe_blocks=2,
+                      cache_bytes=1024 * 4096, shared_workers=2)
+    try:
+        # shards must NOT own private eviction threads
+        for d in vol.shards:
+            assert d.impl._workers == []
+        assert isinstance(vol.pool, SharedEvictionPool)
+        for lba in range(256):
+            vol.write(lba, _blk(lba))
+        for _ in range(300):
+            if vol.occupancy() == 0.0:
+                break
+            time.sleep(0.01)
+        assert vol.occupancy() == 0.0        # eager eviction drained
+        snap = vol.metrics_snapshot()
+        assert snap["bg_evictions"] + snap["bypass_writes"] >= 256
+        assert snap["bg_evictions"] > 0
+    finally:
+        vol.close()
+
+
+def test_global_bypass_watermark_trips_before_local_full():
+    # no eager eviction -> staged bytes only grow, so the volume watermark
+    # (25%) trips long before any single shard's cache is full
+    vol = make_volume("caiti-noee", n_lbas=4096, n_shards=4,
+                      stripe_blocks=2, cache_bytes=256 * 4096,
+                      bypass_watermark=0.25)
+    try:
+        for lba in range(128):
+            vol.write(lba, _blk(lba))
+        snap = vol.metrics_snapshot()
+        assert snap["bypass_writes"] > 0
+        # and no shard ever filled locally
+        for d in vol.shards:
+            assert d.impl.staged_slots() < len(d.impl._slots)
+    finally:
+        vol.close()
+
+
+def test_replication_scrub_clean():
+    vol = make_volume("caiti", n_lbas=512, n_shards=4, replicas=2,
+                      cache_bytes=64 * 4096)
+    try:
+        for lba in range(0, 512, 5):
+            vol.write(lba, _blk(lba + 7))
+        vol.fsync()
+        assert vol.scrub_replicas(5) == 0
+        # replica really lives on a different shard
+        s0, _ = vol._map(0, 0)
+        s1, _ = vol._map(0, 1)
+        assert s0 != s1
+    finally:
+        vol.close()
+
+
+# ------------------------------------------------------- crash atomicity
+def _crash_on_nth_write(pmem, n):
+    state = {"count": 0}
+
+    def hook(label):
+        if label == "pmem_write_begin":
+            state["count"] += 1
+            if state["count"] == n:
+                raise SimulatedCrash(label)
+
+    pmem.crash_hook = hook
+    return state
+
+
+def _reopen(path, **kw):
+    return make_volume("btt", n_lbas=256, n_shards=4, stripe_blocks=1,
+                       backend="file", path=path, **kw)
+
+
+def test_torn_multishard_write_rolls_forward(tmp_path):
+    """Crash mid in-place phase, AFTER the journal header committed: the
+    write must be fully visible after recovery (roll forward)."""
+    path = str(tmp_path / "vol")
+    vol = _reopen(path)
+    base = [_blk(1 + i) for i in range(4)]
+    vol.write_multi(8, base)                       # lbas 8..11, shards 0..3
+    vol.fsync()
+    # in-place writes start after journal commit; lba 9's home shard sees
+    # exactly one write for this tx — crash there, leaving lba 8 new and
+    # lbas 9..11 old (a torn multi-shard write)
+    new = [_blk(101 + i) for i in range(4)]
+    shard2, _ = vol._map(9, 0)                     # 2nd block's home shard
+    _crash_on_nth_write(vol.shards[shard2].impl.btt.pmem, 1)
+    with pytest.raises(SimulatedCrash):
+        vol.write_multi(8, new)
+    # "power loss": abandon the torn volume, reopen from the files
+    for d in vol.shards:
+        d.impl.btt.pmem.crash_hook = None
+    vol2 = _reopen(path)
+    assert vol2.recovery_stats["replayed_txs"] >= 1
+    got = [bytes(vol2.read(8 + i)) for i in range(4)]
+    assert got == new, "journaled write must be rolled forward whole"
+    vol2.close()
+
+
+def test_torn_journal_write_is_invisible(tmp_path):
+    """Crash BEFORE the journal header lands: the old data must remain
+    fully intact on every shard (the write never happened)."""
+    path = str(tmp_path / "vol")
+    vol = _reopen(path)
+    base = [_blk(21 + i) for i in range(4)]
+    vol.write_multi(16, base)
+    vol.fsync()
+    # next tx journals on slot (txid % 64); its payload writes hit the
+    # journal shard's BTT first — crash on the first of them
+    txid = vol.journal.next_txid
+    jshard, _ = vol.journal._slot_home(txid % vol.journal.n_slots)
+    _crash_on_nth_write(vol.shards[jshard].impl.btt.pmem, 1)
+    with pytest.raises(SimulatedCrash):
+        vol.write_multi(16, [_blk(201 + i) for i in range(4)])
+    for d in vol.shards:
+        d.impl.btt.pmem.crash_hook = None
+    vol2 = _reopen(path)
+    got = [bytes(vol2.read(16 + i)) for i in range(4)]
+    assert got == base, "uncommitted tx must be invisible (old data whole)"
+    vol2.close()
+
+
+def test_ring_wrap_checkpoint_still_replays_current_tx(tmp_path):
+    """Regression: the wrap-time checkpoint must mark applied STRICTLY
+    below the wrapping txid — a crash mid in-place of that tx must still
+    roll forward (not be skipped as 'already applied')."""
+    path = str(tmp_path / "vol")
+    vol = make_volume("btt", n_lbas=256, n_shards=4, stripe_blocks=1,
+                      backend="file", path=path, journal_slots=4)
+    for k in range(4):                             # fill the 4-slot ring
+        vol.write_multi(8, [_blk(k)] * 4)
+    # tx 5 wraps onto tx 1's slot -> checkpoint fires (one superblock
+    # write on every shard), then journal (slot home = shard 1), then
+    # in-place: lba 10's shard sees superblock (1st) + in-place (2nd)
+    shard2, _ = vol._map(10, 0)
+    assert vol.journal._slot_home(5 % 4)[0] != shard2
+    _crash_on_nth_write(vol.shards[shard2].impl.btt.pmem, 2)
+    with pytest.raises(SimulatedCrash):
+        vol.write_multi(8, [_blk(50 + i) for i in range(4)])
+    for d in vol.shards:
+        d.impl.btt.pmem.crash_hook = None
+    vol2 = make_volume("btt", n_lbas=256, n_shards=4, stripe_blocks=1,
+                       backend="file", path=path, journal_slots=4)
+    assert vol2.recovery_stats["replayed_txs"] >= 1
+    got = [bytes(vol2.read(8 + i)) for i in range(4)]
+    assert got == [_blk(50 + i) for i in range(4)]
+    vol2.close()
+
+
+def test_fsync_checkpoint_skips_replay(tmp_path):
+    """After fsync, journal records are checkpointed: recovery must not
+    clobber a later (also fsynced) single-block overwrite."""
+    path = str(tmp_path / "vol")
+    vol = _reopen(path)
+    vol.write_multi(8, [_blk(1 + i) for i in range(4)])
+    vol.fsync()                                    # checkpoint: applied_txid
+    vol.write(9, _blk(99))                         # later overwrite
+    vol.fsync()
+    vol2 = _reopen(path)
+    assert vol2.recovery_stats["replayed_txs"] == 0
+    assert bytes(vol2.read(9)) == _blk(99)
+    vol2.close()
+
+
+def test_reopen_geometry_mismatch_rejected(tmp_path):
+    path = str(tmp_path / "vol")
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                      backend="file", path=path)
+    vol.close()
+    with pytest.raises(AssertionError, match="stripe_blocks"):
+        make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=4,
+                    backend="file", path=path)
+    # journal geometry shifts the data region too — must also be rejected
+    with pytest.raises(AssertionError, match="journal_span"):
+        make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                    journal_span=2, backend="file", path=path)
+
+
+def test_reopen_missing_member_rejected(tmp_path):
+    """A shard file without a superblock is a damaged volume, never a
+    fresh one — re-formatting would orphan the surviving shards."""
+    import os
+    path = str(tmp_path / "vol")
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                      backend="file", path=path)
+    vol.write(0, _blk(5))
+    vol.close()
+    os.remove(path + ".shard1")
+    with pytest.raises(AssertionError, match="member missing"):
+        make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                    backend="file", path=path)
+
+
+def test_caiti_volume_crash_recovery(tmp_path):
+    """Caiti shards (staged writes) + abrupt abandonment: journal replay
+    restores every journaled write after reopen."""
+    path = str(tmp_path / "vol")
+    vol = make_volume("caiti", n_lbas=512, n_shards=3, stripe_blocks=2,
+                      cache_bytes=64 * 4096, backend="file", path=path)
+    vol.write_multi(10, [_blk(31 + i) for i in range(6)])
+    # crash BEFORE fsync: staged copies may not have reached BTT, but the
+    # journal committed first — flush mmaps (power loss keeps media state)
+    for d in vol.shards:
+        d.impl.btt.pmem.persist()
+    del vol                                        # no close(): no drain
+    vol2 = make_volume("caiti", n_lbas=512, n_shards=3, stripe_blocks=2,
+                       cache_bytes=64 * 4096, backend="file", path=path)
+    got = [bytes(vol2.read(10 + i)) for i in range(6)]
+    assert got == [_blk(31 + i) for i in range(6)]
+    vol2.close()
+
+
+# ---------------------------------------------------------------- QoS
+def test_token_bucket_caps_rate():
+    tb = TokenBucket(rate_bytes_s=1e6, burst_bytes=4096)
+    assert tb.acquire(4096) == 0.0                 # burst covers the first
+    t0 = time.perf_counter()
+    tb.acquire(4096)                               # must wait ~4.1ms refill
+    assert time.perf_counter() - t0 > 0.002
+    assert not tb.try_acquire(4096)
+
+
+def test_wfq_gate_admits_by_start_tag():
+    gate = WFQGate(max_inflight=1)
+    gate.set_tenant("a", weight=2.0)
+    gate.set_tenant("b", weight=1.0)
+    first = gate.admit("a", 100)        # occupies the slot; F_a = 50
+    order = []
+
+    def waiter(name):
+        t = gate.admit(name, 100)
+        order.append(name)
+        gate.done(t)
+
+    # a's next tag is 50, b's is 0 -> b must win the freed slot
+    ta = threading.Thread(target=waiter, args=("a",))
+    ta.start()
+    time.sleep(0.05)
+    tb_ = threading.Thread(target=waiter, args=("b",))
+    tb_.start()
+    time.sleep(0.05)
+    gate.done(first)
+    ta.join(timeout=5)
+    tb_.join(timeout=5)
+    assert order == ["b", "a"]
+
+
+def test_volume_qos_threaded_smoke():
+    vol = make_volume("caiti", n_lbas=1024, n_shards=2,
+                      cache_bytes=32 * 4096,
+                      tenants=[TenantSpec("a", weight=2.0),
+                               TenantSpec("b", rate_mbps=200.0)])
+    try:
+        for i in range(64):
+            vol.write(i, _blk(i), tenant="a")
+            vol.write(512 + i, _blk(i), tenant="b")
+        assert vol._gate.admitted_bytes["a"] == 64 * 4096
+    finally:
+        vol.close()
+
+
+# ------------------------------------------------------- simulator claims
+def _tenants(n, ops):
+    return [{"name": f"t{j}", "n_ops": ops} for j in range(n)]
+
+
+def test_sim_4shard_caiti_2x_single_device():
+    """ACCEPTANCE: 4-shard Caiti volume sustains >= 2x the aggregate write
+    throughput of single-device Caiti under a 4-tenant fio-like load."""
+    kw = dict(n_lbas=262144, cache_slots=8192, n_workers=16,
+              tenants=_tenants(4, 4000))
+    r1 = run_volume_sim_workload("caiti", n_shards=1, **kw)
+    r4 = run_volume_sim_workload("caiti", n_shards=4, **kw)
+    assert r4["agg_mb_s"] >= 2.0 * r1["agg_mb_s"], \
+        (r1["agg_mb_s"], r4["agg_mb_s"])
+
+
+def test_sim_volume_caiti_beats_staging_baselines():
+    kw = dict(n_shards=4, n_lbas=262144, cache_slots=4096, n_workers=16,
+              tenants=_tenants(4, 3000))
+    caiti = run_volume_sim_workload("caiti", **kw)["makespan_us"]
+    for p in ("pmbd", "lru", "coactive"):
+        assert caiti < run_volume_sim_workload(p, **kw)["makespan_us"], p
+
+
+def test_sim_wfq_weights_divide_contended_throughput():
+    tw = [{"name": "hi", "n_ops": 6000, "weight": 2.0, "jobs": 8},
+          {"name": "lo", "n_ops": 6000, "weight": 1.0, "jobs": 8}]
+    r = run_volume_sim_workload("caiti", n_shards=2, n_lbas=262144,
+                                cache_slots=1024, tenants=tw,
+                                qdepth=4, n_workers=4)
+    hi = r["per_tenant"]["hi"]["contended_mb_s"]
+    lo = r["per_tenant"]["lo"]["contended_mb_s"]
+    assert 1.6 < hi / lo < 2.4, hi / lo
+
+
+def test_sim_token_bucket_caps_tenant():
+    ts = [{"name": "capped", "n_ops": 3000, "rate_mbps": 50.0},
+          {"name": "free", "n_ops": 6000}]
+    r = run_volume_sim_workload("caiti", n_shards=2, n_lbas=262144,
+                                cache_slots=2048, tenants=ts)
+    assert r["per_tenant"]["capped"]["mb_s"] <= 50.0 * 1.15
+    assert r["per_tenant"]["free"]["mb_s"] > 500.0
+
+
+def test_sim_watermark_increases_bypass():
+    kw = dict(n_shards=4, n_lbas=262144, cache_slots=1024, n_workers=8,
+              tenants=_tenants(4, 4000))
+    low = run_volume_sim_workload("caiti", watermark=0.5, **kw)
+    off = run_volume_sim_workload("caiti", watermark=1.0, **kw)
+    assert low["bypass_rate"] > off["bypass_rate"]
+
+
+# ------------------------------------------------------- ckpt integration
+def test_sharded_blockstore_roundtrip(tmp_path):
+    from repro.ckpt.blockstore import make_blockstore
+    path = str(tmp_path / "store")
+    st = make_blockstore(path, policy="caiti", capacity_bytes=16 << 20,
+                         cache_bytes=4 << 20, n_shards=3)
+    payload = np.random.default_rng(0).integers(
+        0, 256, size=100_000, dtype=np.uint8).tobytes()
+    st.put("x", payload)
+    st.put("y", b"tiny")
+    gen = st.commit()
+    st.close()
+    st2 = make_blockstore(path, policy="caiti", capacity_bytes=16 << 20,
+                          cache_bytes=4 << 20, n_shards=3)
+    assert st2.generation == gen
+    assert st2.get("x") == payload
+    assert st2.get("y") == b"tiny"
+    st2.close()
