@@ -90,10 +90,14 @@ def run_random_writes(dev, *, n_ops: int, n_lbas: int, jobs: int = 1,
     wall = time.perf_counter() - t0
     if errs:
         raise errs[0]
-    return {"wall_s": wall, "ops": n_ops,
-            "mb_s": n_ops * 4096 / wall / 1e6,
-            "us_per_op": wall / n_ops * 1e6,
-            "bypass_rate": bypass_rate(dev, n_ops)}
+    res = {"wall_s": wall, "ops": n_ops,
+           "mb_s": n_ops * 4096 / wall / 1e6,
+           "us_per_op": wall / n_ops * 1e6,
+           "bypass_rate": bypass_rate(dev, n_ops)}
+    if read_frac and hasattr(dev, "metrics"):
+        # layered read path summary (transit/tier/backend split)
+        res["read_path"] = dev.metrics.read_path()
+    return res
 
 
 def fmt_row(name: str, res: dict, extra: str = "") -> str:
@@ -116,11 +120,16 @@ def bypass_rate(dev, n_writes: int) -> float:
 
 def fmt_volume_row(name: str, res: dict) -> str:
     """One line per policy/config for volume runs: the paper-style
-    breakdown plus the volume columns (bypass rate, per-tenant MB/s)."""
+    breakdown plus the volume columns (bypass rate, read-tier hit rate,
+    degraded reads, per-tenant MB/s)."""
     s = (f"{name:14s} makespan={res['makespan_us']/1e6:8.3f}s "
          f"agg={res['agg_mb_s']:8.1f} MB/s "
          f"bypass={res['bypass_rate']*100:5.1f}% "
          f"stalls={res['counts'].get('stalls', 0):5d}")
+    if res.get("tier_hit_rate"):
+        s += f" tier={res['tier_hit_rate']*100:5.1f}%"
+    if res.get("degraded_reads"):
+        s += f" degraded={res['degraded_reads']:d}"
     tenants = res.get("per_tenant", {})
     if tenants:
         cols = " ".join(

@@ -9,6 +9,9 @@ Extends the paper's single-device tables to the volume manager:
                      aggregate throughput/latency)
   --table qos        weighted fair shares + a rate-capped tenant
   --table policies   policy comparison on the same 4-shard volume
+  --table readmix    YCSB-B (95/5) / YCSB-C (100/0) style read-heavy
+                     mixes, read tier on vs off, plus a degraded-read
+                     (replica fallback) injection row
 
 Primary engine: ``repro.core.sim.run_volume_sim_workload`` (deterministic
 virtual time; same cost model as fio_like.py, printed with every table).
@@ -117,6 +120,37 @@ def policies(n_ops: int = OPS) -> dict:
     return out
 
 
+def readmix(n_ops: int = 6000) -> dict:
+    """Read-heavy serving mixes: zipfian addresses (YCSB-style), read
+    tier on/off, and a row with injected primary-verification failures
+    (every 50th backend read detours to a replica shard)."""
+    print("# read-heavy mixes, 2-shard caiti volume, zipf(1.1) addresses, "
+          "8192 tier slots (tier columns via benchmarks/common.py)")
+    out = {}
+    mixes = (("ycsb-b 95/5", 0.95), ("ycsb-c 100/0", 1.0),
+             ("90/10", 0.90))
+    for name, rf in mixes:
+        base = None
+        for label, slots in (("no tier", 0), ("tier", 8192)):
+            r = run_volume_sim_workload(
+                "caiti", n_shards=2, n_lbas=16384, cache_slots=2048,
+                n_workers=8, read_frac=rf, lba_dist="zipf", zipf_theta=1.1,
+                tier_slots=slots, tenants=_tenants(4, n_ops))
+            out[f"{name} {label}"] = {"agg_mb_s": r["agg_mb_s"],
+                                      "tier_hit_rate": r["tier_hit_rate"]}
+            base = base or r["agg_mb_s"]
+            print(fmt_volume_row(f"{name[:10]} {label}", r) +
+                  f"  ({r['agg_mb_s'] / base:.2f}x vs no tier)")
+    r = run_volume_sim_workload(
+        "caiti", n_shards=2, n_lbas=16384, cache_slots=2048, n_workers=8,
+        read_frac=0.95, lba_dist="zipf", zipf_theta=1.1, tier_slots=8192,
+        degraded_every=50, tenants=_tenants(4, n_ops))
+    out["95/5 tier degraded"] = {"agg_mb_s": r["agg_mb_s"],
+                                 "degraded_reads": r["degraded_reads"]}
+    print(fmt_volume_row("95/5 degr/50", r))
+    return out
+
+
 def real(n_ops: int = 2000) -> dict:
     """Threaded volume on the container (functional validation only)."""
     from repro.volume import make_volume
@@ -136,7 +170,7 @@ def real(n_ops: int = 2000) -> dict:
 
 
 TABLES = {"shards": shards, "tenants": tenants, "watermark": watermark,
-          "qos": qos, "policies": policies}
+          "qos": qos, "policies": policies, "readmix": readmix}
 
 
 def main() -> None:

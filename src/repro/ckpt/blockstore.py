@@ -150,20 +150,24 @@ def make_blockstore(path: str | None = None, *, policy: str = "caiti",
                     capacity_bytes: int = 1 << 30, block_size: int = 4096,
                     cache_bytes: int = 64 << 20,
                     latency: LatencyModel | None = None,
-                    n_shards: int = 1) -> BlockStore:
+                    n_shards: int = 1,
+                    read_tier_bytes: int = 0) -> BlockStore:
     """``n_shards > 1`` stripes the store over a multi-device volume:
     checkpoint blocks spread across all shards' PMem (aggregate bandwidth)
-    and multi-block puts ride the volume journal."""
+    and multi-block puts ride the volume journal.  ``read_tier_bytes > 0``
+    fronts the device(s) with a clean DRAM read tier — the restore path
+    (``get`` walking manifest + chunk blocks) re-reads hot metadata blocks
+    through DRAM instead of PMem."""
     n_lbas = capacity_bytes // block_size
     if n_shards > 1:
         from repro.volume import make_volume
         dev = make_volume(policy, n_lbas=n_lbas, n_shards=n_shards,
                           block_size=block_size, cache_bytes=cache_bytes,
                           backend="file" if path else "ram", path=path,
-                          latency=latency)
+                          latency=latency, read_tier_bytes=read_tier_bytes)
     else:
         dev = make_device(policy, n_lbas=n_lbas, block_size=block_size,
                           cache_bytes=cache_bytes,
                           backend="file" if path else "ram", path=path,
-                          latency=latency)
+                          latency=latency, read_tier_bytes=read_tier_bytes)
     return BlockStore(dev, n_lbas)

@@ -15,7 +15,13 @@ Write policies (§4.3.1, Algorithm 1):
     to BTT (one PMem write beats evict-then-fill = PMem write + DRAM write).
 
 Reading policy (§4.3.2): serve Valid/Evicting hits from DRAM, redirect misses
-to BTT, never allocate on read miss (writes are prioritized).
+to BTT, never allocate on read miss (writes are prioritized).  An optional
+``read_tier`` (``repro.volume.ReadTier``) layers a *clean* DRAM read cache
+under the transit cache: probed after a transit miss, filled from the BTT
+read (fenced against racing writes), re-populated by eviction writebacks,
+and invalidated by every write before it stages — the transit cache keeps
+the write path exactly as the paper specifies, the tier only shortens the
+read-miss path.
 
 Locking discipline (deadlock-free order): a foreground thread takes
 ``set.lock`` only for table/WBQ surgery and *releases it before* taking
@@ -94,16 +100,21 @@ class CaitiCache:
     paper's conditional bypass with a *global* condition: when the hook
     returns True a write miss transits straight to BTT even though this
     shard still has free slots (the volume's aggregate-staged watermark).
+    ``read_tier`` (optional, possibly shared across shards) serves read
+    misses from clean DRAM slots; ``tier_ns`` namespaces this device's
+    lbas inside a shared tier (the volume passes its shard index).
     """
 
     def __init__(self, btt: BTT, cfg: CaitiConfig | None = None,
                  metrics: Metrics | None = None, evict_pool=None,
-                 bypass_hook=None) -> None:
+                 bypass_hook=None, read_tier=None, tier_ns: int = 0) -> None:
         self.btt = btt
         self.cfg = cfg or CaitiConfig(block_size=btt.block_size)
         assert self.cfg.block_size == btt.block_size
         self.metrics = metrics or Metrics()
         self.bypass_hook = bypass_hook
+        self.read_tier = read_tier
+        self.tier_ns = tier_ns
         n = self.cfg.n_slots
         self._buf = np.zeros((n, self.cfg.block_size), dtype=np.uint8)
         self._slots = [SlotHeader(i) for i in range(n)]
@@ -167,6 +178,10 @@ class CaitiCache:
     def write(self, lba: int, data) -> int:
         t_req = time.perf_counter_ns()
         src = np.frombuffer(data, dtype=np.uint8)
+        # writes invalidate the clean read tier FIRST (fence in-flight
+        # fills), then stage; the eviction writeback re-populates it
+        if self.read_tier is not None:
+            self.read_tier.invalidate((self.tier_ns, lba))
         while True:
             t0 = time.perf_counter_ns()
             cs = self._set_for(lba)                       # L1: hash -> set
@@ -201,6 +216,12 @@ class CaitiCache:
                     # L20-22: cache full -> transit straight to PMem
                     with self.metrics.timer("conditional_bypass"):
                         self.btt.write(lba, src)
+                    # second fence: a reader that prepared a fill between
+                    # the head-of-write invalidate and this BTT write may
+                    # hold the old block — no eviction will fix it, so
+                    # invalidate again now the new data is on media
+                    if self.read_tier is not None:
+                        self.read_tier.invalidate((self.tier_ns, lba))
                     self.metrics.bump("bypass_writes")
                     self.metrics.record_latency(time.perf_counter_ns() - t_req)
                     return 0
@@ -258,8 +279,19 @@ class CaitiCache:
                         out[:] = self._buf[sh.idx]
                         return out
                     return self._buf[sh.idx].copy()
+        tier = self.read_tier
+        if tier is not None:
+            key = (self.tier_ns, lba)
+            hit = tier.lookup(key, out=out)
+            if hit is not None:
+                self.metrics.bump("read_tier_hits")
+                return hit
+            token = tier.prepare(key)      # fence the fill against writes
         self.metrics.bump("read_misses")
-        return self.btt.read(lba, out=out)
+        data = self.btt.read(lba, out=out)
+        if tier is not None and tier.insert(key, data, token=token):
+            self.metrics.bump("read_tier_fills")
+        return data
 
     # ----------------------------------------------------------- eviction
     def _evict_worker(self) -> None:
@@ -289,6 +321,14 @@ class CaitiCache:
             # hold the slot lock across the persist: a racing writer/reader of
             # this lba waits for BTT completion (block-level atomicity intact)
             self.btt.write(lba, self._buf[sh.idx])
+            if self.read_tier is not None:
+                # writeback population: the block leaves the transit cache
+                # but stays warm in the clean tier.  Invalidate first so a
+                # reader's in-flight stale fill is fenced off, then install
+                # the authoritative just-persisted image.
+                key = (self.tier_ns, lba)
+                self.read_tier.invalidate(key)
+                self.read_tier.insert(key, self._buf[sh.idx])
             with cs.lock:
                 if cs.table.get(lba) is sh:
                     del cs.table[lba]

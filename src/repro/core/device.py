@@ -145,7 +145,8 @@ def make_device(policy: str, *, n_lbas: int, block_size: int = 4096,
                 latency: LatencyModel | None = None,
                 n_workers: int = 4, nfree: int | None = None,
                 record_latencies: bool = False,
-                evict_pool=None) -> BlockDevice:
+                evict_pool=None, read_tier=None, read_tier_bytes: int = 0,
+                tier_ns: int = 0) -> BlockDevice:
     """Build a complete device stack for the given policy name.
 
     A file-backed pool that already carries a BTT info block is RECOVERED
@@ -154,7 +155,11 @@ def make_device(policy: str, *, n_lbas: int, block_size: int = 4096,
 
     ``evict_pool`` (caiti policies only) hands background eviction to a
     shared cross-device pool (see ``repro.volume.SharedEvictionPool``)
-    instead of private worker threads.
+    instead of private worker threads.  ``read_tier`` attaches an existing
+    clean DRAM read tier (``repro.volume.ReadTier``, shared across volume
+    shards via ``tier_ns``); ``read_tier_bytes > 0`` builds a private one
+    for this device instead.  Caiti policies only — the staging baselines
+    keep the paper's read path untouched.
     """
     assert policy in POLICIES, f"unknown policy {policy!r}"
     latency = NO_LATENCY if latency is None else latency
@@ -179,7 +184,11 @@ def make_device(policy: str, *, n_lbas: int, block_size: int = 4096,
                           n_workers=n_workers,
                           eager_eviction=(policy != "caiti-noee"),
                           conditional_bypass=(policy != "caiti-nobp"))
-        impl = CaitiCache(btt, cfg, metrics=metrics, evict_pool=evict_pool)
+        if read_tier is None and read_tier_bytes > 0:
+            from repro.volume.read_tier import ReadTier
+            read_tier = ReadTier(read_tier_bytes, block_size)
+        impl = CaitiCache(btt, cfg, metrics=metrics, evict_pool=evict_pool,
+                          read_tier=read_tier, tier_ns=tier_ns)
     elif policy == "pmbd":
         impl = PMBDCache(btt, cache_bytes, metrics=metrics)
     elif policy == "pmbd70":

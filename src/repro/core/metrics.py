@@ -8,6 +8,19 @@ Categories follow the paper's naming exactly:
   wbq_enqueue           — putting the slot on the write-back queue
   cache_flush           — serving PREFLUSH/FUA/fsync drains
   others                — everything else on the critical path
+
+Read-path counters (the layered read stack of PR 2) are plain events on
+``count`` — ``read_path()`` summarizes where reads were served from:
+  read_hits             — transit-cache (staged write) hits
+  read_tier_hits        — clean DRAM read-tier hits
+  read_tier_fills       — tier populations from a backend read miss
+  read_misses           — full BTT/PMem round trips
+  verify_failures       — primary copies failing crc verification
+  degraded_reads        — reads served from a replica instead
+  verify_races          — all copies agreed, only the ledger disagreed
+                          (a mid-flight write, not corruption)
+  unrecoverable_reads   — no copy matched the ledger (surfaced primary)
+  resync_repairs        — divergent copies rewritten by the resyncer
 """
 from __future__ import annotations
 
@@ -24,6 +37,18 @@ CATEGORIES = (
     "wbq_enqueue",
     "cache_flush",
     "others",
+)
+
+READ_COUNTERS = (
+    "read_hits",
+    "read_tier_hits",
+    "read_tier_fills",
+    "read_misses",
+    "verify_failures",
+    "degraded_reads",
+    "verify_races",
+    "unrecoverable_reads",
+    "resync_repairs",
 )
 
 
@@ -67,6 +92,16 @@ class Metrics:
         """Fractional time per category (paper Fig. 6a)."""
         total = sum(self.ns[c] for c in CATEGORIES) or 1
         return {c: self.ns[c] / total for c in CATEGORIES}
+
+    def read_path(self) -> dict[str, float]:
+        """Read-path summary: every counter plus the fraction of reads
+        served without touching the backend (transit or tier hit)."""
+        with self._lock:
+            out = {c: self.count.get(c, 0) for c in READ_COUNTERS}
+        served = out["read_hits"] + out["read_tier_hits"] + out["read_misses"]
+        out["dram_hit_rate"] = ((out["read_hits"] + out["read_tier_hits"])
+                                / served if served else 0.0)
+        return out
 
     def percentile_us(self, p: float) -> float:
         if not self.latencies_ns:

@@ -365,7 +365,8 @@ class SimCaiti(PolicyBase):
 
     def __init__(self, cost, media, n_slots, n_workers: int = 8,
                  eager: bool = True, bypass: bool = True,
-                 workers: list | None = None, global_full=None) -> None:
+                 workers: list | None = None, global_full=None,
+                 evict_notify=None) -> None:
         super().__init__(cost, media, n_slots)
         self.eager = eager
         self.bypass = bypass
@@ -376,6 +377,7 @@ class SimCaiti(PolicyBase):
         self.workers = workers if workers is not None \
             else [Bank() for _ in range(n_workers)]
         self.global_full = global_full     # volume aggregate watermark hook
+        self.evict_notify = evict_notify   # read-tier writeback population
         self._rr = 0
         self.freed: deque[tuple[float, int]] = deque()   # (free_t, lba)
         self.occupied = 0
@@ -394,6 +396,8 @@ class SimCaiti(PolicyBase):
         w.free_at = done
         self.evict_fence = max(self.evict_fence, done)
         self.m.counts["bg_evictions"] += 1
+        if self.evict_notify is not None:
+            self.evict_notify(lba)         # block stays warm in the tier
         return done
 
     def _reclaim(self, t: float) -> None:
@@ -576,6 +580,49 @@ def run_sim_workload(policy: str, *, n_ops: int, n_lbas: int,
 
 
 # ---------------------------------------------------------------- volumes
+class SimReadTier:
+    """Virtual-time read tier: the REAL ``repro.volume.ReadTier`` in
+    object mode (keys only — block data is not simulated), so the
+    simulator validates the exact CLOCK/second-chance policy the
+    threaded implementation runs, not a reimplementation of it."""
+
+    def __init__(self, n_slots: int) -> None:
+        from repro.volume.read_tier import ReadTier   # no import cycle at
+        self._tier = ReadTier(block_size=None,        # call time
+                              n_slots=max(1, n_slots))
+
+    def hit(self, key) -> bool:
+        return self._tier.lookup(key) is not None
+
+    def insert(self, key) -> None:
+        self._tier.insert(key, True)
+
+    def invalidate(self, key) -> None:
+        self._tier.invalidate(key)
+
+    def hit_rate(self) -> float:
+        return self._tier.hit_rate()
+
+    @property
+    def hits(self) -> int:
+        return self._tier.hits
+
+    @property
+    def misses(self) -> int:
+        return self._tier.misses
+
+
+def zipf_lba_stream(rng, n_ops: int, n_lbas: int,
+                    theta: float = 0.99) -> np.ndarray:
+    """YCSB-style bounded zipfian addresses: rank k drawn with probability
+    proportional to 1/(k+1)^theta, ranks scattered over the LBA space by a
+    fixed permutation so the hot set spreads across volume shards."""
+    w = 1.0 / np.power(np.arange(1, n_lbas + 1, dtype=np.float64), theta)
+    ranks = rng.choice(n_lbas, size=n_ops, p=w / w.sum())
+    perm = np.random.default_rng(12345).permutation(n_lbas)
+    return perm[ranks]
+
+
 class SimVolume:
     """Virtual-time model of the striped multi-device volume.
 
@@ -587,15 +634,36 @@ class SimVolume:
     1-shard and an N-shard volume stage the same bytes with the same
     eviction cores — what N buys is media parallelism and shorter
     per-shard queues, which is the paper's contended resource.
+
+    The layered read path (PR 2) is modeled in virtual time:
+
+      * ``tier_slots > 0`` adds a volume-wide clean DRAM read tier.  A
+        tier hit costs ``meta + dram_copy_4k`` (a dict probe + one DRAM
+        copy); misses fill the tier, writes invalidate, caiti eviction
+        writebacks re-populate — the same protocol as the threaded tier;
+      * volume *read misses go through the shard's Media banks*: PMem
+        reads share the DIMMs with eviction/bypass write traffic, so a
+        read-heavy tenant feels the background write pressure (van Renen
+        et al.'s read-write interference).  Transit-cache hits stay
+        DRAM-priced;
+      * ``degraded_every = N`` fails primary-shard verification on every
+        Nth backend read: the read pays a second, replica-shard media
+        round trip (the degraded-read detour).
     """
 
     def __init__(self, policy: str, cost: CostModel, *, n_shards: int,
                  cache_slots: int, n_workers: int = 8,
-                 stripe_blocks: int = 64, watermark: float = 1.0) -> None:
+                 stripe_blocks: int = 64, watermark: float = 1.0,
+                 tier_slots: int = 0, degraded_every: int = 0) -> None:
         self.policy = policy
+        self.cost = cost
         self.n_shards = n_shards
         self.stripe_blocks = stripe_blocks
         self.medias = [Media(cost) for _ in range(n_shards)]
+        self.read_tier = SimReadTier(tier_slots) if tier_slots > 0 else None
+        self.degraded_every = degraded_every
+        self._backend_reads = 0
+        self.vcounts: dict = defaultdict(int)
         slots_per = max(1, cache_slots // n_shards)
         self._watermark_slots = watermark * slots_per * n_shards
         self._use_watermark = policy.startswith("caiti") and watermark < 1.0
@@ -607,13 +675,19 @@ class SimVolume:
                          bypass=(policy != "caiti-nobp"),
                          workers=pool,
                          global_full=(self._over_watermark
-                                      if self._use_watermark else None))
+                                      if self._use_watermark else None),
+                         evict_notify=(self._make_evict_notify(i)
+                                       if self.read_tier is not None
+                                       else None))
                 for i in range(n_shards)
             ]
         else:
             self.shards = [make_sim_policy(policy, cost, self.medias[i],
                                            slots_per)
                            for i in range(n_shards)]
+
+    def _make_evict_notify(self, shard: int):
+        return lambda local: self.read_tier.insert((shard, local))
 
     def _over_watermark(self) -> bool:
         staged = sum(s.occupied for s in self.shards)
@@ -626,11 +700,34 @@ class SimVolume:
 
     def write(self, t: float, lba: int) -> float:
         shard, local = self._map(lba)
+        if self.read_tier is not None:
+            self.read_tier.invalidate((shard, local))
         return self.shards[shard].write(t, local)
 
     def read(self, t: float, lba: int) -> float:
         shard, local = self._map(lba)
-        return self.shards[shard].read(t, local)
+        s = self.shards[shard]
+        if local in s.resident:                  # staged write: DRAM hit
+            return s.read(t, local)
+        key = (shard, local)
+        if self.read_tier is not None and self.read_tier.hit(key):
+            self.vcounts["tier_hits"] += 1
+            return t + self.cost.meta + self.cost.dram_copy_4k
+        # backend read: contends for the shard's DIMM banks with the
+        # eviction/bypass write traffic
+        self.vcounts["read_misses"] += 1
+        end = self.medias[shard].write(t, self.cost.btt_read())
+        if self.read_tier is not None:
+            self.read_tier.insert(key)
+        self._backend_reads += 1
+        if self.degraded_every and \
+                self._backend_reads % self.degraded_every == 0:
+            # primary verification failed: replica round trip on its shard
+            self.vcounts["degraded_reads"] += 1
+            replica_shard = (shard + 1) % self.n_shards
+            end = self.medias[replica_shard].write(
+                end + self.cost.meta, self.cost.btt_read())
+        return end
 
     def flush(self, t: float, sync: bool) -> float:
         return max(s.flush(t, sync) for s in self.shards)
@@ -640,6 +737,10 @@ class SimVolume:
         for s in self.shards:
             for k, v in s.m.counts.items():
                 agg[k] += v
+        for k, v in self.vcounts.items():
+            agg[k] += v
+        if self.read_tier is not None:
+            agg["tier_misses"] += self.read_tier.misses
         return dict(agg)
 
 
@@ -650,6 +751,9 @@ def run_volume_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
                             watermark: float = 1.0, fsync_every: int = 0,
                             read_frac: float = 0.0,
                             flush_period_us: float = 5e4, seed: int = 0,
+                            tier_slots: int = 0, degraded_every: int = 0,
+                            lba_dist: str = "uniform",
+                            zipf_theta: float = 0.99,
                             cost: CostModel | None = None) -> dict:
     """Closed-loop multi-tenant fio workload against a striped volume.
 
@@ -667,11 +771,17 @@ def run_volume_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
     ``S = max(V, F_tenant)`` wins, with ``F_tenant += bytes/weight``.
     Token buckets delay a job's arrival before tags are assigned, so a
     rate-capped tenant never accrues scheduling credit while throttled.
+
+    Read-path knobs (PR 2): ``tier_slots`` enables the volume read tier,
+    ``degraded_every`` injects a primary-verification failure on every
+    Nth backend read, ``lba_dist='zipf'`` (with ``zipf_theta``) replaces
+    the uniform address pattern with a YCSB-style skewed one.
     """
     cost = cost or CostModel()
     vol = SimVolume(policy, cost, n_shards=n_shards, cache_slots=cache_slots,
                     n_workers=n_workers, stripe_blocks=stripe_blocks,
-                    watermark=watermark)
+                    watermark=watermark, tier_slots=tier_slots,
+                    degraded_every=degraded_every)
     rng = np.random.default_rng(seed)
     nt = len(tenants)
     names = [t.get("name", f"t{j}") for j, t in enumerate(tenants)]
@@ -690,7 +800,10 @@ def run_volume_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         per = max(1, int(t["n_ops"]) // jobs)
         for _ in range(jobs):
             st_tenant.append(j)
-            st_ops.append(rng.integers(0, n_lbas, size=per))
+            if lba_dist == "zipf":
+                st_ops.append(zipf_lba_stream(rng, per, n_lbas, zipf_theta))
+            else:
+                st_ops.append(rng.integers(0, n_lbas, size=per))
             st_reads.append(rng.random(per) < read_frac if read_frac
                             else None)
     ns = len(st_tenant)
@@ -808,6 +921,9 @@ def run_volume_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         "makespan_us": t_done,
         "agg_mb_s": writes * bs / max(t_done, 1e-9),
         "bypass_rate": counts.get("bypass", 0) / max(1, writes),
+        "tier_hit_rate": (vol.read_tier.hit_rate()
+                          if vol.read_tier is not None else 0.0),
+        "degraded_reads": counts.get("degraded_reads", 0),
         "counts": counts,
         "per_tenant": per_tenant,
     }

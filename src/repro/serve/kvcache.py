@@ -15,6 +15,14 @@ Mapping of the paper's structures:
                                  someone else's hot page on the decode path)
   fsync / PREFLUSH            -> ``barrier()``: complete all pending
                                  migrations (used before pool reshape)
+  volume read tier            -> a small CLOCK cache of *dequantized* host
+                                 pages (``repro.volume.ReadTier`` in object
+                                 mode): hybrid attention re-reads the same
+                                 cold pages every decode step, so the
+                                 int8->f32 unpack is paid once per residency
+                                 instead of once per step.  Clean data only
+                                 (host pages are immutable while live), so
+                                 invalidation is just page-in/release.
 
 The pool arrays live per layer: (P, page_size, Hkv, hd).  On TPU the decode
 attention resolves the table inside the Pallas kernel; on the CPU container
@@ -33,6 +41,7 @@ from repro.core.metrics import Metrics
 from repro.kernels import ref as kref
 from repro.kernels.ops import gather_quantize, paged_attention, \
     scatter_dequantize
+from repro.volume.read_tier import ReadTier
 
 
 @dataclass
@@ -47,6 +56,7 @@ class PagedCacheConfig:
     dtype: object = jnp.bfloat16
     eager_eviction: bool = True
     conditional_bypass: bool = True
+    read_tier_pages: int = 128    # dequantized-page cache (0 disables)
 
 
 class HostTier:
@@ -94,6 +104,12 @@ class PagedKVCache:
         self.v_pool = [jnp.zeros((P, pg, H, hd), cfg.dtype) for _ in range(L)]
         self._free: list[int] = list(range(P))          # global free set
         self.host = HostTier()
+        # clean read tier over the host tier: caches dequantized pages for
+        # the hybrid-attention slow path (object mode — slots hold arrays)
+        self.read_tier = (ReadTier(block_size=None,
+                                   n_slots=cfg.read_tier_pages,
+                                   metrics=self.metrics)
+                          if cfg.read_tier_pages > 0 else None)
         self.seqs: dict[int, Sequence] = {}
         self._next_seq = 0
 
@@ -198,6 +214,8 @@ class PagedKVCache:
         if kind == "host":
             ids = jnp.array([page], jnp.int32)
             for li, (hk, hv) in enumerate(payload):
+                if self.read_tier is not None:
+                    self.read_tier.invalidate(("page", li, hk, hv))
                 qk, sk = self.host.pop(li, hk)
                 qv, sv = self.host.pop(li, hv)
                 pool_k = self.k_pool[li].reshape(self.cfg.n_pages, pg, -1)
@@ -244,6 +262,8 @@ class PagedKVCache:
                 self._free.append(entry[1])
             elif entry[0] == "host":
                 for li, (hk, hv) in enumerate(entry[1]):
+                    if self.read_tier is not None:
+                        self.read_tier.invalidate(("page", li, hk, hv))
                     self.host.pop(li, hk)
                     self.host.pop(li, hv)
 
@@ -271,10 +291,16 @@ class PagedKVCache:
                     np.asarray(self.v_pool[layer][entry[1]], np.float32))
         if entry[0] == "host":
             hk, hv = entry[1][layer]
+            if self.read_tier is not None:
+                cached = self.read_tier.lookup(("page", layer, hk, hv))
+                if cached is not None:
+                    return cached
             qk, sk = self.host.get(layer, hk)
             qv, sv = self.host.get(layer, hv)
             k = (qk.astype(np.float32) * sk[:, None]).reshape(pg, H, hd)
             v = (qv.astype(np.float32) * sv[:, None]).reshape(pg, H, hd)
+            if self.read_tier is not None:
+                self.read_tier.insert(("page", layer, hk, hv), (k, v))
             return k, v
         return (entry[1]["k"][layer].astype(np.float32),
                 entry[1]["v"][layer].astype(np.float32))   # host-fresh

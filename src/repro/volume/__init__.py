@@ -6,19 +6,48 @@ Generalizes the paper's single-device Caiti mechanism to a logical volume:
     StripedVolume          — the volume manager itself
     VolumeConfig           — geometry + policy knobs
     SharedEvictionPool     — one background eviction pool drained
-                             congestion-aware across all shards
+                             congestion-aware across all shards, in
+                             per-socket (NUMA) worker banks
     VolumeJournal          — redo journal giving multi-shard logical writes
                              all-or-nothing crash semantics
+    ReadTier               — clean-slot CLOCK DRAM read cache fronting the
+                             shards (never journaled)
+    ReplicaResyncer        — background repair of divergent replica blocks
     TokenBucket, WFQGate   — per-tenant QoS (rate limits + weighted fair
                              scheduling)
     TenantSpec             — declarative tenant weight/rate description
+
+The read path (layered, new in PR 2)
+------------------------------------
+The paper's transit cache is write-only by design (§4.3.2: never allocate
+a slot on a read miss), so every layer of the read path is stacked in
+front of it instead of inside it.  A ``StripedVolume.read(lba)`` walks:
+
+    1. **transit cache** — staged writes not yet evicted (newest data);
+    2. **ReadTier** — one shared clean DRAM tier for all shards, keyed
+       ``(shard, local_lba)``; populated on read miss and on eviction
+       writeback, invalidated (fenced) by writes.  Clean slots only: the
+       tier is never journaled and costs nothing at flush/crash time;
+    3. **primary shard BTT** — the PMem media read;
+    4. **verification** — with ``replicas > 1`` the result is checked
+       against the write-time crc ledger; a failing primary falls back to
+    5. **replica shard** (degraded read) — the verified replica copy is
+       served, read-repaired into the tier under the primary's key, and
+       the block is queued to the ``ReplicaResyncer``, which rewrites bad
+       copies through atomic BTT writes on the shared eviction cores.
+
+Writes are unchanged from the paper (stage -> eager eviction -> BTT,
+conditional bypass under pressure); they only *invalidate* tier entries,
+so crash atomicity (redo journal + BTT Flog) is untouched by the tier.
 """
 from .evict_pool import SharedEvictionPool
 from .journal import VolumeJournal
 from .qos import QoSError, TenantSpec, TokenBucket, WFQGate
+from .read_tier import ReadTier, ReplicaResyncer
 from .volume import StripedVolume, VolumeConfig, make_volume
 
 __all__ = [
     "SharedEvictionPool", "VolumeJournal", "TokenBucket", "WFQGate",
     "TenantSpec", "QoSError", "StripedVolume", "VolumeConfig", "make_volume",
+    "ReadTier", "ReplicaResyncer",
 ]

@@ -7,6 +7,22 @@ for the whole volume and drains the shards' write-back queues
 congestion-aware: workers prefer the shard with the deepest backlog and
 fall back to round-robin among ties, so aggregate PMem bandwidth — the
 contended resource — is spent where the staging pressure is.
+
+**Per-socket banks (NUMA placement).**  On a real box each PMem DIMM set
+hangs off one socket; an eviction core writing a remote socket's DIMMs
+pays the interconnect.  The pool therefore partitions its workers into
+``n_sockets`` banks (worker *i* serves socket ``i % n_sockets``) and
+participants register with the socket that owns their media
+(``register(cache, socket=...)``).  A bank drains its own socket's
+queues first and only *steals* cross-socket work when its socket is
+idle — locality when busy, work conservation always (a one-slot backlog
+on a quiet socket can never wedge that shard's flush).
+
+**Participants.**  Anything exposing the two drain hooks —
+``_evict_slot(item)`` / ``_complete_eviction()`` — can register, not
+just ``CaitiCache``: the volume's :class:`ReplicaResyncer` drains its
+repair queue through the same cores, so background resync traffic is
+scheduled (and NUMA-placed) exactly like eviction writebacks.
 """
 from __future__ import annotations
 
@@ -15,45 +31,75 @@ from collections import deque
 
 
 class SharedEvictionPool:
-    """N worker threads draining eviction work for many ``CaitiCache`` shards.
+    """N worker threads draining eviction work for many participants.
 
     Caches register themselves (``CaitiCache(..., evict_pool=pool)`` does it
-    in its constructor); each registered cache gets a private backlog deque.
-    ``submit(cache, slot)`` enqueues one slot for background transit; a
-    worker later calls the cache's ``_evict_slot``/``_complete_eviction``
-    exactly as the cache's private threads would, so per-cache flush
-    accounting is unchanged.
+    in its constructor); each registered participant gets a private backlog
+    deque.  ``submit(cache, item)`` enqueues one work item for background
+    processing; a worker later calls the participant's
+    ``_evict_slot``/``_complete_eviction`` exactly as a cache's private
+    threads would, so per-cache flush accounting is unchanged.
     """
 
-    def __init__(self, n_workers: int = 4, name: str = "vol") -> None:
+    def __init__(self, n_workers: int = 4, name: str = "vol",
+                 n_sockets: int = 1) -> None:
+        assert n_sockets >= 1
         self.n_workers = n_workers
+        self.n_sockets = min(n_sockets, max(1, n_workers))
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._queues: list[tuple[object, deque]] = []   # (cache, backlog)
+        # (participant, backlog, socket)
+        self._queues: list[tuple[object, deque, int]] = []
         self._rr = 0
         self._picks = 0
         self._stop = False
         self._pending = 0
+        self.drained_by_socket = [0] * self.n_sockets
+        self.stolen_picks = 0
         self._workers = [
-            threading.Thread(target=self._run, daemon=True,
-                             name=f"{name}-evict-{i}")
+            threading.Thread(target=self._run, args=(i % self.n_sockets,),
+                             daemon=True, name=f"{name}-evict-{i}")
             for i in range(n_workers)
         ]
         for w in self._workers:
             w.start()
 
     # ------------------------------------------------------------ interface
-    def register(self, cache) -> None:
+    def register(self, cache, socket: int = 0) -> None:
         with self._lock:
-            self._queues.append((cache, deque()))
+            self._queues.append((cache, deque(), socket % self.n_sockets))
+
+    def unregister(self, cache) -> list:
+        """Remove a participant and return its still-queued (never
+        picked) items so the caller can settle its own accounting.
+        Items a worker is ALREADY executing are not included — they
+        complete through the normal ``_complete_eviction`` path."""
+        with self._lock:
+            for i, (c, q, _s) in enumerate(self._queues):
+                if c is cache:
+                    del self._queues[i]
+                    self._pending -= len(q)
+                    return list(q)
+        return []
+
+    def assign_socket(self, cache, socket: int) -> None:
+        """Re-pin a registered participant to the socket owning its media
+        (the volume calls this after building its shards — ``CaitiCache``
+        registers itself before the volume knows the shard layout)."""
+        with self._lock:
+            for i, (c, q, _s) in enumerate(self._queues):
+                if c is cache:
+                    self._queues[i] = (c, q, socket % self.n_sockets)
+                    return
+        raise ValueError("cache not registered with this pool")
 
     def submit(self, cache, slot) -> None:
         with self._cond:
-            for c, q in self._queues:
+            for c, q, _s in self._queues:
                 if c is cache:
                     q.append(slot)
                     self._pending += 1
-                    self._cond.notify()
+                    self._cond.notify_all()
                     return
         raise ValueError("cache not registered with this pool")
 
@@ -63,38 +109,48 @@ class SharedEvictionPool:
             return self._pending
 
     # ------------------------------------------------------------- workers
-    def _pick(self):
+    def _pick(self, socket: int):
         """Congestion-aware, starvation-free pick: picks alternate between
         the deepest backlog and plain round-robin over non-empty queues —
         a strictly-deepest rule would let a shard with one queued slot
-        wait forever behind busier shards, wedging that shard's flush."""
-        best = None
-        best_depth = 0
+        wait forever behind busier shards, wedging that shard's flush.
+        Home-socket queues are tried first; an idle bank steals."""
         n = len(self._queues)
         self._picks += 1
-        for off in range(n):
-            i = (self._rr + off) % n
-            depth = len(self._queues[i][1])
-            if self._picks % 2 and depth > 0:       # RR turn: first non-empty
-                best, best_depth = i, depth
-                break
-            if depth > best_depth:                  # congestion turn: deepest
-                best, best_depth = i, depth
-        if best is None:
-            return None
-        self._rr = (best + 1) % n
-        cache, q = self._queues[best]
-        self._pending -= 1
-        return cache, q.popleft()
+        for local_only in (True, False):
+            best = None
+            best_depth = 0
+            for off in range(n):
+                i = (self._rr + off) % n
+                _c, q, s = self._queues[i]
+                if local_only and s != socket:
+                    continue
+                depth = len(q)
+                if self._picks % 2 and depth > 0:   # RR turn: first non-empty
+                    best, best_depth = i, depth
+                    break
+                if depth > best_depth:              # congestion turn: deepest
+                    best, best_depth = i, depth
+            if best is not None:
+                self._rr = (best + 1) % n
+                cache, q, s = self._queues[best]
+                self._pending -= 1
+                self.drained_by_socket[socket] += 1
+                if not local_only:
+                    self.stolen_picks += 1
+                return cache, q.popleft()
+            if local_only and self.n_sockets == 1:
+                break                               # nothing anywhere
+        return None
 
-    def _run(self) -> None:
+    def _run(self, socket: int) -> None:
         while True:
             with self._cond:
                 while self._pending == 0 and not self._stop:
                     self._cond.wait(timeout=0.5)
                 if self._stop and self._pending == 0:
                     return
-                picked = self._pick()
+                picked = self._pick(socket)
             if picked is None:
                 continue
             cache, slot = picked

@@ -18,7 +18,16 @@ cache over BTT over PMem) — into one logical LBA space:
     admission, so many clients share one volume predictably;
   * **crash recovery**: per-shard BTT Flog replay (device open) plus the
     volume redo journal (:class:`VolumeJournal`) replayed in txid order —
-    multi-shard logical writes are all-or-nothing.
+    multi-shard logical writes are all-or-nothing;
+  * **layered read path** (``read_tier_bytes > 0``): one clean DRAM
+    :class:`~repro.volume.read_tier.ReadTier` fronts every shard
+    (tier -> transit cache -> BTT), populated on read miss and on
+    eviction writeback, invalidated by writes — never journaled;
+  * **degraded reads + resync** (``replicas > 1``): every read is
+    verified against a write-time crc ledger; a primary-shard copy that
+    fails verification is served from a replica instead, and the
+    divergent block is queued to the background
+    :class:`~repro.volume.read_tier.ReplicaResyncer` for repair.
 
 Crash semantics: like any write-back device, writes are durable at
 ``fsync``.  After a crash, a journaled multi-block write is either fully
@@ -31,15 +40,18 @@ from __future__ import annotations
 import json
 import os
 import threading
+import zlib
 
 import numpy as np
 
 from repro.core import make_device
+from repro.core.metrics import Metrics
 from repro.core.pmem import LatencyModel
 
 from .evict_pool import SharedEvictionPool
 from .journal import VolumeJournal
 from .qos import TenantSpec, TokenBucket, WFQGate
+from .read_tier import ReadTier, ReplicaResyncer
 
 _SB_MAGIC = "caiti-volume-v1"
 
@@ -53,7 +65,9 @@ class VolumeConfig:
                  policy: str = "caiti", block_size: int = 4096,
                  cache_bytes: int = 64 << 20, shared_workers: int = 4,
                  bypass_watermark: float = 0.9, journal_slots: int = 64,
-                 journal_span: int = 8, max_inflight: int = 16) -> None:
+                 journal_span: int = 8, max_inflight: int = 16,
+                 read_tier_bytes: int = 0, n_sockets: int = 1,
+                 verify_reads: bool | None = None) -> None:
         assert n_shards >= 1 and stripe_blocks >= 1
         assert 1 <= replicas <= n_shards
         assert policy not in ("raw", "dax"), \
@@ -70,6 +84,12 @@ class VolumeConfig:
         self.journal_slots = journal_slots
         self.journal_span = journal_span
         self.max_inflight = max_inflight
+        self.read_tier_bytes = read_tier_bytes
+        self.n_sockets = n_sockets
+        # reads are verified (and can degrade to a replica) only when a
+        # replica exists to fall back to — single-copy volumes pay nothing
+        self.verify_reads = (replicas > 1 if verify_reads is None
+                             else verify_reads)
 
     # derived geometry -------------------------------------------------------
     @property
@@ -111,13 +131,19 @@ class StripedVolume:
     mirroring ``BlockDevice`` plus ``write_multi`` (atomic) and tenants."""
 
     def __init__(self, shards, cfg: VolumeConfig, *, uuid: str,
-                 evict_pool: SharedEvictionPool | None = None) -> None:
+                 evict_pool: SharedEvictionPool | None = None,
+                 read_tier: ReadTier | None = None) -> None:
         self.shards = list(shards)
         self.cfg = cfg
         self.uuid = uuid
         self.block_size = cfg.block_size
         self.n_lbas = cfg.n_lbas
         self.pool = evict_pool
+        self.metrics = Metrics()          # volume-level (degraded/resync)
+        self.read_tier = read_tier
+        # write-time crc ledger: arbitrates primary-vs-replica divergence
+        # (in-DRAM only — after reopen unknown lbas are simply not verified)
+        self._crcs: dict[int, int] = {}
         self._txlock = threading.Lock()
         self._caches = [d.impl for d in self.shards
                         if hasattr(d.impl, "bypass_hook")]
@@ -135,6 +161,10 @@ class StripedVolume:
         self._gate: WFQGate | None = None
         self._buckets: dict[str, TokenBucket] = {}
         self.recovery_stats: dict = {}
+        # background replica repair rides the shared eviction pool (its
+        # own daemon thread when the policy has no pool, e.g. plain btt)
+        self.resyncer = (ReplicaResyncer(self, pool=evict_pool)
+                         if cfg.replicas > 1 else None)
 
     # -------------------------------------------------------------- mapping
     def _map(self, lba: int, replica: int = 0) -> tuple[int, int]:
@@ -174,10 +204,45 @@ class StripedVolume:
             self._gate.done(ticket)
 
     # ------------------------------------------------------------------ I/O
+    @staticmethod
+    def _crc(data) -> int:
+        if isinstance(data, (bytes, bytearray, memoryview)):
+            return zlib.crc32(data)
+        return zlib.crc32(np.ascontiguousarray(data, dtype=np.uint8))
+
     def _write_block(self, lba: int, data) -> None:
+        if self.cfg.verify_reads:
+            self._crcs[lba] = self._crc(data)
         for r in range(self.cfg.replicas):
             shard, local = self._map(lba, r)
             self.shards[shard].write(local, data)
+
+    def _pick_good_copy(self, lba: int, candidates: list[bytes]):
+        """The copy to trust among divergent replicas: the write-crc
+        ledger decides; with no ledger entry (reopened volume — the
+        ledger is DRAM-only), a strict majority (>= 2 matching copies)
+        decides.  A 1-vs-1 tie with no ledger is UNDECIDABLE: return
+        None so the resyncer leaves the divergence flagged instead of
+        possibly overwriting the last good copy with the corrupt one."""
+        want = self._crcs.get(lba)
+        if want is not None:
+            for c in candidates:
+                if self._crc(c) == want:
+                    return c
+            return None
+        best, best_n = None, 0
+        for c in candidates:
+            n = candidates.count(c)
+            if n > best_n:
+                best, best_n = c, n
+        return best if best_n >= 2 else None
+
+    def _ledger_disagrees(self, lba: int, data) -> bool:
+        """True iff the write-crc ledger has an entry for ``lba`` that
+        does NOT match ``data`` (the resyncer's pre-rewrite recheck: a
+        foreground write that landed mid-repair owns the block)."""
+        want = self._crcs.get(lba)
+        return want is not None and self._crc(data) != want
 
     def write(self, lba: int, data, tenant: str | None = None) -> int:
         """One-block write: atomic per shard BTT, no journaling needed."""
@@ -213,8 +278,55 @@ class StripedVolume:
                 self._write_block(lba + i, blk)
 
     def read(self, lba: int, out: np.ndarray | None = None) -> np.ndarray:
+        """Layered read: tier -> primary shard (transit cache -> BTT) ->
+        replica (degraded).  The tier probe happens inside the shard's
+        cache; this level verifies the result and falls back."""
         shard, local = self._map(lba, 0)
-        return self.shards[shard].read(local, out=out)
+        data = self.shards[shard].read(local, out=out)
+        if not self.cfg.verify_reads:
+            return data
+        want = self._crcs.get(lba)
+        if want is None or self._crc(data) == want:
+            return data
+        # a read racing a write can see the new ledger entry before the
+        # staged block is visible — one primary re-read (through the
+        # transit cache, which serves staged data) settles that race
+        # without a replica detour
+        data = self.shards[shard].read(local, out=out)
+        want = self._crcs.get(lba)
+        if want is None or self._crc(data) == want:
+            return data
+        self.metrics.bump("verify_failures")
+        last_alt = None
+        for r in range(1, self.cfg.replicas):
+            s2, l2 = self._map(lba, r)
+            alt = self.shards[s2].read(l2)
+            if self._crc(alt) != want:
+                last_alt = alt
+                continue
+            # degraded read: replica copy verified — serve it, read-repair
+            # the tier under the PRIMARY key (later reads hit good data
+            # even before the background resync lands), queue the repair
+            self.metrics.bump("degraded_reads")
+            tier = self.read_tier
+            if tier is not None:
+                tier.invalidate((shard, local))
+                tier.insert((shard, local), alt)
+            if self.resyncer is not None:
+                self.resyncer.request(lba)
+            if out is not None:
+                out[:] = alt
+                return out
+            return alt
+        if last_alt is not None and bytes(last_alt) == bytes(data):
+            # every copy agrees, only the ledger disagrees: a mid-flight
+            # write (or stale ledger), not corruption — serve it quietly
+            self.metrics.bump("verify_races")
+            return data
+        # no copy matches the ledger: surface the primary (scrub/resync
+        # will keep flagging it) rather than invent data
+        self.metrics.bump("unrecoverable_reads")
+        return data
 
     def flush(self) -> int:
         for d in self.shards:
@@ -263,6 +375,8 @@ class StripedVolume:
         records = self.journal.scan()
         for txid, lba, blocks in records:
             for i, blk in enumerate(blocks):
+                if self.cfg.verify_reads:
+                    self._crcs[lba + i] = zlib.crc32(blk)
                 for r in range(self.cfg.replicas):
                     shard, local = self._map(lba + i, r)
                     self.shards[shard].impl.btt.write(
@@ -282,20 +396,35 @@ class StripedVolume:
         self.recovery_stats = stats
         return stats
 
-    def scrub_replicas(self, sample_every: int = 1) -> int:
-        """Compare primary vs replica contents; returns mismatch count.
-        (Repair is a roadmap follow-on; this surfaces divergence.)"""
+    def scrub_replicas_detail(self, sample_every: int = 1) \
+            -> list[tuple[int, int, int, int]]:
+        """Compare every copy of every sampled block below the caches and
+        return the DIVERGENT copies as (lba, replica, shard, local_lba)
+        tuples — exactly what the resyncer needs to target repairs.  The
+        bad copy is whichever disagrees with the trusted image (write-crc
+        ledger, else majority/primary — see ``_pick_good_copy``)."""
         if self.cfg.replicas < 2:
-            return 0
-        mismatches = 0
+            return []
+        out = []
         for lba in range(0, self.n_lbas, sample_every):
-            shard, local = self._map(lba, 0)
-            want = bytes(self.shards[shard].impl.btt.read(local))
-            for r in range(1, self.cfg.replicas):
-                s2, l2 = self._map(lba, r)
-                if bytes(self.shards[s2].impl.btt.read(l2)) != want:
-                    mismatches += 1
-        return mismatches
+            copies = []
+            for r in range(self.cfg.replicas):
+                shard, local = self._map(lba, r)
+                copies.append((r, shard, local,
+                               bytes(self.shards[shard].impl.btt.read(local))))
+            datas = [c[3] for c in copies]
+            if all(d == datas[0] for d in datas[1:]):
+                continue
+            good = self._pick_good_copy(lba, datas)
+            if good is None:
+                good = datas[0]     # nothing verifiable: primary wins
+            out.extend((lba, r, shard, local)
+                       for r, shard, local, d in copies if d != good)
+        return out
+
+    def scrub_replicas(self, sample_every: int = 1) -> int:
+        """Count-compatible wrapper over :meth:`scrub_replicas_detail`."""
+        return len(self.scrub_replicas_detail(sample_every))
 
     # ---------------------------------------------------------------- stats
     def occupancy(self) -> float:
@@ -304,17 +433,26 @@ class StripedVolume:
         return float(np.mean([d.occupancy() for d in self.shards]))
 
     def metrics_snapshot(self) -> dict:
-        out = {"bypass_writes": 0, "bg_evictions": 0}
+        out = {"bypass_writes": 0, "bg_evictions": 0, "read_hits": 0,
+               "read_misses": 0, "read_tier_hits": 0, "read_tier_fills": 0}
         for d in self.shards:
             snap = d.metrics.snapshot()["count"]
             for k in out:
                 out[k] += snap.get(k, 0)
+        vol = self.metrics.snapshot()["count"]
+        for k in ("verify_failures", "degraded_reads", "verify_races",
+                  "unrecoverable_reads", "resync_repairs"):
+            out[k] = vol.get(k, 0)
         out["journal_txs"] = self.journal.last_txid()
         out["applied_txid"] = self.journal.applied_txid
+        if self.read_tier is not None:
+            out["read_tier"] = self.read_tier.stats()
         return out
 
     def close(self) -> None:
         self.fsync()
+        if self.resyncer is not None:
+            self.resyncer.close()
         for d in self.shards:
             d.close()
         if self.pool is not None:
@@ -330,12 +468,19 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                 latency: LatencyModel | None = None,
                 tenants: list[TenantSpec] | None = None,
                 nfree: int | None = None,
-                max_inflight: int = 16) -> StripedVolume:
+                max_inflight: int = 16, read_tier_bytes: int = 0,
+                n_sockets: int = 1,
+                verify_reads: bool | None = None) -> StripedVolume:
     """Build (or reopen + recover) a striped volume.
 
     ``path`` is a prefix for file-backed shards (``{path}.shard{i}``); a
     prefix whose shard files already carry volume superblocks is RECOVERED
     (per-shard Flog replay + volume journal replay), not re-formatted.
+
+    ``read_tier_bytes > 0`` puts one shared clean DRAM read tier in front
+    of all shards (caiti policies).  ``n_sockets > 1`` splits the shared
+    eviction pool into per-socket worker banks and pins shard *i* to
+    socket ``i % n_sockets`` (the socket owning its PMem DIMM set).
     """
     cfg = VolumeConfig(n_lbas=n_lbas, n_shards=n_shards,
                        stripe_blocks=stripe_blocks, replicas=replicas,
@@ -343,20 +488,28 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                        cache_bytes=cache_bytes, shared_workers=shared_workers,
                        bypass_watermark=bypass_watermark,
                        journal_slots=journal_slots, journal_span=journal_span,
-                       max_inflight=max_inflight)
+                       max_inflight=max_inflight,
+                       read_tier_bytes=read_tier_bytes, n_sockets=n_sockets,
+                       verify_reads=verify_reads)
     paths = [None] * n_shards
     if backend == "file":
         assert path is not None, "file backend needs a path prefix"
         paths = [f"{path}.shard{i}" for i in range(n_shards)]
-    pool = SharedEvictionPool(shared_workers, name="vol") \
+    pool = SharedEvictionPool(shared_workers, name="vol",
+                              n_sockets=n_sockets) \
         if policy.startswith("caiti") else None
+    tier = ReadTier(read_tier_bytes, block_size) \
+        if read_tier_bytes > 0 and policy.startswith("caiti") else None
     shards = []
     per_shard_cache = max(block_size, cache_bytes // n_shards)
     for i in range(n_shards):
         shards.append(make_device(
             policy, n_lbas=cfg.shard_n_lbas, block_size=block_size,
             cache_bytes=per_shard_cache, backend=backend, path=paths[i],
-            latency=latency, nfree=nfree, evict_pool=pool))
+            latency=latency, nfree=nfree, evict_pool=pool,
+            read_tier=tier, tier_ns=i))
+        if pool is not None:
+            pool.assign_socket(shards[-1].impl, i % max(1, n_sockets))
 
     sbs = [StripedVolume.read_superblock(d) for d in shards]
     existing = all(sb is not None for sb in sbs)
@@ -378,14 +531,16 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                         if sb.get(k) != want[k]]
             assert not mismatch, \
                 f"geometry mismatch on shard {i}: {mismatch}"
-        vol = StripedVolume(shards, cfg, uuid=sbs[0]["uuid"], evict_pool=pool)
+        vol = StripedVolume(shards, cfg, uuid=sbs[0]["uuid"], evict_pool=pool,
+                            read_tier=tier)
         vol.journal.applied_txid = max(sb.get("applied_txid", 0)
                                        for sb in sbs)
         vol.journal.next_txid = vol.journal.applied_txid + 1
         vol.recover()
     else:
         uuid = os.urandom(8).hex()
-        vol = StripedVolume(shards, cfg, uuid=uuid, evict_pool=pool)
+        vol = StripedVolume(shards, cfg, uuid=uuid, evict_pool=pool,
+                            read_tier=tier)
         vol._write_superblocks()
     for t in (tenants or []):
         vol.add_tenant(t.name, weight=t.weight, rate_mbps=t.rate_mbps,

@@ -1,0 +1,197 @@
+"""ReadTier (CLOCK clean read cache) + per-socket eviction banks +
+ReplicaResyncer unit tests; the volume-level integration lives in
+tests/test_volume.py."""
+import time
+
+import numpy as np
+
+from repro.volume import ReadTier, SharedEvictionPool
+
+
+def _blk(x: int) -> bytes:
+    return bytes([x % 256]) * 4096
+
+
+# ------------------------------------------------------------- tier core
+def test_tier_fill_hit_invalidate():
+    tier = ReadTier(8 * 4096, 4096)
+    assert tier.lookup(("a", 1)) is None
+    tier.insert(("a", 1), _blk(7))
+    assert bytes(tier.lookup(("a", 1))) == _blk(7)
+    tier.invalidate(("a", 1))
+    assert tier.lookup(("a", 1)) is None
+    assert tier.stats()["invalidations"] == 1
+
+
+def test_tier_lookup_into_out_buffer():
+    tier = ReadTier(4 * 4096, 4096)
+    tier.insert(0, _blk(3))
+    out = np.zeros(4096, np.uint8)
+    got = tier.lookup(0, out=out)
+    assert got is out
+    assert bytes(out) == _blk(3)
+
+
+def test_tier_clock_second_chance_keeps_hot_key():
+    tier = ReadTier(4 * 4096, 4096)          # 4 slots
+    for k in range(4):
+        tier.insert(k, _blk(k))
+    tier.insert(4, _blk(4))                  # sweep clears all ref bits
+    tier.lookup(1)                           # re-reference key 1 only
+    tier.insert(5, _blk(5))                  # hand passes 1 (second chance)
+    assert 1 in tier
+    assert 2 not in tier                     # the unreferenced one went
+    assert len(tier) == 4
+
+
+def test_tier_capacity_bounded():
+    tier = ReadTier(8 * 4096, 4096)
+    for k in range(100):
+        tier.insert(k, _blk(k))
+    assert len(tier) == 8
+
+
+def test_tier_fence_rejects_stale_fill():
+    """The read-miss fill protocol: a write invalidation between
+    prepare() and insert() must drop the (stale) fill."""
+    tier = ReadTier(8 * 4096, 4096)
+    token = tier.prepare(5)                  # reader starts a backend read
+    tier.invalidate(5)                       # writer updates the block
+    assert not tier.insert(5, _blk(1), token=token)
+    assert tier.lookup(5) is None
+    assert tier.stats()["rejected_fills"] == 1
+    # a fresh fill (token taken after the invalidate) lands fine
+    token = tier.prepare(5)
+    assert tier.insert(5, _blk(2), token=token)
+    assert bytes(tier.lookup(5)) == _blk(2)
+
+
+def test_tier_object_mode_for_serving_pages():
+    tier = ReadTier(block_size=None, n_slots=2)
+    k = np.ones((16, 2, 4), np.float32)
+    tier.insert(("page", 0, 1, 2), (k, k * 2))
+    got = tier.lookup(("page", 0, 1, 2))
+    assert got is not None and np.array_equal(got[0], k)
+    tier.insert(("page", 0, 3, 4), (k, k))
+    tier.insert(("page", 0, 5, 6), (k, k))   # evicts one of the others
+    assert len(tier) == 2
+
+
+# ------------------------------------------------- per-socket pool banks
+class _FakeCache:
+    """Minimal pool participant: records which items were drained."""
+
+    def __init__(self):
+        self.drained = []
+        self.completed = 0
+
+    def _evict_slot(self, item):
+        self.drained.append(item)
+
+    def _complete_eviction(self, n=1):
+        self.completed += n
+
+
+def _wait(pred, timeout=5.0):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def test_pool_socket_banks_drain_and_steal():
+    pool = SharedEvictionPool(4, name="t", n_sockets=2)
+    a, b = _FakeCache(), _FakeCache()
+    pool.register(a, socket=0)
+    pool.register(b, socket=1)
+    try:
+        for i in range(20):
+            pool.submit(a, ("a", i))
+            pool.submit(b, ("b", i))
+        assert _wait(lambda: a.completed == 20 and b.completed == 20)
+        assert sorted(a.drained) == [("a", i) for i in range(20)]
+        # every pick is attributed to one of the two banks
+        assert sum(pool.drained_by_socket) == 40
+    finally:
+        pool.close()
+
+
+def test_pool_idle_bank_steals_cross_socket():
+    """A one-participant pool with 2 sockets: the socket-1 bank has no
+    home queues, so every item it drains is a steal — work conservation
+    over locality, a lone backlog can never wedge."""
+    pool = SharedEvictionPool(2, name="t", n_sockets=2)
+    a = _FakeCache()
+    pool.register(a, socket=0)
+    try:
+        for i in range(50):
+            pool.submit(a, i)
+        assert _wait(lambda: a.completed == 50)
+        assert pool.backlog() == 0
+    finally:
+        pool.close()
+
+
+def test_single_device_tier_and_read_path_summary():
+    """make_device(read_tier_bytes=...) fronts a lone caiti device, and
+    Metrics.read_path() summarizes where reads were served from."""
+    from repro.core import make_device
+    dev = make_device("caiti", n_lbas=256, cache_bytes=512 * 4096,
+                      read_tier_bytes=64 * 4096)
+    try:
+        for lba in range(48):
+            dev.write(lba, _blk(lba + 1))
+        dev.fsync()                      # writebacks populate the tier
+        for lba in range(48):
+            assert bytes(dev.read(lba)) == _blk(lba + 1)
+        rp = dev.metrics.read_path()
+        assert rp["read_tier_hits"] + rp["read_hits"] == 48
+        assert rp["read_misses"] == 0
+        assert rp["dram_hit_rate"] == 1.0
+        dev.impl.read_tier.clear()
+        dev.read(0)                      # cold: full BTT round trip
+        rp = dev.metrics.read_path()
+        assert rp["read_misses"] == 1 and rp["read_tier_fills"] >= 1
+        assert rp["dram_hit_rate"] < 1.0
+    finally:
+        dev.close()
+
+
+def test_kvcache_host_pages_read_through_tier():
+    """Serving layer: hybrid attention over host-resident pages caches
+    the dequantized pages; page-in invalidates them."""
+    import jax.numpy as jnp
+    from repro.serve.kvcache import PagedCacheConfig, PagedKVCache
+    cfg = PagedCacheConfig(n_layers=2, n_kv_heads=2, head_dim=8,
+                           page_size=4, n_pages=4, read_tier_pages=16)
+    kv = PagedKVCache(cfg)
+    sid = kv.new_sequence()
+    for t in range(8):
+        tok = [np.full((2, 8), t, np.float32) for _ in range(2)]
+        kv.append_token(sid, tok, tok)
+    kv.deactivate(sid)                       # pages transit to the host tier
+    kv.seqs[sid].active = True               # decode without paging in
+    q = jnp.ones((1, 2, 8), jnp.float32)
+    kv.attention(0, q, [sid])
+    hits0 = kv.metrics.snapshot()["count"].get("read_tier_hits", 0)
+    out1 = kv.attention(0, q, [sid])         # same pages: dequant cached
+    hits1 = kv.metrics.snapshot()["count"].get("read_tier_hits", 0)
+    assert hits1 > hits0
+    out2 = kv.attention(0, q, [sid])
+    assert np.allclose(np.asarray(out1), np.asarray(out2))
+    kv.activate(sid)                         # page-in pops host handles
+    assert len(kv.read_tier) == 0            # ...and invalidates the tier
+
+
+def test_pool_assign_socket_repins():
+    pool = SharedEvictionPool(2, name="t", n_sockets=2)
+    a = _FakeCache()
+    pool.register(a)                         # defaults to socket 0
+    pool.assign_socket(a, 1)
+    try:
+        pool.submit(a, "x")
+        assert _wait(lambda: a.completed == 1)
+    finally:
+        pool.close()

@@ -89,6 +89,49 @@ def test_global_bypass_watermark_trips_before_local_full():
         vol.close()
 
 
+# ------------------------------------------------------ layered read path
+def test_read_tier_layered_path():
+    """tier -> transit -> BTT: after fsync (writebacks populated the
+    tier) reads are served from DRAM; writes invalidate tier entries.
+    The transit cache (512 slots) exceeds the 171 writes so no write can
+    take the bypass path — every block writebacks through the tier and
+    ``read_misses == 0`` is deterministic."""
+    vol = make_volume("caiti", n_lbas=1024, n_shards=4, stripe_blocks=4,
+                      cache_bytes=512 * 4096, read_tier_bytes=512 * 4096)
+    try:
+        for lba in range(0, 512, 3):
+            vol.write(lba, _blk(lba + 1))
+        vol.fsync()
+        for lba in range(0, 512, 3):
+            assert bytes(vol.read(lba)) == _blk(lba + 1), lba
+        snap = vol.metrics_snapshot()
+        assert snap["read_tier_hits"] > 0
+        assert snap["read_misses"] == 0        # everything came from DRAM
+        # overwrite must invalidate: the tier never serves stale data
+        vol.write(3, _blk(99))
+        assert bytes(vol.read(3)) == _blk(99)
+        vol.fsync()
+        assert bytes(vol.read(3)) == _blk(99)
+    finally:
+        vol.close()
+
+
+def test_read_tier_populates_on_read_miss():
+    vol = make_volume("caiti", n_lbas=256, n_shards=2,
+                      cache_bytes=32 * 4096, read_tier_bytes=64 * 4096)
+    try:
+        for lba in range(32):
+            vol.write(lba, _blk(lba))
+        vol.fsync()
+        vol.read_tier.clear()                  # cold tier
+        assert bytes(vol.read(5)) == _blk(5)   # miss fills the tier
+        before = vol.metrics_snapshot()["read_tier_hits"]
+        assert bytes(vol.read(5)) == _blk(5)   # now a tier hit
+        assert vol.metrics_snapshot()["read_tier_hits"] == before + 1
+    finally:
+        vol.close()
+
+
 def test_replication_scrub_clean():
     vol = make_volume("caiti", n_lbas=512, n_shards=4, replicas=2,
                       cache_bytes=64 * 4096)
@@ -101,6 +144,143 @@ def test_replication_scrub_clean():
         s0, _ = vol._map(0, 0)
         s1, _ = vol._map(0, 1)
         assert s0 != s1
+    finally:
+        vol.close()
+
+
+# -------------------------------------------- degraded reads + resync
+def _corrupt_primary(vol, lba):
+    shard, local = vol._map(lba, 0)
+    vol.shards[shard].impl.btt.write(
+        local, np.frombuffer(b"\xde" * 4096, np.uint8))
+
+
+def test_degraded_read_and_background_resync():
+    """ACCEPTANCE: with one replica and injected primary-shard
+    corruption, every read returns correct data (replica fallback), and
+    the ReplicaResyncer restores scrub divergence to zero while
+    foreground I/O keeps flowing."""
+    vol = make_volume("caiti", n_lbas=512, n_shards=4, replicas=2,
+                      cache_bytes=64 * 4096, read_tier_bytes=64 * 4096)
+    try:
+        for lba in range(0, 128, 2):
+            vol.write(lba, _blk(lba + 7))
+        vol.fsync()
+        bad = [0, 10, 20, 30, 40]
+        for lba in bad:
+            _corrupt_primary(vol, lba)
+        vol.read_tier.clear()                  # force cold (BTT) reads
+        assert vol.scrub_replicas() == len(bad)
+        detail = vol.scrub_replicas_detail()
+        assert {d[0] for d in detail} == set(bad)
+        assert all(d[1] == 0 for d in detail)  # the PRIMARY copy is bad
+        # every read returns the correct data via the replica
+        for lba in bad:
+            assert bytes(vol.read(lba)) == _blk(lba + 7), lba
+        snap = vol.metrics_snapshot()
+        assert snap["degraded_reads"] == len(bad)
+        # the degraded read read-repaired the tier: a second pass serves
+        # good data from DRAM without degrading again
+        for lba in bad:
+            assert bytes(vol.read(lba)) == _blk(lba + 7), lba
+        assert vol.metrics_snapshot()["degraded_reads"] == len(bad)
+        # degraded reads auto-queued repairs; foreground I/O proceeds
+        # while the background pool drains them
+        for lba in range(1, 64, 2):
+            vol.write(lba, _blk(lba))
+            assert bytes(vol.read(lba)) == _blk(lba)
+        assert vol.resyncer.wait_idle(20.0)
+        vol.fsync()       # drain staged foreground copies: scrub reads
+        # below the caches, and a half-evicted write is not divergence
+        assert vol.scrub_replicas() == 0       # divergence fully repaired
+        assert vol.resyncer.repaired_blocks >= len(bad)
+        assert vol.metrics_snapshot()["resync_repairs"] >= len(bad)
+    finally:
+        vol.close()
+
+
+def test_resync_sweep_repairs_unread_blocks():
+    """A scrub-driven resync() repairs divergence nobody has read yet."""
+    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=2,
+                      cache_bytes=32 * 4096)
+    try:
+        for lba in range(64):
+            vol.write(lba, _blk(lba + 1))
+        vol.fsync()
+        for lba in (3, 9, 27):
+            _corrupt_primary(vol, lba)
+        assert vol.scrub_replicas() == 3
+        assert vol.resyncer.resync() == 3      # queued straight from scrub
+        assert vol.resyncer.wait_idle(20.0)
+        assert vol.scrub_replicas() == 0
+        for lba in (3, 9, 27):
+            assert bytes(vol.read(lba)) == _blk(lba + 1)
+    finally:
+        vol.close()
+
+
+def test_corrupt_replica_repaired_from_primary():
+    """Divergence on the REPLICA side: reads never degrade (primary is
+    fine) but scrub finds it and resync repairs from the primary."""
+    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=2,
+                      cache_bytes=32 * 4096)
+    try:
+        vol.write(7, _blk(70))
+        vol.fsync()
+        s1, l1 = vol._map(7, 1)
+        vol.shards[s1].impl.btt.write(
+            l1, np.frombuffer(b"\xab" * 4096, np.uint8))
+        detail = vol.scrub_replicas_detail()
+        assert [(d[0], d[1]) for d in detail] == [(7, 1)]
+        assert bytes(vol.read(7)) == _blk(70)
+        assert vol.metrics_snapshot()["degraded_reads"] == 0
+        vol.resyncer.resync()
+        assert vol.resyncer.wait_idle(20.0)
+        assert vol.scrub_replicas() == 0
+    finally:
+        vol.close()
+
+
+def test_reopen_tie_divergence_never_destroys_good_copy(tmp_path):
+    """After reopen the crc ledger is empty (DRAM-only).  A 1-vs-1
+    primary/replica tie is then undecidable: resync must flag it and
+    REFUSE to repair — overwriting the replica with the corrupt primary
+    would turn recoverable divergence into data loss.  With >= 3 copies
+    a strict majority still repairs."""
+    path = str(tmp_path / "vol")
+    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=2,
+                      cache_bytes=32 * 4096, backend="file", path=path)
+    vol.write(5, _blk(55))
+    vol.fsync()
+    vol.close()
+    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=2,
+                      cache_bytes=32 * 4096, backend="file", path=path)
+    _corrupt_primary(vol, 5)
+    try:
+        assert vol.scrub_replicas() == 1
+        vol.resyncer.resync()
+        assert vol.resyncer.wait_idle(10.0)
+        assert vol.scrub_replicas() == 1       # still flagged, NOT "fixed"
+        s1, l1 = vol._map(5, 1)
+        assert bytes(vol.shards[s1].impl.btt.read(l1)) == _blk(55)
+    finally:
+        vol.close()
+    # three copies: majority decides even with an empty ledger
+    path3 = str(tmp_path / "vol3")
+    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=3,
+                      cache_bytes=32 * 4096, backend="file", path=path3)
+    vol.write(5, _blk(66))
+    vol.fsync()
+    vol.close()
+    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=3,
+                      cache_bytes=32 * 4096, backend="file", path=path3)
+    _corrupt_primary(vol, 5)
+    try:
+        assert vol.scrub_replicas() >= 1
+        vol.resyncer.resync()
+        assert vol.resyncer.wait_idle(10.0)
+        assert vol.scrub_replicas() == 0
+        assert bytes(vol.read(5)) == _blk(66)
     finally:
         vol.close()
 
@@ -246,10 +426,13 @@ def test_reopen_missing_member_rejected(tmp_path):
 
 def test_caiti_volume_crash_recovery(tmp_path):
     """Caiti shards (staged writes) + abrupt abandonment: journal replay
-    restores every journaled write after reopen."""
+    restores every journaled write after reopen.  The read tier is
+    enabled: clean slots are never journaled, so write atomicity must be
+    byte-for-byte identical with the tier in the stack."""
     path = str(tmp_path / "vol")
     vol = make_volume("caiti", n_lbas=512, n_shards=3, stripe_blocks=2,
-                      cache_bytes=64 * 4096, backend="file", path=path)
+                      cache_bytes=64 * 4096, backend="file", path=path,
+                      read_tier_bytes=32 * 4096)
     vol.write_multi(10, [_blk(31 + i) for i in range(6)])
     # crash BEFORE fsync: staged copies may not have reached BTT, but the
     # journal committed first — flush mmaps (power loss keeps media state)
@@ -257,7 +440,8 @@ def test_caiti_volume_crash_recovery(tmp_path):
         d.impl.btt.pmem.persist()
     del vol                                        # no close(): no drain
     vol2 = make_volume("caiti", n_lbas=512, n_shards=3, stripe_blocks=2,
-                       cache_bytes=64 * 4096, backend="file", path=path)
+                       cache_bytes=64 * 4096, backend="file", path=path,
+                       read_tier_bytes=32 * 4096)
     got = [bytes(vol2.read(10 + i)) for i in range(6)]
     assert got == [_blk(31 + i) for i in range(6)]
     vol2.close()
@@ -354,6 +538,34 @@ def test_sim_token_bucket_caps_tenant():
                                 cache_slots=2048, tenants=ts)
     assert r["per_tenant"]["capped"]["mb_s"] <= 50.0 * 1.15
     assert r["per_tenant"]["free"]["mb_s"] > 500.0
+
+
+def test_sim_read_tier_speedup_on_read_heavy_mix():
+    """ACCEPTANCE: a >=90%-read zipfian volume workload with the read
+    tier sustains >= 1.5x the throughput of the identical workload with
+    the tier disabled (misses pay the contended PMem banks; tier hits
+    are a DRAM copy)."""
+    kw = dict(n_shards=2, n_lbas=16384, cache_slots=2048, n_workers=8,
+              read_frac=0.90, lba_dist="zipf", zipf_theta=1.1,
+              tenants=_tenants(4, 6000))
+    off = run_volume_sim_workload("caiti", tier_slots=0, **kw)
+    on = run_volume_sim_workload("caiti", tier_slots=8192, **kw)
+    assert on["tier_hit_rate"] > 0.5, on["tier_hit_rate"]
+    assert on["agg_mb_s"] >= 1.5 * off["agg_mb_s"], \
+        (off["agg_mb_s"], on["agg_mb_s"], on["tier_hit_rate"])
+
+
+def test_sim_degraded_reads_modeled():
+    """Injected primary-verification failures cost a replica round trip
+    (throughput drops) and are counted."""
+    kw = dict(n_shards=2, n_lbas=16384, cache_slots=1024, n_workers=8,
+              read_frac=0.95, lba_dist="zipf", tier_slots=2048,
+              tenants=_tenants(2, 3000))
+    ok = run_volume_sim_workload("caiti", **kw)
+    dg = run_volume_sim_workload("caiti", degraded_every=10, **kw)
+    assert ok["degraded_reads"] == 0
+    assert dg["degraded_reads"] > 0
+    assert dg["agg_mb_s"] < ok["agg_mb_s"]
 
 
 def test_sim_watermark_increases_bypass():
