@@ -117,9 +117,10 @@ def crash_restart() -> dict:
         return {"ok": bool(ok)}
 
 
-def run() -> dict:
-    return {"save_commit": save_commit(),
-            "async_overlap": async_overlap(),
+def run(state_mb: int = 64, steps: int = 8) -> dict:
+    return {"save_commit": save_commit(state_mb=state_mb),
+            "async_overlap": async_overlap(state_mb=max(8, state_mb // 2),
+                                           steps=steps),
             "crash_restart": crash_restart()}
 
 

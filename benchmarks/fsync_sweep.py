@@ -17,11 +17,12 @@ POLICIES = ("btt", "pmbd", "pmbd70", "lru", "coactive", "caiti")
 INTERVALS = (128, 512, 2048, 8192, 32768)
 
 
-def run(n_lbas: int = 524_288, cache_slots: int = 32_768) -> dict:
+def run(n_lbas: int = 524_288, cache_slots: int = 32_768,
+        intervals: tuple = INTERVALS) -> dict:
     out = {}
     print("# fig2b: mean fsync cost vs write volume between fsyncs "
           "(cache 128MB-equcomputed slots so staging CAN buffer the burst)")
-    for blocks in INTERVALS:
+    for blocks in intervals:
         n_ops = max(4, 3) * blocks + blocks // 2   # a few fsync periods
         out[blocks] = {}
         for policy in POLICIES:

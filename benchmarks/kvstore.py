@@ -57,7 +57,7 @@ def _read(policy: str, hot: bool, n_ops: int = 30_000) -> float:
     return m.counts["makespan_us"] / 1e6
 
 
-def run() -> dict:
+def run(n_kv: int = 20_000, n_reads: int = 30_000) -> dict:
     out = {}
     for wl in ("fillrandom", "overwrite"):
         out[wl] = {}
@@ -66,7 +66,8 @@ def run() -> dict:
             out[wl][vb] = {}
             for policy in POLICIES:
                 out[wl][vb][policy] = round(
-                    _fill(policy, vb, overwrite=(wl == "overwrite")), 4)
+                    _fill(policy, vb, n_kv=n_kv,
+                          overwrite=(wl == "overwrite")), 4)
             row = " ".join(f"{p}={out[wl][vb][p]:7.3f}" for p in
                            ("btt", "pmbd", "lru", "coactive", "caiti"))
             base = out[wl][vb]
@@ -77,7 +78,7 @@ def run() -> dict:
         out[wl] = {}
         print(f"# fig8 {wl}")
         for policy in ("btt", "pmbd", "lru", "coactive", "caiti"):
-            out[wl][policy] = round(_read(policy, hot), 4)
+            out[wl][policy] = round(_read(policy, hot, n_ops=n_reads), 4)
         row = " ".join(f"{p}={out[wl][p]:7.3f}s" for p in out[wl])
         print("  " + row)
     print("-> write-heavy: Caiti absorbs SSTable bursts and fsync finds "

@@ -1,7 +1,17 @@
 """Benchmark aggregator: one section per paper table/figure + the ML-side
-substrate benches.  ``python -m benchmarks.run [--fast]``.
+substrate benches + the volume-manager sweeps.
 
-Writes JSON artifacts under experiments/bench/ and prints each table.
+    python -m benchmarks.run              # everything (paper-scale ops)
+    python -m benchmarks.run --fast       # reduced op counts (CI perf)
+    python -m benchmarks.run --smoke      # tiny sizes: every table must
+                                          # run end to end (CI gate)
+    python -m benchmarks.run --list       # show every registered table
+    python -m benchmarks.run --only fig6,volume_groupcommit
+
+Every table lives in the registry below — adding a benchmark module
+without registering it here is what let the volume ``readmix`` and
+group-commit sweeps go invisible to ``run.py`` (they had to be invoked
+directly).  Writes JSON artifacts under experiments/bench/.
 """
 from __future__ import annotations
 
@@ -16,61 +26,122 @@ def _section(name: str):
     print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
 
 
+def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
+    """name -> (description, thunk).  ``ops`` is the base op count; each
+    entry scales it the way the old inline sections did.  ``smoke``
+    additionally shrinks the tables whose cost is NOT governed by
+    ``ops`` (fixed sweeps, real-thread state sizes) so the CI gate
+    really runs tiny."""
+    try:                                        # python -m benchmarks.run
+        from . import breakdown, ckpt_bench, fio_like, fsync_sweep, \
+            kvstore, roofline, serve_bench, volume_bench, ycsb
+    except ImportError:                         # python benchmarks/run.py
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        import breakdown, ckpt_bench, fio_like, fsync_sweep, kvstore, \
+            roofline, serve_bench, volume_bench, ycsb
+
+    return {
+        "fig2a": ("random-write execution time (sim)",
+                  lambda: fio_like.fig2a(n_ops=ops)),
+        "fig2a_fsync": ("random writes with fsync every 128 (sim)",
+                        lambda: fio_like.fig2a(n_ops=ops, fsync_every=128)),
+        "fig2b": ("fsync cost vs write volume (sim)",
+                  lambda: fsync_sweep.run(
+                      intervals=(128, 512, 2048) if smoke
+                      else fsync_sweep.INTERVALS)),
+        "fig5": ("I/O depth sweep (sim)",
+                 lambda: fio_like.fig5(n_ops=ops // 2,
+                                       depths=(32, 128) if fast
+                                       else (32, 128, 512, 1024))),
+        "fig5e": ("jobs scaling (sim)",
+                  lambda: fio_like.fig5e(n_ops=ops // 2,
+                                         jobs=(1, 4) if fast
+                                         else (1, 2, 4, 8, 16, 32))),
+        "table1": ("cache-size sweep (sim)",
+                   lambda: fio_like.table1(n_ops=ops // 2)),
+        "meta": ("metadata spatial cost",
+                 lambda: fio_like.meta()),
+        "fig6": ("breakdown + ablations (sim)",
+                 lambda: breakdown.run(n_ops=ops)),
+        "fig8": ("LevelDB-style workloads (sim)",
+                 lambda: kvstore.run(n_kv=2_000 if smoke else 20_000,
+                                     n_reads=ops // 2)),
+        "fig9": ("YCSB A/F x uniform/zipfian/latest (sim)",
+                 lambda: ycsb.run(n_ops=ops // 2)),
+        "ckpt": ("Caiti as checkpoint substrate (real threads)",
+                 lambda: ckpt_bench.run(state_mb=16 if smoke else 64,
+                                        steps=4 if smoke else 8)),
+        "serve": ("transit vs staging on the paged KV tier (real engine)",
+                  lambda: serve_bench.run(n_requests=4 if smoke else 10,
+                                          max_new=4 if smoke else 8)),
+        "volume_shards": ("striped multi-device scaling (sim)",
+                          lambda: volume_bench.shards(n_ops=ops // 5)),
+        "volume_qos": ("per-tenant QoS fair shares (sim)",
+                       lambda: volume_bench.qos(n_ops=ops // 10)),
+        "volume_readmix": ("read-heavy mixes, tier on/off + degraded "
+                           "injection (sim)",
+                           lambda: volume_bench.readmix(n_ops=ops // 10)),
+        "volume_groupcommit": ("fsync group-commit sweep, per-call vs "
+                               "coalesced (sim)",
+                               lambda: volume_bench.groupcommit(
+                                   n_ops=ops // 10)),
+        "roofline": ("dry-run derived roofline terms (deliverable g)",
+                     lambda: len(roofline.run("experiments/dryrun",
+                                              mesh="pod16x16"))),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="reduced op counts (CI mode)")
+                    help="reduced op counts (CI perf mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny op counts; assert every table runs end to "
+                         "end (CI gate — catches benchmark drift)")
+    ap.add_argument("--list", action="store_true",
+                    help="list every registered table and exit")
+    ap.add_argument("--only", default="",
+                    help="comma-separated table names to run")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
+
+    ops = 2_000 if args.smoke else 12_000 if args.fast else 50_000
+    tables = _registry(ops, fast=args.fast or args.smoke, smoke=args.smoke)
+
+    if args.list:
+        width = max(len(n) for n in tables)
+        for name, (desc, _fn) in tables.items():
+            print(f"{name:{width}s}  {desc}")
+        return
+    only = [s for s in args.only.split(",") if s]
+    for name in only:
+        assert name in tables, \
+            f"unknown table {name!r} (see --list): {sorted(tables)}"
+
     os.makedirs(args.out, exist_ok=True)
     t0 = time.time()
     results = {}
-
-    from . import breakdown, ckpt_bench, fio_like, fsync_sweep, kvstore, \
-        roofline, serve_bench, volume_bench, ycsb
-
-    ops = 12_000 if args.fast else 50_000
-
-    _section("fig2a — random-write execution time (sim)")
-    results["fig2a"] = fio_like.fig2a(n_ops=ops)
-    _section("fig2a+fsync — with fsync every 128 writes (sim)")
-    results["fig2a_fsync"] = fio_like.fig2a(n_ops=ops, fsync_every=128)
-    _section("fig2b — fsync cost vs write volume (sim)")
-    results["fig2b"] = fsync_sweep.run()
-    _section("fig5 — I/O depth sweep (sim)")
-    results["fig5"] = fio_like.fig5(n_ops=ops // 2,
-                                    depths=(32, 128) if args.fast
-                                    else (32, 128, 512, 1024))
-    _section("fig5e — jobs scaling (sim)")
-    results["fig5e"] = fio_like.fig5e(n_ops=ops // 2,
-                                      jobs=(1, 4) if args.fast
-                                      else (1, 2, 4, 8, 16, 32))
-    _section("table1 — cache-size sweep (sim)")
-    results["table1"] = fio_like.table1(n_ops=ops // 2)
-    _section("meta — metadata spatial cost")
-    results["meta"] = fio_like.meta()
-    _section("fig6 — breakdown + ablations (sim)")
-    results["fig6"] = breakdown.run(n_ops=ops)
-    _section("fig8 — LevelDB-style workloads (sim)")
-    results["fig8"] = kvstore.run()
-    _section("fig9 — YCSB A/F x uniform/zipfian/latest (sim)")
-    results["fig9"] = ycsb.run()
-    _section("ckpt — Caiti as checkpoint substrate (real threads)")
-    results["ckpt"] = ckpt_bench.run()
-    _section("serve — transit vs staging on the paged KV tier (real engine)")
-    results["serve"] = serve_bench.run()
-    _section("volume — striped multi-device scaling (sim)")
-    results["volume_shards"] = volume_bench.shards(n_ops=ops // 5)
-    _section("volume — per-tenant QoS fair shares (sim)")
-    results["volume_qos"] = volume_bench.qos(n_ops=ops // 10)
-    _section("roofline — dry-run derived terms (deliverable g)")
-    rows = roofline.run("experiments/dryrun", mesh="pod16x16")
-    results["roofline_rows"] = len(rows)
+    failures = []
+    for name, (desc, fn) in tables.items():
+        if only and name not in only:
+            continue
+        _section(f"{name} — {desc}")
+        try:
+            results[name] = fn()
+        except Exception as e:            # smoke must see every failure
+            failures.append((name, e))
+            print(f"[benchmarks.run] FAILED {name}: {e!r}", flush=True)
+            if not args.smoke:
+                raise
 
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)
-    print(f"\n[benchmarks.run] done in {time.time()-t0:.1f}s -> "
-          f"{args.out}/results.json")
+    print(f"\n[benchmarks.run] {len(results)} tables in "
+          f"{time.time() - t0:.1f}s -> {args.out}/results.json")
+    if failures:
+        print(f"[benchmarks.run] {len(failures)} table(s) FAILED: "
+              f"{[n for n, _ in failures]}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

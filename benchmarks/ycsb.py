@@ -80,7 +80,7 @@ def _run(policy: str, wl: str, dist: str, n_ops: int = 30_000) -> float:
     return ops / (m.counts["makespan_us"] / 1e6) / 1e3   # kops/s
 
 
-def run() -> dict:
+def run(n_ops: int = 30_000) -> dict:
     out = {}
     for dist in ("uniform", "zipfian", "latest"):
         out[dist] = {}
@@ -88,7 +88,8 @@ def run() -> dict:
         for wl in ("load", "A", "F"):
             out[dist][wl] = {}
             for policy in POLICIES:
-                out[dist][wl][policy] = round(_run(policy, wl, dist), 1)
+                out[dist][wl][policy] = round(
+                    _run(policy, wl, dist, n_ops=n_ops), 1)
             r = out[dist][wl]
             row = " ".join(f"{p}={r[p]:8.1f}" for p in POLICIES)
             print(f"{wl:5s} kops/s: {row}  "

@@ -7,13 +7,19 @@ Layout (in lbas):
     [1 .. M]       manifest area (two ping-pong regions, written CoW-style)
     [M+1 .. end]   data blocks, bump-allocated per generation
 
-A checkpoint *commit* is: write data blocks (through whatever caching policy
-the device uses — Caiti by default), write the manifest blocks for the next
-generation into the inactive ping-pong region, fsync (PREFLUSH|FUA drains
-the transit cache and the BTT), then write the root block last and fsync
-again.  Because BTT gives block-level write atomicity, the root flip is
-all-or-nothing: a crash anywhere leaves the previous generation intact —
-the same roll-forward-or-stale guarantee BTT's Flog gives a single block.
+A checkpoint *commit* depends on the device's atomicity primitive:
+
+  * **single device** (block-level atomicity only): write the manifest
+    blocks for the next generation into the inactive ping-pong region,
+    fsync, then write the root block last and fsync again.  The BTT makes
+    the root flip all-or-nothing, so a crash anywhere leaves the previous
+    generation intact — at the price of double-written manifests and an
+    extra fsync round trip;
+  * **striped volume** (``supports_chained_tx``): root + manifest are one
+    ``write_multi`` starting at lba 0 — the volume's chained-tx journal
+    commits the whole object atomically (tail header = commit point), so
+    the ping-pong double write and the separate root-flip pass are gone:
+    one logical write, one fsync, same crash guarantee.
 """
 from __future__ import annotations
 
@@ -44,8 +50,15 @@ class BlockStore:
         self.n_lbas = n_lbas
         self._manifest_cap = manifest_blocks
         self._data_base = 1 + 2 * manifest_blocks
+        # chained-tx commit (striped volumes): root + manifest land as ONE
+        # whole-object-atomic write_multi — no ping-pong, no root flip
+        self._chained = bool(getattr(device, "supports_chained_tx", False)
+                             and hasattr(device, "write_multi"))
         self.generation = 0
         self._alloc_ptr = self._data_base
+        # the manifest region the committed root points at — a fallback
+        # (ping-pong) commit must never overwrite it before the flip
+        self._active_mlba = 0
         # key -> (lba_start, n_blocks, nbytes) for the *current* generation
         self.directory: dict[str, tuple[int, int, int]] = {}
         self._load_root()
@@ -63,6 +76,7 @@ class BlockStore:
             return
         man = json.loads(payload.decode())
         self.generation = gen
+        self._active_mlba = mlba
         self.directory = {k: tuple(v) for k, v in man["objects"].items()}
         self._alloc_ptr = man["alloc_ptr"]
 
@@ -121,25 +135,46 @@ class BlockStore:
                                       for k, v in self.directory.items()},
                           "alloc_ptr": self._alloc_ptr}).encode()
         crc = zlib.crc32(man)
-        mlba = self._manifest_region(gen)
         bs = self.block_size
         n_blocks = (len(man) + bs - 1) // bs
         assert n_blocks <= self._manifest_cap, "manifest too large"
+        chained = self._chained and (1 + n_blocks) <= \
+            self.dev.max_atomic_write_blocks()
+        if chained:
+            mlba = 1
+        else:
+            mlba = self._manifest_region(gen)
+            if mlba == self._active_mlba:
+                # a prior chained commit parked the root on this region
+                # (parity broken): use the OTHER one — writing over the
+                # active manifest before the flip would destroy the
+                # previous generation on crash
+                mlba = 1 + self._manifest_cap if mlba == 1 else 1
+        root = struct.pack(_ROOT_FMT, _MAGIC, gen, mlba, len(man), crc)
+        root = root + b"\x00" * (bs - len(root))
+        chunks = [man[i * bs:(i + 1) * bs] for i in range(n_blocks)]
+        chunks = [c + b"\x00" * (bs - len(c)) for c in chunks]
         # 1. drain the transit cache + BTT (all data durable first)
         self.dev.fsync()
+        if chained:
+            # 2. ONE whole-object-atomic logical write: root + manifest.
+            #    The chained-tx journal's tail header is the commit point
+            #    — no ping-pong double write, no separate root flip.
+            self.dev.write_multi(0, [root] + chunks)
+            self.dev.fsync()
+            self.generation = gen
+            self._active_mlba = mlba
+            return gen
         # 2. manifest into the inactive ping-pong region
-        for i in range(n_blocks):
-            chunk = man[i * bs:(i + 1) * bs]
-            chunk = chunk + b"\x00" * (bs - len(chunk))
+        for i, chunk in enumerate(chunks):
             self.dev.write(mlba + i, chunk)
         self.dev.fsync()
         # 3. THE flip: one atomic root-block write (BTT CoW makes it
         #    all-or-nothing), then the final durability barrier
-        root = struct.pack(_ROOT_FMT, _MAGIC, gen, mlba, len(man), crc)
-        root = root + b"\x00" * (bs - len(root))
         self.dev.write(0, root)
         self.dev.fsync()
         self.generation = gen
+        self._active_mlba = mlba
         return gen
 
     def close(self) -> None:

@@ -107,12 +107,17 @@ class CaitiCache:
 
     def __init__(self, btt: BTT, cfg: CaitiConfig | None = None,
                  metrics: Metrics | None = None, evict_pool=None,
-                 bypass_hook=None, read_tier=None, tier_ns: int = 0) -> None:
+                 bypass_hook=None, read_tier=None, tier_ns: int = 0,
+                 admission=None) -> None:
         self.btt = btt
         self.cfg = cfg or CaitiConfig(block_size=btt.block_size)
         assert self.cfg.block_size == btt.block_size
         self.metrics = metrics or Metrics()
         self.bypass_hook = bypass_hook
+        # unified admission layer (repro.volume.AdmissionPolicy): scan
+        # detection decides read-tier fills; the volume also routes its
+        # aggregate bypass watermark through it (via bypass_hook)
+        self.admission = admission
         self.read_tier = read_tier
         self.tier_ns = tier_ns
         n = self.cfg.n_slots
@@ -268,6 +273,13 @@ class CaitiCache:
 
     # --------------------------------------------------------------- read
     def read(self, lba: int, out: np.ndarray | None = None) -> np.ndarray:
+        return self.read_ex(lba, out=out)[0]
+
+    def read_ex(self, lba: int, out: np.ndarray | None = None):
+        """Read one block and report where it was served from:
+        ``(data, source)`` with source 'transit' | 'tier' | 'backend'.
+        The volume uses the source for tier-aware QoS pricing (a DRAM
+        hit must not debit a tenant like a PMem round trip)."""
         cs = self._set_for(lba)
         with cs.lock:
             sh = cs.table.get(lba)
@@ -277,21 +289,35 @@ class CaitiCache:
                     self.metrics.bump("read_hits")
                     if out is not None:
                         out[:] = self._buf[sh.idx]
-                        return out
-                    return self._buf[sh.idx].copy()
+                        return out, "transit"
+                    return self._buf[sh.idx].copy(), "transit"
+        adm = self.admission
         tier = self.read_tier
+        token = None
+        fill = False
         if tier is not None:
             key = (self.tier_ns, lba)
             hit = tier.lookup(key, out=out)
             if hit is not None:
+                if adm is not None:        # hits still feed the detector
+                    adm.observe_read(self.tier_ns, lba)
                 self.metrics.bump("read_tier_hits")
-                return hit
-            token = tier.prepare(key)      # fence the fill against writes
+                return hit, "tier"
+            # sequential-scan bypass: a giant scan's fills would flush
+            # the tier's hot set for blocks it never revisits.  One lock
+            # round trip: observe + decide together.
+            fill = adm is None or adm.observe_and_admit(self.tier_ns, lba)
+            if fill:
+                token = tier.prepare(key)  # fence the fill against writes
+            else:
+                self.metrics.bump("tier_fill_bypassed")
+        elif adm is not None:
+            adm.observe_read(self.tier_ns, lba)
         self.metrics.bump("read_misses")
         data = self.btt.read(lba, out=out)
-        if tier is not None and tier.insert(key, data, token=token):
+        if tier is not None and fill and tier.insert(key, data, token=token):
             self.metrics.bump("read_tier_fills")
-        return data
+        return data, "backend"
 
     # ----------------------------------------------------------- eviction
     def _evict_worker(self) -> None:

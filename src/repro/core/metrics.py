@@ -21,6 +21,18 @@ Read-path counters (the layered read stack of PR 2) are plain events on
                           (a mid-flight write, not corruption)
   unrecoverable_reads   — no copy matched the ledger (surfaced primary)
   resync_repairs        — divergent copies rewritten by the resyncer
+  tier_fill_bypassed    — read-miss fills denied by the admission layer
+                          (sequential-scan bypass: the scan must not
+                          flush the tier's hot set)
+
+Commit-path counters (the transactional write pipeline of PR 3) live on
+``count`` as well — ``commit_path()`` summarizes them:
+  chain_txs             — chained-journal links logged (whole-object
+                          atomicity for >span logical writes)
+  group_commits         — leader-executed fsync checkpoints
+  group_commit_waiters  — fsync calls that coalesced onto a leader's
+                          commit instead of paying their own drain +
+                          superblock pass
 """
 from __future__ import annotations
 
@@ -49,6 +61,13 @@ READ_COUNTERS = (
     "verify_races",
     "unrecoverable_reads",
     "resync_repairs",
+    "tier_fill_bypassed",
+)
+
+COMMIT_COUNTERS = (
+    "chain_txs",
+    "group_commits",
+    "group_commit_waiters",
 )
 
 
@@ -101,6 +120,16 @@ class Metrics:
         served = out["read_hits"] + out["read_tier_hits"] + out["read_misses"]
         out["dram_hit_rate"] = ((out["read_hits"] + out["read_tier_hits"])
                                 / served if served else 0.0)
+        return out
+
+    def commit_path(self) -> dict[str, float]:
+        """Commit-path summary: chained-tx and group-commit counters plus
+        the fraction of fsync calls that rode a leader's commit."""
+        with self._lock:
+            out = {c: self.count.get(c, 0) for c in COMMIT_COUNTERS}
+        calls = out["group_commits"] + out["group_commit_waiters"]
+        out["coalesce_rate"] = (out["group_commit_waiters"] / calls
+                                if calls else 0.0)
         return out
 
     def percentile_us(self, p: float) -> float:

@@ -25,11 +25,16 @@ class TransitBuffer:
     def __init__(self, sink: Callable[[object], None],
                  capacity_bytes: int = 256 << 20, n_workers: int = 2,
                  eager: bool = True, bypass: bool = True,
-                 metrics: Metrics | None = None) -> None:
+                 metrics: Metrics | None = None, admission=None) -> None:
         self.sink = sink
         self.capacity = capacity_bytes
         self.eager = eager
         self.bypass = bypass
+        # optional repro.volume.AdmissionPolicy: when the unified policy
+        # says the system is over its aggregate watermark, a put bypasses
+        # staging even though THIS buffer still has room — the same
+        # global conditional-bypass rule the block-level caches follow
+        self.admission = admission
         self.metrics = metrics or Metrics()
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
@@ -63,8 +68,11 @@ class TransitBuffer:
 
     def put(self, payload, nbytes: int) -> str:
         """Stage one item. Returns 'staged' or 'bypass'."""
+        globally_full = (self.bypass and self.admission is not None
+                         and self.admission.should_bypass_write())
         with self._lock:
-            full = self._staged_bytes + nbytes > self.capacity
+            full = globally_full \
+                or self._staged_bytes + nbytes > self.capacity
             if not full:
                 self._staged_bytes += nbytes
                 self._enqueued += 1

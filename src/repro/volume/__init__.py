@@ -8,8 +8,15 @@ Generalizes the paper's single-device Caiti mechanism to a logical volume:
     SharedEvictionPool     — one background eviction pool drained
                              congestion-aware across all shards, in
                              per-socket (NUMA) worker banks
-    VolumeJournal          — redo journal giving multi-shard logical writes
-                             all-or-nothing crash semantics
+    VolumeJournal          — chained-tx redo journal: whole-object
+                             all-or-nothing crash semantics for logical
+                             writes of any size (tail header = commit pt)
+    GroupCommitter         — leader/follower fsync coalescing (one drain
+                             + superblock pass per concurrent batch)
+    AdmissionPolicy        — unified admission: bypass watermark, read-
+                             tier fill policy (sequential-scan bypass),
+                             tier-aware QoS read pricing
+    ScanDetector           — multi-stream sequential-run tracker
     ReadTier               — clean-slot CLOCK DRAM read cache fronting the
                              shards (never journaled)
     ReplicaResyncer        — background repair of divergent replica blocks
@@ -40,14 +47,16 @@ Writes are unchanged from the paper (stage -> eager eviction -> BTT,
 conditional bypass under pressure); they only *invalidate* tier entries,
 so crash atomicity (redo journal + BTT Flog) is untouched by the tier.
 """
+from .admission import AdmissionPolicy, ScanDetector
 from .evict_pool import SharedEvictionPool
-from .journal import VolumeJournal
+from .journal import GroupCommitter, VolumeJournal
 from .qos import QoSError, TenantSpec, TokenBucket, WFQGate
 from .read_tier import ReadTier, ReplicaResyncer
 from .volume import StripedVolume, VolumeConfig, make_volume
 
 __all__ = [
-    "SharedEvictionPool", "VolumeJournal", "TokenBucket", "WFQGate",
-    "TenantSpec", "QoSError", "StripedVolume", "VolumeConfig", "make_volume",
-    "ReadTier", "ReplicaResyncer",
+    "SharedEvictionPool", "VolumeJournal", "GroupCommitter", "TokenBucket",
+    "WFQGate", "TenantSpec", "QoSError", "StripedVolume", "VolumeConfig",
+    "make_volume", "ReadTier", "ReplicaResyncer", "AdmissionPolicy",
+    "ScanDetector",
 ]

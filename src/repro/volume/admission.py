@@ -1,0 +1,165 @@
+"""Unified admission layer for the write/read pipeline.
+
+Before this module the stack's admission decisions were scattered: the
+volume installed a ``bypass_hook`` closure on every shard cache (global
+conditional-bypass watermark), the read tier filled on every miss
+unconditionally, and QoS debiting lived inline in ``StripedVolume`` and
+priced every read like a PMem round trip.  :class:`AdmissionPolicy` pulls
+all three behind one object that ``CaitiCache``, ``StripedVolume``,
+``ReadTier`` and ``TransitBuffer`` consult:
+
+  * **write bypass** — ``should_bypass_write()`` is the volume's
+    aggregate-staged watermark (the paper's conditional bypass extended
+    volume-wide): when staged slots across all shards cross the
+    watermark, a write miss transits straight to BTT even though its own
+    shard still has free slots;
+  * **read-tier fill admission** — ``admit_tier_fill(ns, lba)`` denies
+    fills to *sequential scans*: a reader streaming a long contiguous
+    range (backup, ``BlockStore.get`` of a giant object, table scan)
+    would flush the tier's hot set for blocks it will never touch again.
+    The detector tracks up to ``max_streams`` concurrent per-namespace
+    runs (Linux-readahead style: an access extending a previously seen
+    ``lba+1`` expectation lengthens that run); once a run exceeds
+    ``scan_threshold`` blocks, further fills from it are dropped.  The
+    first ``scan_threshold`` blocks of any scan still fill — random and
+    short-run readers are unaffected;
+  * **tier-aware QoS pricing** — ``read_charge(nbytes, source)`` is the
+    byte cost a tenant's token bucket is debited for a read.  A transit-
+    cache or read-tier hit is a DRAM copy, not a PMem round trip, so it
+    is charged ``tier_hit_cost_frac`` of its size (default 1/8); only
+    backend reads pay full price.  A tier-hot tenant therefore is not
+    throttled like a PMem-bound one (ROADMAP follow-on).
+
+The object is deliberately dumb and lock-cheap: every hook is O(1) under
+one small lock, safe to call from foreground read/write paths and from
+pool workers.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+
+class ScanDetector:
+    """Sequential-run tracker, keyed by (namespace, expected-next-lba).
+
+    ``observe(ns, lba)`` returns the length of the run this access
+    extends (1 for a random access).  Up to ``max_streams`` interleaved
+    streams are tracked per namespace so two concurrent scanners (or a
+    scanner plus random readers) do not reset each other.
+    """
+
+    def __init__(self, max_streams: int = 8) -> None:
+        self.max_streams = max_streams
+        # ns -> OrderedDict{expected_next_lba -> run_len}
+        self._streams: dict[object, OrderedDict] = {}
+
+    def observe(self, ns, lba: int) -> int:
+        streams = self._streams.setdefault(ns, OrderedDict())
+        run = streams.pop(lba, 0) + 1
+        streams[lba + 1] = run
+        while len(streams) > self.max_streams:
+            streams.popitem(last=False)          # drop the coldest stream
+        return run
+
+    def current_run(self, ns, lba: int) -> int:
+        """Run length of the stream that ``lba`` belongs to (after its
+        observe), without mutating detector state."""
+        streams = self._streams.get(ns)
+        if not streams:
+            return 1
+        return streams.get(lba + 1, 1)
+
+
+class AdmissionPolicy:
+    """One policy object for the three scattered admission decisions.
+
+    ``staged_slots_fn``/``watermark_slots`` — aggregate bypass watermark
+    (the volume wires its shard caches' staged-slot sum in here).
+    ``scan_threshold`` — run length above which tier fills are denied
+    (0 disables scan detection: every fill admitted).
+    ``tier_hit_cost_frac`` — QoS price of a DRAM-served read relative to
+    a backend (PMem) read of the same size.
+    """
+
+    def __init__(self, *, staged_slots_fn=None, watermark_slots: int = 0,
+                 scan_threshold: int = 64, max_streams: int = 8,
+                 tier_hit_cost_frac: float = 0.125) -> None:
+        assert 0.0 <= tier_hit_cost_frac <= 1.0
+        self.staged_slots_fn = staged_slots_fn
+        self.watermark_slots = watermark_slots
+        self.scan_threshold = scan_threshold
+        self.tier_hit_cost_frac = tier_hit_cost_frac
+        self._detector = ScanDetector(max_streams=max_streams)
+        self._lock = threading.Lock()
+        self.scan_fill_denials = 0
+
+    # ------------------------------------------------------- write bypass
+    def should_bypass_write(self) -> bool:
+        """Volume-wide conditional bypass: aggregate staged slots crossed
+        the watermark — one PMem write beats evict-then-fill."""
+        if self.staged_slots_fn is None or self.watermark_slots <= 0:
+            return False
+        return self.staged_slots_fn() >= self.watermark_slots
+
+    # --------------------------------------------------- read observation
+    def observe_read(self, ns, lba: int) -> int:
+        """Feed one read access to the scan detector; returns the run
+        length this access extends.  Call once per read, before the fill
+        decision."""
+        if self.scan_threshold <= 0:
+            return 1
+        with self._lock:
+            return self._detector.observe(ns, lba)
+
+    def observe_and_admit(self, ns, lba: int) -> bool:
+        """One-lock fast path for the cache read miss: feed the detector
+        AND decide the fill in a single acquisition (the observe/admit
+        split costs two lock round trips per miss on a shared policy)."""
+        if self.scan_threshold <= 0:
+            return True
+        with self._lock:
+            if self._detector.observe(ns, lba) <= self.scan_threshold:
+                return True
+            self.scan_fill_denials += 1
+            return False
+
+    def admit_tier_fill(self, ns, lba: int) -> bool:
+        """May this read-miss fill the clean read tier?  False once the
+        access belongs to a sequential run longer than the threshold —
+        giant scans bypass the tier instead of flushing the hot set.
+        Pure (no detector update): safe to re-check at insert time."""
+        if self.scan_threshold <= 0:
+            return True
+        with self._lock:
+            if self._detector.current_run(ns, lba) <= self.scan_threshold:
+                return True
+            self.scan_fill_denials += 1
+            return False
+
+    def admit_key_fill(self, key) -> bool:
+        """Tier-side hook for ``ReadTier.insert``: unpack the volume's
+        ``(ns, lba)`` block keys; object-mode keys are always admitted
+        (no address locality to detect scans on)."""
+        if (isinstance(key, tuple) and len(key) == 2
+                and isinstance(key[1], int)):
+            return self.admit_tier_fill(key[0], key[1])
+        return True
+
+    # ------------------------------------------------------- QoS pricing
+    def read_charge(self, nbytes: int, source: str) -> int:
+        """Token-bucket debit for a read served from ``source``
+        ('transit' | 'tier' | 'backend').  DRAM hits cost a fraction."""
+        if source == "backend":
+            return nbytes
+        return int(nbytes * self.tier_hit_cost_frac)
+
+    def write_charge(self, nbytes: int) -> int:
+        return nbytes
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {"scan_fill_denials": self.scan_fill_denials,
+                "scan_threshold": self.scan_threshold,
+                "watermark_slots": self.watermark_slots,
+                "tier_hit_cost_frac": self.tier_hit_cost_frac}

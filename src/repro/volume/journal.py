@@ -1,28 +1,52 @@
-"""Redo journal for cross-shard write atomicity.
+"""Chained-transaction redo journal with group-committed checkpoints.
 
 A shard's BTT makes each *single-block* write atomic (CoW + Flog), but a
 logical write that spans shards has no such guarantee: a crash between the
 per-shard writes leaves a torn multi-block write.  The volume closes the
-gap with physical redo journaling, the same discipline ext4's data journal
-and md's write journal use, built out of the atomicity primitive we
-already have — one BTT block write:
+gap with physical redo journaling built out of the atomicity primitive we
+already have — one BTT block write.
 
-  1. the payload blocks are written into a journal slot (direct to the
-     slot shard's BTT, bypassing any staging cache);
-  2. the header block — {magic, txid, logical lba, n_blocks, payload crc}
-     — is written LAST via one atomic BTT write.  That is the commit
-     point: a valid header proves the whole payload is on media;
-  3. only then do the in-place data writes start (through the shards'
-     transit caches, eagerly evicted in the background).
+Commit records (one journal slot each)
+--------------------------------------
+Every record header carries ``{magic, txid, lba, n_blocks, crc, chain_id,
+seq, flags}``.  A logical write of up to ``span`` blocks is ONE record; a
+larger write becomes a **chain** of records sharing a ``chain_id`` (the
+chain's first txid) with consecutive ``seq`` numbers, the last one flagged
+``CHAIN_TAIL``.  The commit protocol for a chain is:
 
-Recovery replays every journal slot whose header is valid and whose txid
-is newer than the checkpointed ``applied`` txid, in txid order — torn
-in-place writes are rolled forward to the complete image, and a tx whose
-header never landed is invisible (old data intact on every shard).
+  1. every link's payload blocks are written into its journal slot
+     (direct to the slot shard's BTT, bypassing any staging cache);
+  2. the non-tail headers are written next, grouped by slot shard so a
+     multi-link chain costs one header pass per shard;
+  3. the TAIL header is written LAST via one atomic BTT write.  That
+     single block write is the commit point for the *whole chain*: a
+     valid tail proves every earlier link is on media (headers are
+     ordered), so recovery replays the chain whole — and a crash before
+     the tail leaves the chain invisible (old object intact on every
+     shard), because in-place writes only start after the tail lands.
+
+This gives **whole-object atomicity** for arbitrarily large logical
+writes (bounded by the ring: a chain may not exceed ``n_slots`` links)
+without a blockstore-style root flip and without per-transaction-only
+guarantees.  Legacy records written before chaining existed carry
+``chain_id == 0`` and replay standalone, so old volumes reopen cleanly.
+
+Recovery (:meth:`VolumeJournal.scan`) keeps a record iff its header is
+valid, its txid is newer than the checkpointed ``applied`` txid, and its
+chain is *complete* — all links present with the tail flagged.  Torn
+in-place writes are rolled forward to the complete image; a chain whose
+tail never landed is invisible.
+
+Checkpoints and group commit
+----------------------------
 ``fsync`` checkpoints: after the caches drain, all journaled txids are
 durable in place, so the applied mark advances and old slots are skipped
-at recovery (a later un-journaled overwrite can no longer be clobbered by
-a stale replay).
+at recovery.  The volume wraps that checkpoint in a
+:class:`GroupCommitter`: concurrent ``fsync`` callers elect one leader
+that performs a single drain + one applied-mark superblock pass for the
+whole batch (optionally waiting ``commit_window`` seconds to gather more
+followers) — N tenants syncing together pay one header-write round trip
+instead of N, the NVCache/van-Renen group-commit argument.
 
 Slots are striped round-robin across shards so journal bandwidth scales
 with the volume.
@@ -31,12 +55,15 @@ from __future__ import annotations
 
 import struct
 import threading
+import time
 import zlib
 
 import numpy as np
 
 _JMAGIC = 0x10CA171          # "IO CAITI" journal
-_HDR_FMT = "<QQQQQ"          # magic, txid, lba, n_blocks, crc
+# magic, txid, lba, n_blocks, crc, chain_id, seq, flags
+_HDR_FMT = "<QQQQQQQQ"
+CHAIN_TAIL = 1               # flags bit: last link of its chain
 
 
 class VolumeJournal:
@@ -45,7 +72,8 @@ class VolumeJournal:
     ``btts``      — one BTT per shard (journal I/O bypasses caches).
     ``base_lba``  — first shard-local lba of the journal region (the same
                     on every shard; the volume reserves the region).
-    ``span``      — max payload blocks per transaction (slot size - 1).
+    ``span``      — max payload blocks per record (slot size - 1); larger
+                    logical writes chain multiple records.
     """
 
     def __init__(self, btts, *, base_lba: int, n_slots: int = 64,
@@ -60,6 +88,7 @@ class VolumeJournal:
         self._lock = threading.Lock()
         self.next_txid = 1          # 0 means "nothing applied yet"
         self.applied_txid = 0       # persisted by the volume superblock
+        self.chains_logged = 0
 
     # ------------------------------------------------------------ geometry
     def blocks_per_shard(self) -> int:
@@ -72,28 +101,14 @@ class VolumeJournal:
         local = slot // self.n_shards
         return shard, self.base_lba + local * self.slot_blocks
 
-    # ------------------------------------------------------------- logging
-    def log(self, lba: int, blocks: list[bytes],
-            checkpoint_cb=None) -> int:
-        """Persist one redo record; returns the committed txid.
+    def max_chain_blocks(self) -> int:
+        """Largest logical write one chain can cover (ring bound)."""
+        return self.n_slots * self.span
 
-        ``checkpoint_cb`` is invoked (outside no locks we need re-entrant)
-        when the ring wraps onto a slot whose previous occupant has not
-        been checkpointed yet — the volume drains its caches and advances
-        ``applied_txid`` so the slot is safe to reuse.
-        """
-        assert 0 < len(blocks) <= self.span, \
-            f"tx of {len(blocks)} blocks exceeds journal span {self.span}"
-        with self._lock:
-            txid = self.next_txid
-            self.next_txid += 1
-            need_ckpt = txid - self.n_slots > self.applied_txid \
-                and txid > self.n_slots
-        if need_ckpt and checkpoint_cb is not None:
-            # checkpoint strictly BELOW this txid: the current tx has not
-            # written in place yet, so marking it applied would let a
-            # crash skip its replay and surface a torn write
-            checkpoint_cb(txid - 1)
+    # ------------------------------------------------------------- logging
+    def _write_payload(self, txid: int, blocks) -> tuple[int, int, int]:
+        """Write one record's payload into its slot; returns
+        (shard, header lba, payload crc)."""
         slot = txid % self.n_slots
         shard, hdr_lba = self._slot_home(slot)
         btt = self.btts[shard]
@@ -101,11 +116,81 @@ class VolumeJournal:
         crc = zlib.crc32(payload)
         for i, blk in enumerate(blocks):
             btt.write(hdr_lba + 1 + i, np.frombuffer(bytes(blk), np.uint8))
-        hdr = struct.pack(_HDR_FMT, _JMAGIC, txid, lba, len(blocks), crc)
+        return shard, hdr_lba, crc
+
+    def _write_header(self, shard: int, hdr_lba: int, txid: int, lba: int,
+                      n_blocks: int, crc: int, chain_id: int, seq: int,
+                      flags: int) -> None:
+        hdr = struct.pack(_HDR_FMT, _JMAGIC, txid, lba, n_blocks, crc,
+                          chain_id, seq, flags)
         hdr = hdr + b"\x00" * (self.block_size - len(hdr))
-        # the commit point: one atomic BTT block write
-        btt.write(hdr_lba, np.frombuffer(hdr, np.uint8))
-        return txid
+        # one atomic BTT block write
+        self.btts[shard].write(hdr_lba, np.frombuffer(hdr, np.uint8))
+
+    def log(self, lba: int, blocks: list[bytes],
+            checkpoint_cb=None) -> int:
+        """Persist one single-record transaction; returns the committed
+        txid.  Equivalent to a chain of length 1 (the header is flagged
+        ``CHAIN_TAIL`` immediately, so it is the commit point)."""
+        return self.log_chain(lba, blocks, checkpoint_cb=checkpoint_cb)[-1]
+
+    def log_chain(self, lba: int, blocks, checkpoint_cb=None) -> list[int]:
+        """Persist one logical write as a chain of records; returns the
+        txids, tail last.  The write is committed — recovery will roll the
+        WHOLE image forward — only once this returns (tail header landed);
+        any earlier crash leaves it invisible.
+
+        ``checkpoint_cb(upto)`` is invoked when the ring wraps onto slots
+        whose previous occupants have not been checkpointed yet — the
+        volume drains its caches and advances ``applied_txid``.  The
+        callback receives an upper bound strictly below this chain's first
+        txid: marking any chain link applied before its in-place writes
+        happen would let a crash skip the replay and surface a torn
+        object.
+        """
+        blocks = [bytes(b) for b in blocks]
+        assert blocks, "empty transaction"
+        links = [blocks[off:off + self.span]
+                 for off in range(0, len(blocks), self.span)]
+        assert len(links) <= self.n_slots, \
+            f"chain of {len(links)} links exceeds the {self.n_slots}-slot " \
+            f"ring (max {self.max_chain_blocks()} blocks per logical write)"
+        with self._lock:
+            first = self.next_txid
+            self.next_txid += len(links)
+            last = first + len(links) - 1
+            # slots for txids (last - n_slots, last] are about to be
+            # reused; everything at or below last - n_slots must be
+            # checkpointed first.  The checkpoint drains every cache, so
+            # marking applied up to first - 1 is safe — but never the
+            # chain itself (its in-place writes have not happened yet)
+            need_ckpt = last > self.n_slots \
+                and last - self.n_slots > self.applied_txid
+        if need_ckpt and checkpoint_cb is not None:
+            checkpoint_cb(first - 1)
+        chain_id = first
+        # phase 1: all payloads
+        homes = []
+        off = 0
+        for i, link in enumerate(links):
+            txid = first + i
+            shard, hdr_lba, crc = self._write_payload(txid, link)
+            homes.append((txid, lba + off, len(link), shard, hdr_lba, crc))
+            off += len(link)
+        # phase 2: non-tail headers, one pass per slot shard
+        body = homes[:-1]
+        for shard in sorted({h[3] for h in body}):
+            for seq, (txid, l, n, s, hdr_lba, crc) in enumerate(body):
+                if s == shard:
+                    self._write_header(s, hdr_lba, txid, l, n, crc,
+                                       chain_id, seq, 0)
+        # phase 3: THE commit point — the tail header, written last
+        txid, l, n, s, hdr_lba, crc = homes[-1]
+        self._write_header(s, hdr_lba, txid, l, n, crc,
+                           chain_id, len(homes) - 1, CHAIN_TAIL)
+        with self._lock:
+            self.chains_logged += 1
+        return [h[0] for h in homes]
 
     def mark_applied(self, txid: int) -> None:
         with self._lock:
@@ -117,15 +202,22 @@ class VolumeJournal:
 
     # ------------------------------------------------------------ recovery
     def scan(self) -> list[tuple[int, int, list[bytes]]]:
-        """All valid records newer than ``applied_txid``: (txid, lba, blocks),
-        sorted ascending by txid."""
-        found = []
+        """All committed records newer than ``applied_txid``:
+        (txid, lba, blocks), sorted ascending by txid.
+
+        A record is committed iff its header+payload are valid AND its
+        chain is complete: every link (seq 0..tail) present under the
+        same ``chain_id`` with the tail flagged.  Legacy records
+        (``chain_id == 0``, written before chaining) replay standalone.
+        """
         hdr_len = struct.calcsize(_HDR_FMT)
+        records = []                 # (txid, lba, blocks, chain_id, seq, fl)
         for slot in range(self.n_slots):
             shard, hdr_lba = self._slot_home(slot)
             btt = self.btts[shard]
             raw = bytes(btt.read(hdr_lba)[:hdr_len])
-            magic, txid, lba, n_blocks, crc = struct.unpack(_HDR_FMT, raw)
+            magic, txid, lba, n_blocks, crc, chain_id, seq, flags = \
+                struct.unpack(_HDR_FMT, raw)
             if magic != _JMAGIC or txid <= self.applied_txid:
                 continue
             if not 0 < n_blocks <= self.span:
@@ -133,7 +225,108 @@ class VolumeJournal:
             blocks = [bytes(btt.read(hdr_lba + 1 + i))
                       for i in range(n_blocks)]
             if zlib.crc32(b"".join(blocks)) != crc:
-                continue                     # torn journal write: not committed
-            found.append((txid, lba, blocks))
+                continue                 # torn journal write: not committed
+            records.append((txid, lba, blocks, chain_id, seq, flags))
+        # chain completeness: keep standalone/legacy records; keep chain
+        # links only when the whole chain made it (tail header landed)
+        by_chain: dict[int, list] = {}
+        for rec in records:
+            by_chain.setdefault(rec[3], []).append(rec)
+        found = []
+        for chain_id, recs in by_chain.items():
+            if chain_id == 0:            # legacy: each record standalone
+                found.extend(recs)
+                continue
+            recs.sort(key=lambda r: r[4])
+            tail = recs[-1]
+            complete = (tail[5] & CHAIN_TAIL) \
+                and [r[4] for r in recs] == list(range(len(recs))) \
+                and [r[0] for r in recs] == [chain_id + i
+                                             for i in range(len(recs))]
+            if complete:
+                found.extend(recs)
         found.sort(key=lambda r: r[0])
-        return found
+        return [(txid, lba, blocks) for txid, lba, blocks, *_ in found]
+
+
+class GroupCommitter:
+    """Leader/follower coalescing for ``fsync``-style commits.
+
+    ``sync()`` guarantees that one full commit (``commit_fn``) starts
+    after the call and completes before it returns — but N concurrent
+    callers share ONE commit: the first becomes leader, optionally waits
+    ``window`` seconds for more followers, then runs ``commit_fn`` once
+    for the whole batch.  Followers whose request predates the commit's
+    start simply wait for it.  With ``window == 0`` there is no added
+    latency and purely-concurrent callers still coalesce.
+    """
+
+    def __init__(self, commit_fn, window: float = 0.0) -> None:
+        self._commit_fn = commit_fn
+        self.window = window
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._seq = 0                # requests issued
+        self._completed = 0          # highest request covered by a commit
+        self._leader = False
+        # failed batches as (low, high, err) request ranges: an error is
+        # delivered ONLY to the callers whose requests that commit
+        # covered, never leaked to a later batch's waiters
+        self._failed: list[tuple[int, int, BaseException]] = []
+        self.commits = 0             # commit_fn invocations
+        self.calls = 0               # sync() invocations
+
+    def _batch_error(self, req: int) -> BaseException | None:
+        for low, high, err in self._failed:
+            if low <= req <= high:
+                return err
+        return None
+
+    def sync(self) -> bool:
+        """Returns True when this caller led the commit, False when it
+        coalesced onto another caller's."""
+        with self._cond:
+            self.calls += 1
+            self._seq += 1
+            my_req = self._seq
+            while True:
+                if self._completed >= my_req:
+                    err = self._batch_error(my_req)
+                    if err is not None:
+                        raise err
+                    return False
+                if not self._leader:
+                    self._leader = True
+                    break
+                self._cond.wait(timeout=0.5)
+        # ---- leader: gather, commit once for everyone <= batch_high
+        err = None
+        try:
+            if self.window > 0:
+                time.sleep(self.window)
+            with self._lock:
+                batch_high = self._seq
+            try:
+                self._commit_fn()
+            except BaseException as e:      # propagate to the whole batch
+                err = e
+            with self._cond:
+                self.commits += 1
+                if err is not None:
+                    self._failed.append(
+                        (self._completed + 1, batch_high, err))
+                    if len(self._failed) > 64:     # bound the history
+                        self._failed.pop(0)
+                self._completed = max(self._completed, batch_high)
+        finally:
+            with self._cond:
+                self._leader = False
+                self._cond.notify_all()
+        if err is not None:
+            raise err
+        return True
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"calls": self.calls, "commits": self.commits,
+                    "coalesced": self.calls - self.commits}

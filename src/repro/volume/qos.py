@@ -81,6 +81,16 @@ class TokenBucket:
                 return True
             return False
 
+    def charge(self, nbytes: int) -> None:
+        """Non-blocking post-service debit: the balance may go negative
+        and the debt settles at the next refill, so a cheap DRAM-served
+        read is accounted for without ever sleeping on the PMem budget
+        (blk-iocost-style debt).  Subsequent ``acquire`` calls wait the
+        debt out."""
+        with self._lock:
+            self._refill(self._clock())
+            self._tokens -= nbytes
+
 
 class WFQGate:
     """Start-time fair queuing admission gate with a bounded window.

@@ -65,6 +65,11 @@ class ReadTier:
         self.block_size = block_size
         self.n_slots = n_slots
         self.metrics = metrics
+        # optional AdmissionPolicy: read-miss fills (token path) from
+        # sequential scans are dropped so they cannot flush the hot set.
+        # The volume installs its unified policy here; direct users of
+        # the tier get the same protection as cache-fronted reads.
+        self.admission = None
         self._buf = (np.zeros((n_slots, block_size), dtype=np.uint8)
                      if block_size else None)
         self._objs: list = [None] * (0 if block_size else n_slots)
@@ -121,7 +126,10 @@ class ReadTier:
             return st[0]
 
     def insert(self, key, data, token: int | None = None) -> bool:
-        """Install ``data`` under ``key``; returns False if fenced off."""
+        """Install ``data`` under ``key``; returns False if fenced off or
+        denied by the admission policy (sequential-scan fills).  Writeback
+        and repair inserts (no token) are always admitted — their data is
+        authoritative and already paid for."""
         with self._lock:
             if token is not None:
                 st = self._fence.get(key)
@@ -131,6 +139,10 @@ class ReadTier:
                     if st[1] <= 0:
                         del self._fence[key]
                 if stale:
+                    self.rejected_fills += 1
+                    return False
+                if self.admission is not None \
+                        and not self.admission.admit_key_fill(key):
                     self.rejected_fills += 1
                     return False
             slot = self._map.get(key)

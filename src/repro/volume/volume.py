@@ -17,8 +17,18 @@ cache over BTT over PMem) — into one logical LBA space:
   * **per-tenant QoS**: token-bucket rate caps and weighted fair (SFQ)
     admission, so many clients share one volume predictably;
   * **crash recovery**: per-shard BTT Flog replay (device open) plus the
-    volume redo journal (:class:`VolumeJournal`) replayed in txid order —
-    multi-shard logical writes are all-or-nothing;
+    chained-tx redo journal (:class:`VolumeJournal`) replayed in txid
+    order — a logical write of ANY size (up to the journal ring) is
+    whole-object all-or-nothing: ``write_multi`` journals it as a chain
+    of records whose tail header is the single commit point;
+  * **group commit**: concurrent ``fsync`` callers coalesce behind a
+    :class:`~repro.volume.journal.GroupCommitter` leader — one drain +
+    one applied-mark superblock pass per batch (``commit_window``
+    gathers followers), amortizing the sync round trip across tenants;
+  * **unified admission** (:class:`~repro.volume.AdmissionPolicy`): the
+    bypass watermark, the read-tier fill policy (sequential-scan bypass)
+    and tier-aware QoS read pricing live behind one object consulted by
+    the shard caches, the tier and this volume;
   * **layered read path** (``read_tier_bytes > 0``): one clean DRAM
     :class:`~repro.volume.read_tier.ReadTier` fronts every shard
     (tier -> transit cache -> BTT), populated on read miss and on
@@ -31,14 +41,20 @@ cache over BTT over PMem) — into one logical LBA space:
 
 Crash semantics: like any write-back device, writes are durable at
 ``fsync``.  After a crash, a journaled multi-block write is either fully
-visible or fully invisible (never torn); un-fsynced single-block writes
-that landed *after* a journaled write to the same blocks may be rolled
-back to the journaled image when that journal record replays.
+visible or fully invisible — whole-object, even when it spans many
+journal records (the chain replays only if its tail header landed);
+un-fsynced single-block writes that landed *after* a journaled write to
+the same blocks may be rolled back to the journaled image when that
+journal record replays.  With ``persist_ledger`` (default when reads
+are verified) the write-crc ledger summary is persisted at every
+checkpoint, so a REOPENED volume verifies reads — and can degrade to a
+replica — before the first overwrite instead of starting blind.
 """
 from __future__ import annotations
 
 import json
 import os
+import struct
 import threading
 import zlib
 
@@ -48,12 +64,15 @@ from repro.core import make_device
 from repro.core.metrics import Metrics
 from repro.core.pmem import LatencyModel
 
+from .admission import AdmissionPolicy
 from .evict_pool import SharedEvictionPool
-from .journal import VolumeJournal
+from .journal import GroupCommitter, VolumeJournal
 from .qos import TenantSpec, TokenBucket, WFQGate
 from .read_tier import ReadTier, ReplicaResyncer
 
 _SB_MAGIC = "caiti-volume-v1"
+_LEDGER_ENTRY = "<QI"        # lba, crc32
+_LEDGER_ENTRY_SIZE = struct.calcsize(_LEDGER_ENTRY)
 
 
 class VolumeConfig:
@@ -67,7 +86,11 @@ class VolumeConfig:
                  bypass_watermark: float = 0.9, journal_slots: int = 64,
                  journal_span: int = 8, max_inflight: int = 16,
                  read_tier_bytes: int = 0, n_sockets: int = 1,
-                 verify_reads: bool | None = None) -> None:
+                 verify_reads: bool | None = None,
+                 commit_window: float = 0.0,
+                 scan_threshold: int = 64,
+                 tier_hit_cost_frac: float = 0.125,
+                 persist_ledger: bool = True) -> None:
         assert n_shards >= 1 and stripe_blocks >= 1
         assert 1 <= replicas <= n_shards
         assert policy not in ("raw", "dax"), \
@@ -86,10 +109,16 @@ class VolumeConfig:
         self.max_inflight = max_inflight
         self.read_tier_bytes = read_tier_bytes
         self.n_sockets = n_sockets
+        self.commit_window = commit_window
+        self.scan_threshold = scan_threshold
+        self.tier_hit_cost_frac = tier_hit_cost_frac
         # reads are verified (and can degrade to a replica) only when a
         # replica exists to fall back to — single-copy volumes pay nothing
         self.verify_reads = (replicas > 1 if verify_reads is None
                              else verify_reads)
+        # write-crc ledger region: persisted at checkpoint so a reopened
+        # volume verifies reads before its first overwrite
+        self.persist_ledger = persist_ledger and self.verify_reads
 
     # derived geometry -------------------------------------------------------
     @property
@@ -109,8 +138,17 @@ class VolumeConfig:
         return slots_here * (1 + self.journal_span)
 
     @property
+    def ledger_blocks_per_shard(self) -> int:
+        if not self.persist_ledger:
+            return 0
+        total = -(-self.n_lbas * _LEDGER_ENTRY_SIZE // self.block_size)
+        return -(-total // self.n_shards)
+
+    @property
     def meta_blocks(self) -> int:
-        return 1 + self.journal_blocks_per_shard()      # superblock + journal
+        # superblock + crc-ledger region + journal region
+        return (1 + self.ledger_blocks_per_shard
+                + self.journal_blocks_per_shard())
 
     @property
     def shard_n_lbas(self) -> int:
@@ -123,12 +161,18 @@ class VolumeConfig:
                 "replicas": self.replicas,
                 "journal_slots": self.journal_slots,
                 "journal_span": self.journal_span,
+                "ledger_blocks": self.ledger_blocks_per_shard,
                 "applied_txid": applied_txid}
 
 
 class StripedVolume:
     """The logical device: bio-free convenience API (write/read/flush/fsync)
     mirroring ``BlockDevice`` plus ``write_multi`` (atomic) and tenants."""
+
+    #: ``write_multi`` is whole-object atomic (chained-tx journal), so
+    #: clients like the checkpoint blockstore can commit large objects in
+    #: one logical write instead of a double-write + root-flip protocol
+    supports_chained_tx = True
 
     def __init__(self, shards, cfg: VolumeConfig, *, uuid: str,
                  evict_pool: SharedEvictionPool | None = None,
@@ -147,19 +191,37 @@ class StripedVolume:
         self._txlock = threading.Lock()
         self._caches = [d.impl for d in self.shards
                         if hasattr(d.impl, "bypass_hook")]
-        self._watermark_slots = max(1, int(
+        watermark_slots = max(1, int(
             cfg.bypass_watermark
             * sum(len(c._slots) for c in self._caches))) if self._caches \
             else 0
+        # one AdmissionPolicy unifies bypass watermark, tier-fill (scan)
+        # policy and QoS read pricing for every layer of the stack
+        self.admission = AdmissionPolicy(
+            staged_slots_fn=self._staged_slots,
+            watermark_slots=watermark_slots,
+            scan_threshold=cfg.scan_threshold,
+            tier_hit_cost_frac=cfg.tier_hit_cost_frac)
         for c in self._caches:
-            c.bypass_hook = self._over_watermark
+            c.bypass_hook = self.admission.should_bypass_write
+            c.admission = self.admission
+        if read_tier is not None:
+            read_tier.admission = self.admission
         self.journal = VolumeJournal(
-            [d.impl.btt for d in self.shards], base_lba=1,
+            [d.impl.btt for d in self.shards],
+            base_lba=1 + cfg.ledger_blocks_per_shard,
             n_slots=cfg.journal_slots, span=cfg.journal_span,
             block_size=cfg.block_size)
+        # group commit: concurrent fsync callers share one drain +
+        # applied-mark superblock pass (window gathers followers)
+        self._committer = GroupCommitter(self._commit_group,
+                                         window=cfg.commit_window)
+        self._ledger_count = 0
+        self._ledger_crc = 0
         # QoS (lazy: volumes without tenants pay nothing)
         self._gate: WFQGate | None = None
         self._buckets: dict[str, TokenBucket] = {}
+        self.read_debits: dict[str, int] = {}
         self.recovery_stats: dict = {}
         # background replica repair rides the shared eviction pool (its
         # own daemon thread when the policy has no pool, e.g. plain btt)
@@ -177,9 +239,8 @@ class StripedVolume:
                  + row * cfg.stripe_blocks + within)
         return shard, local
 
-    def _over_watermark(self) -> bool:
-        staged = sum(c.staged_slots() for c in self._caches)
-        return staged >= self._watermark_slots
+    def _staged_slots(self) -> int:
+        return sum(c.staged_slots() for c in self._caches)
 
     # ------------------------------------------------------------------ QoS
     def add_tenant(self, name: str, weight: float = 1.0,
@@ -254,49 +315,82 @@ class StripedVolume:
             self._release(ticket)
 
     def write_multi(self, lba: int, blocks, tenant: str | None = None) -> int:
-        """Multi-block logical write with all-or-nothing crash semantics
-        per journal transaction (``journal_span`` blocks); longer writes
-        are split into consecutive atomic transactions."""
+        """Multi-block logical write with WHOLE-OBJECT all-or-nothing
+        crash semantics: the write is journaled as one chained
+        transaction (``journal_span`` blocks per link, tail header as the
+        single commit point), so a crash anywhere surfaces either the
+        complete new object or the complete old one — never a torn mix.
+        Bounded by the journal ring (``journal.max_chain_blocks()``)."""
         blocks = list(blocks)
         ticket = self._admit(tenant, self.block_size * len(blocks))
         try:
             if len(blocks) == 1:
                 self._write_block(lba, blocks[0])
                 return 0
-            span = self.cfg.journal_span
-            for off in range(0, len(blocks), span):
-                self._write_tx(lba + off, blocks[off:off + span])
+            self._write_tx(lba, blocks)
             return 0
         finally:
             self._release(ticket)
 
     def _write_tx(self, lba: int, blocks) -> None:
         with self._txlock:
-            self.journal.log(lba, blocks,
-                             checkpoint_cb=self._checkpoint_locked)
+            txids = self.journal.log_chain(
+                lba, blocks, checkpoint_cb=self._checkpoint_locked)
+            self.metrics.bump("chain_txs", len(txids))
+            # tail header landed: the chain is committed, and recovery
+            # rolls the whole image forward if any in-place write tears
             for i, blk in enumerate(blocks):
                 self._write_block(lba + i, blk)
 
-    def read(self, lba: int, out: np.ndarray | None = None) -> np.ndarray:
+    def _shard_read(self, shard: int, local: int,
+                    out: np.ndarray | None = None):
+        """(data, source) from one shard: 'transit' | 'tier' | 'backend'."""
+        impl = self.shards[shard].impl
+        if hasattr(impl, "read_ex"):
+            return impl.read_ex(local, out=out)
+        return impl.read(local, out=out), "backend"
+
+    def _debit_read(self, tenant: str | None, source: str) -> None:
+        """Tier-aware QoS accounting: a DRAM-served read (transit or
+        tier hit) is charged a fraction of the PMem price, so a tier-hot
+        tenant is not throttled like a PMem-bound one."""
+        if tenant is None:
+            return
+        cost = self.admission.read_charge(self.block_size, source)
+        self.read_debits[tenant] = self.read_debits.get(tenant, 0) + cost
+        bucket = self._buckets.get(tenant)
+        if bucket is None or cost <= 0:
+            return
+        if source == "backend":
+            bucket.acquire(cost)       # PMem reads are rate-enforced
+        else:
+            bucket.charge(cost)        # DRAM hits never sleep: debt only
+
+    def read(self, lba: int, out: np.ndarray | None = None,
+             tenant: str | None = None) -> np.ndarray:
         """Layered read: tier -> primary shard (transit cache -> BTT) ->
         replica (degraded).  The tier probe happens inside the shard's
         cache; this level verifies the result and falls back."""
         shard, local = self._map(lba, 0)
-        data = self.shards[shard].read(local, out=out)
+        data, source = self._shard_read(shard, local, out=out)
         if not self.cfg.verify_reads:
+            self._debit_read(tenant, source)
             return data
         want = self._crcs.get(lba)
         if want is None or self._crc(data) == want:
+            self._debit_read(tenant, source)
             return data
         # a read racing a write can see the new ledger entry before the
         # staged block is visible — one primary re-read (through the
         # transit cache, which serves staged data) settles that race
         # without a replica detour
-        data = self.shards[shard].read(local, out=out)
+        data, source = self._shard_read(shard, local, out=out)
         want = self._crcs.get(lba)
         if want is None or self._crc(data) == want:
+            self._debit_read(tenant, source)
             return data
         self.metrics.bump("verify_failures")
+        self._debit_read(tenant, "backend")    # detours are PMem-priced
         last_alt = None
         for r in range(1, self.cfg.replicas):
             s2, l2 = self._map(lba, r)
@@ -328,30 +422,101 @@ class StripedVolume:
         self.metrics.bump("unrecoverable_reads")
         return data
 
+    def max_atomic_write_blocks(self) -> int:
+        """Largest ``write_multi`` the chained journal can commit
+        atomically (ring bound: n_slots links of span blocks)."""
+        return self.journal.max_chain_blocks()
+
     def flush(self) -> int:
         for d in self.shards:
             d.flush()
         return 0
 
     def fsync(self) -> int:
-        """Drain every shard, then checkpoint the journal (all journaled
-        transactions are now durable in place)."""
+        """Group-committed durability point: concurrent callers coalesce
+        behind one leader that drains every shard, persists the crc
+        ledger, and checkpoints the journal in a single superblock pass
+        (``commit_window`` gathers followers before committing)."""
+        led = self._committer.sync()
+        self.metrics.bump("group_commits" if led else "group_commit_waiters")
+        return 0
+
+    def _commit_group(self) -> None:
         with self._txlock:
             self._checkpoint_locked()
-        return 0
 
     def _checkpoint_locked(self, upto: int | None = None) -> None:
         for d in self.shards:
             d.fsync()
         upto = self.journal.last_txid() if upto is None else upto
         self.journal.mark_applied(upto)
+        if self.cfg.persist_ledger:
+            self._write_ledger()
         self._write_superblocks()
 
     # ------------------------------------------------------------- metadata
+    def _write_ledger(self) -> None:
+        """Persist the write-crc ledger into the reserved meta region
+        (blocks striped round-robin over the shards), so a reopened
+        volume verifies reads before its first overwrite.  The entry
+        count + payload crc land in the superblock (written after this,
+        so a torn ledger write is detected and ignored at load)."""
+        items = list(self._crcs.items())
+        bs = self.block_size
+        cap = self.cfg.ledger_blocks_per_shard * self.cfg.n_shards \
+            * (bs // _LEDGER_ENTRY_SIZE)
+        if len(items) > cap:               # summary: persist what fits
+            items = items[:cap]
+        payload = b"".join(struct.pack(_LEDGER_ENTRY, lba, crc)
+                           for lba, crc in items)
+        self._ledger_count = len(items)
+        self._ledger_crc = zlib.crc32(payload)
+        per_block = (bs // _LEDGER_ENTRY_SIZE) * _LEDGER_ENTRY_SIZE
+        n_blocks = -(-len(payload) // per_block) if payload else 0
+        for j in range(n_blocks):
+            chunk = payload[j * per_block:(j + 1) * per_block]
+            chunk = chunk + b"\x00" * (bs - len(chunk))
+            shard = j % self.cfg.n_shards
+            local = 1 + j // self.cfg.n_shards
+            assert local <= self.cfg.ledger_blocks_per_shard
+            self.shards[shard].impl.btt.write(
+                local, np.frombuffer(chunk, np.uint8))
+        for d in self.shards:
+            d.impl.btt.flush()
+
+    def _load_ledger(self, count: int, crc: int) -> bool:
+        """Rebuild the crc ledger from the meta region; False when the
+        stored summary is absent or fails its own crc (torn write)."""
+        if count <= 0:
+            return False
+        bs = self.block_size
+        per_block = (bs // _LEDGER_ENTRY_SIZE) * _LEDGER_ENTRY_SIZE
+        nbytes = count * _LEDGER_ENTRY_SIZE
+        n_blocks = -(-nbytes // per_block)
+        if n_blocks > self.cfg.ledger_blocks_per_shard * self.cfg.n_shards:
+            return False
+        chunks = []
+        for j in range(n_blocks):
+            shard = j % self.cfg.n_shards
+            local = 1 + j // self.cfg.n_shards
+            chunks.append(bytes(self.shards[shard].impl.btt.read(local))
+                          [:per_block])
+        payload = b"".join(chunks)[:nbytes]
+        if zlib.crc32(payload) != crc:
+            return False
+        for off in range(0, nbytes, _LEDGER_ENTRY_SIZE):
+            lba, c = struct.unpack_from(_LEDGER_ENTRY, payload, off)
+            self._crcs[lba] = c
+        self._ledger_count, self._ledger_crc = count, crc
+        return True
+
     def _write_superblocks(self) -> None:
         for i, d in enumerate(self.shards):
             sb = self.cfg.to_sb(i, self.uuid,
                                 applied_txid=self.journal.applied_txid)
+            if self.cfg.persist_ledger:
+                sb["ledger_count"] = self._ledger_count
+                sb["ledger_crc"] = self._ledger_crc
             raw = json.dumps(sb).encode()
             raw = raw + b"\x00" * (self.block_size - len(raw))
             d.impl.btt.write(0, np.frombuffer(raw, np.uint8))
@@ -387,6 +552,8 @@ class StripedVolume:
         self.journal.mark_applied(last)
         for d in self.shards:
             d.impl.btt.flush()
+        if self.cfg.persist_ledger:
+            self._write_ledger()       # replayed records refreshed crcs
         self._write_superblocks()
         stats = {
             "replayed_txs": len(records),
@@ -434,17 +601,22 @@ class StripedVolume:
 
     def metrics_snapshot(self) -> dict:
         out = {"bypass_writes": 0, "bg_evictions": 0, "read_hits": 0,
-               "read_misses": 0, "read_tier_hits": 0, "read_tier_fills": 0}
+               "read_misses": 0, "read_tier_hits": 0, "read_tier_fills": 0,
+               "tier_fill_bypassed": 0}
         for d in self.shards:
             snap = d.metrics.snapshot()["count"]
             for k in out:
                 out[k] += snap.get(k, 0)
         vol = self.metrics.snapshot()["count"]
         for k in ("verify_failures", "degraded_reads", "verify_races",
-                  "unrecoverable_reads", "resync_repairs"):
+                  "unrecoverable_reads", "resync_repairs", "chain_txs",
+                  "group_commits", "group_commit_waiters"):
             out[k] = vol.get(k, 0)
         out["journal_txs"] = self.journal.last_txid()
         out["applied_txid"] = self.journal.applied_txid
+        out["chains_logged"] = self.journal.chains_logged
+        out["group_commit"] = self._committer.stats()
+        out["admission"] = self.admission.stats()
         if self.read_tier is not None:
             out["read_tier"] = self.read_tier.stats()
         return out
@@ -470,7 +642,11 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                 nfree: int | None = None,
                 max_inflight: int = 16, read_tier_bytes: int = 0,
                 n_sockets: int = 1,
-                verify_reads: bool | None = None) -> StripedVolume:
+                verify_reads: bool | None = None,
+                commit_window: float = 0.0,
+                scan_threshold: int = 64,
+                tier_hit_cost_frac: float = 0.125,
+                persist_ledger: bool = True) -> StripedVolume:
     """Build (or reopen + recover) a striped volume.
 
     ``path`` is a prefix for file-backed shards (``{path}.shard{i}``); a
@@ -481,6 +657,12 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
     of all shards (caiti policies).  ``n_sockets > 1`` splits the shared
     eviction pool into per-socket worker banks and pins shard *i* to
     socket ``i % n_sockets`` (the socket owning its PMem DIMM set).
+
+    NOTE: the crc-ledger meta region (``persist_ledger``, on by default
+    for replicated volumes) changes the on-media geometry.  A replicated
+    volume formatted BEFORE the ledger existed must be reopened with
+    ``persist_ledger=False`` — the geometry check rejects the mismatch
+    rather than silently misplacing the journal/data regions.
     """
     cfg = VolumeConfig(n_lbas=n_lbas, n_shards=n_shards,
                        stripe_blocks=stripe_blocks, replicas=replicas,
@@ -490,7 +672,11 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                        journal_slots=journal_slots, journal_span=journal_span,
                        max_inflight=max_inflight,
                        read_tier_bytes=read_tier_bytes, n_sockets=n_sockets,
-                       verify_reads=verify_reads)
+                       verify_reads=verify_reads,
+                       commit_window=commit_window,
+                       scan_threshold=scan_threshold,
+                       tier_hit_cost_frac=tier_hit_cost_frac,
+                       persist_ledger=persist_ledger)
     paths = [None] * n_shards
     if backend == "file":
         assert path is not None, "file backend needs a path prefix"
@@ -527,8 +713,8 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
             want = cfg.to_sb(i, sb["uuid"])
             mismatch = [k for k in ("n_shards", "n_lbas", "stripe_blocks",
                                     "replicas", "journal_slots",
-                                    "journal_span")
-                        if sb.get(k) != want[k]]
+                                    "journal_span", "ledger_blocks")
+                        if sb.get(k, 0) != want[k]]
             assert not mismatch, \
                 f"geometry mismatch on shard {i}: {mismatch}"
         vol = StripedVolume(shards, cfg, uuid=sbs[0]["uuid"], evict_pool=pool,
@@ -536,6 +722,12 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
         vol.journal.applied_txid = max(sb.get("applied_txid", 0)
                                        for sb in sbs)
         vol.journal.next_txid = vol.journal.applied_txid + 1
+        if cfg.persist_ledger:
+            # newest checkpoint wins: the shard sb with the highest
+            # applied mark carries the matching ledger summary
+            newest = max(sbs, key=lambda s: s.get("applied_txid", 0))
+            vol._load_ledger(newest.get("ledger_count", 0),
+                             newest.get("ledger_crc", 0))
         vol.recover()
     else:
         uuid = os.urandom(8).hex()

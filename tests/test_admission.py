@@ -1,0 +1,316 @@
+"""Unified admission layer: sequential-scan tier bypass, tier-aware QoS
+pricing, the shared bypass watermark, and the GroupCommitter primitive.
+(Chained-tx crash atomicity lives in tests/test_volume.py.)"""
+import threading
+import time
+
+import numpy as np
+
+from repro.core.transit import TransitBuffer
+from repro.volume import (AdmissionPolicy, GroupCommitter, ReadTier,
+                          ScanDetector, make_volume)
+
+
+def _blk(x: int) -> bytes:
+    return bytes([x % 256]) * 4096
+
+
+# ------------------------------------------------------------- detector
+def test_scan_detector_tracks_interleaved_streams():
+    d = ScanDetector(max_streams=4)
+    # two interleaved sequential streams + random noise: each stream's
+    # run keeps growing, noise stays at run length 1
+    for i in range(10):
+        assert d.observe("ns", 100 + i) == i + 1
+        assert d.observe("ns", 500 + i) == i + 1
+        assert d.observe("ns", 7919 * i) in (1, 2)
+    assert d.current_run("ns", 109) == 10
+    assert d.current_run("ns", 42) == 1
+
+
+def test_admission_denies_fills_past_scan_threshold():
+    adm = AdmissionPolicy(scan_threshold=4)
+    denied = 0
+    for i in range(10):
+        adm.observe_read(0, i)
+        if not adm.admit_tier_fill(0, i):
+            denied += 1
+    assert denied == 6                       # first 4 admitted
+    assert adm.stats()["scan_fill_denials"] == 6
+    # random access pattern is never denied
+    for lba in (3, 999, 17, 512):
+        adm.observe_read(1, lba)
+        assert adm.admit_tier_fill(1, lba)
+
+
+def test_admission_scan_threshold_zero_disables():
+    adm = AdmissionPolicy(scan_threshold=0)
+    for i in range(100):
+        adm.observe_read(0, i)
+        assert adm.admit_tier_fill(0, i)
+
+
+def test_admission_watermark_bypass():
+    staged = {"n": 0}
+    adm = AdmissionPolicy(staged_slots_fn=lambda: staged["n"],
+                          watermark_slots=10)
+    assert not adm.should_bypass_write()
+    staged["n"] = 10
+    assert adm.should_bypass_write()
+
+
+def test_read_charge_prices_dram_below_pmem():
+    adm = AdmissionPolicy(tier_hit_cost_frac=0.125)
+    assert adm.read_charge(4096, "backend") == 4096
+    assert adm.read_charge(4096, "tier") == 512
+    assert adm.read_charge(4096, "transit") == 512
+
+
+# ----------------------------------------------------- tier integration
+def test_tier_insert_respects_admission_on_fills_only():
+    tier = ReadTier(16 * 4096, 4096)
+    adm = AdmissionPolicy(scan_threshold=2)
+    tier.admission = adm
+    for i in range(6):
+        adm.observe_read(0, i)
+    # read-miss fill (token path) from a long run: denied
+    token = tier.prepare((0, 5))
+    assert not tier.insert((0, 5), _blk(5), token=token)
+    # writeback insert (no token) is authoritative: always admitted
+    assert tier.insert((0, 5), _blk(5))
+    assert bytes(tier.lookup((0, 5))) == _blk(5)
+
+
+def test_volume_scan_bypass_preserves_hot_set():
+    """A giant sequential scan must not flush the tier's hot set: fills
+    are denied past the threshold and the hot keys keep hitting."""
+    vol = make_volume("caiti", n_lbas=2048, n_shards=2, stripe_blocks=4,
+                      cache_bytes=1024 * 4096, read_tier_bytes=64 * 4096,
+                      scan_threshold=8)
+    try:
+        hot = list(range(0, 64, 9))              # non-sequential stride
+        for lba in range(512):
+            vol.write(lba, _blk(lba + 1))
+        vol.fsync()
+        vol.read_tier.clear()                    # cold start
+        for lba in hot:                          # build the hot set
+            assert bytes(vol.read(lba)) == _blk(lba + 1)
+        # giant scan: 256 sequential reads, only ~threshold may fill
+        for lba in range(256, 512):
+            assert bytes(vol.read(lba)) == _blk(lba + 1)
+        snap = vol.metrics_snapshot()
+        assert snap["admission"]["scan_fill_denials"] >= 200
+        assert snap["tier_fill_bypassed"] >= 200
+        # the hot set survived the scan: every hot read is a tier hit
+        before = vol.metrics_snapshot()["read_tier_hits"]
+        for lba in hot:
+            assert bytes(vol.read(lba)) == _blk(lba + 1)
+        assert vol.metrics_snapshot()["read_tier_hits"] - before \
+            == len(hot)
+    finally:
+        vol.close()
+
+
+def test_volume_without_scan_bypass_floods_tier():
+    """Control for the test above: with scan detection off the same scan
+    fills the tier block after block."""
+    vol = make_volume("caiti", n_lbas=2048, n_shards=2, stripe_blocks=4,
+                      cache_bytes=1024 * 4096, read_tier_bytes=64 * 4096,
+                      scan_threshold=0)
+    try:
+        for lba in range(512):
+            vol.write(lba, _blk(lba + 1))
+        vol.fsync()
+        vol.read_tier.clear()
+        for lba in range(256, 512):
+            vol.read(lba)
+        assert vol.metrics_snapshot()["read_tier_fills"] >= 200
+        assert vol.metrics_snapshot()["admission"]["scan_fill_denials"] == 0
+    finally:
+        vol.close()
+
+
+# --------------------------------------------------- tier-aware QoS cost
+def test_tier_hot_tenant_not_throttled_like_pmem_bound():
+    """ROADMAP follow-on: a ReadTier hit must not debit the tenant token
+    bucket at PMem-read cost.  The tier-hot tenant is charged the DRAM
+    fraction (and never sleeps on the bucket); the PMem-bound tenant is
+    charged full price and rate-limited."""
+    vol = make_volume("caiti", n_lbas=512, n_shards=2,
+                      cache_bytes=64 * 4096, read_tier_bytes=64 * 4096,
+                      tier_hit_cost_frac=0.125)
+    try:
+        vol.add_tenant("hot", rate_mbps=1.0, burst_bytes=8 * 4096)
+        vol.add_tenant("cold", rate_mbps=1.0, burst_bytes=8 * 4096)
+        for lba in range(32):
+            vol.write(lba, _blk(lba))
+        vol.fsync()                      # writebacks populated the tier
+        # 16 tier-served reads: 16 * 512B = 8KB of DRAM-priced debit —
+        # under the burst, and charge() never sleeps: finishes instantly
+        t0 = time.perf_counter()
+        for k in range(16):
+            assert bytes(vol.read(k % 8, tenant="hot")) == _blk(k % 8)
+        hot_s = time.perf_counter() - t0
+        assert vol.read_debits["hot"] == 16 * 512
+        assert hot_s < 1.0
+        # the same 16 reads PMem-bound: full 4K debit each (64KB against
+        # a 32KB burst at 1 MB/s) — the bucket must make the tenant wait
+        vol.read_tier.clear()
+        t0 = time.perf_counter()
+        for k in range(16):
+            lba = 256 + k                # cold lbas: backend reads
+            vol.write(lba, _blk(lba))
+        vol.fsync()
+        vol.read_tier.clear()
+        t0 = time.perf_counter()
+        for k in range(16):
+            vol.read(256 + k, tenant="cold")
+        cold_s = time.perf_counter() - t0
+        assert vol.read_debits["cold"] == 16 * 4096
+        assert cold_s > 0.01             # really throttled
+        assert cold_s > hot_s
+    finally:
+        vol.close()
+
+
+# -------------------------------------------------- transit-buffer hook
+def test_transit_buffer_consults_admission():
+    staged = {"over": False}
+
+    class _Adm:
+        def should_bypass_write(self):
+            return staged["over"]
+
+    sunk = []
+    tb = TransitBuffer(sunk.append, capacity_bytes=1 << 20, n_workers=1,
+                       admission=_Adm())
+    try:
+        assert tb.put(b"a", 100) == "staged"
+        staged["over"] = True            # global watermark crossed
+        assert tb.put(b"b", 100) == "bypass"
+        staged["over"] = False
+        assert tb.put(b"c", 100) == "staged"
+        tb.flush()
+        assert tb.metrics.snapshot()["count"]["bypass_writes"] == 1
+    finally:
+        tb.close()
+
+
+# ------------------------------------------------------- GroupCommitter
+def test_group_committer_single_caller_commits():
+    n = {"commits": 0}
+
+    def commit():
+        n["commits"] += 1
+
+    gc = GroupCommitter(commit)
+    assert gc.sync() is True             # led its own commit
+    assert gc.sync() is True
+    assert n["commits"] == 2
+    assert gc.stats() == {"calls": 2, "commits": 2, "coalesced": 0}
+
+
+def test_group_committer_coalesces_and_covers_every_caller():
+    order = []
+    gate = threading.Event()
+
+    def commit():
+        gate.wait(5.0)                   # hold the leader mid-commit
+        order.append("commit")
+
+    gc = GroupCommitter(commit, window=0.05)
+    results = []
+
+    def caller():
+        results.append(gc.sync())
+
+    ts = [threading.Thread(target=caller) for _ in range(6)]
+    ts[0].start()
+    time.sleep(0.02)                     # leader inside its window
+    for t in ts[1:]:
+        t.start()
+    time.sleep(0.05)
+    gate.set()
+    for t in ts:
+        t.join(timeout=5)
+    st = gc.stats()
+    assert st["calls"] == 6
+    assert st["commits"] + st["coalesced"] == 6
+    assert st["commits"] <= 3            # a leader served the batch
+    assert st["coalesced"] >= 3
+    assert sum(results) == st["commits"]  # True == led
+
+
+def test_group_committer_propagates_leader_error_to_batch():
+    def commit():
+        raise RuntimeError("media gone")
+
+    gc = GroupCommitter(commit)
+    try:
+        gc.sync()
+        raise AssertionError("expected RuntimeError")
+    except RuntimeError:
+        pass
+
+
+# ------------------------------------------------ chained ckpt commits
+def test_blockstore_uses_chained_commit_on_volumes(tmp_path):
+    from repro.ckpt.blockstore import make_blockstore
+    st = make_blockstore(str(tmp_path / "st"), policy="caiti",
+                         capacity_bytes=8 << 20, cache_bytes=2 << 20,
+                         n_shards=2)
+    try:
+        assert st._chained                       # volume: chained commit
+        st.put("k", b"v" * 10_000)
+        gen = st.commit()
+        # the chained path journals root+manifest as ONE logical write
+        assert st.dev.metrics_snapshot()["chains_logged"] >= 1
+    finally:
+        st.close()
+    st2 = make_blockstore(str(tmp_path / "st"), policy="caiti",
+                          capacity_bytes=8 << 20, cache_bytes=2 << 20,
+                          n_shards=2)
+    try:
+        assert st2.generation == gen
+        assert st2.get("k") == b"v" * 10_000
+    finally:
+        st2.close()
+
+
+def test_blockstore_fallback_never_overwrites_active_manifest():
+    """Mixed-mode regression: after a chained commit parks the root on
+    region 0, a later commit whose manifest outgrows the journal ring
+    falls back to ping-pong — and must pick the OTHER region, never the
+    one the live root points at (else a crash mid-fallback destroys the
+    previous generation)."""
+    from repro.ckpt.blockstore import BlockStore
+    vol = make_volume("caiti", n_lbas=4096, n_shards=2,
+                      cache_bytes=2 << 20, journal_slots=4, journal_span=2)
+    st = BlockStore(vol, 4096, manifest_blocks=16)
+    try:
+        assert vol.max_atomic_write_blocks() == 8
+        st.put("a", b"x" * 100)
+        st.commit()                              # chained: root on mlba 1
+        assert st._active_mlba == 1
+        for i in range(1500):                    # manifest > 7 blocks now
+            st.directory[f"key-{i:04d}"] = (33, 1, 100)
+        gen = st.commit()                        # falls back to ping-pong
+        assert st._active_mlba == 1 + 16         # NOT the live region
+        st2 = BlockStore(vol, 4096, manifest_blocks=16)
+        assert st2.generation == gen
+        assert len(st2.directory) == len(st.directory)
+    finally:
+        vol.close()
+
+
+def test_blockstore_single_device_keeps_root_flip(tmp_path):
+    from repro.ckpt.blockstore import make_blockstore
+    st = make_blockstore(str(tmp_path / "st1"), policy="caiti",
+                         capacity_bytes=8 << 20, cache_bytes=2 << 20)
+    try:
+        assert not st._chained                   # ping-pong + root flip
+        st.put("k", b"x" * 5000)
+        st.commit()
+        assert st.get("k") == b"x" * 5000
+    finally:
+        st.close()

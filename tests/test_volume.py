@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core import SimulatedCrash
-from repro.core.sim import run_volume_sim_workload
+from repro.core.sim import (chain_commit_steps, chain_crash_outcome,
+                            run_volume_sim_workload)
 from repro.volume import (SharedEvictionPool, TenantSpec, TokenBucket,
                           WFQGate, make_volume)
 
@@ -242,19 +243,20 @@ def test_corrupt_replica_repaired_from_primary():
 
 
 def test_reopen_tie_divergence_never_destroys_good_copy(tmp_path):
-    """After reopen the crc ledger is empty (DRAM-only).  A 1-vs-1
-    primary/replica tie is then undecidable: resync must flag it and
-    REFUSE to repair — overwriting the replica with the corrupt primary
-    would turn recoverable divergence into data loss.  With >= 3 copies
-    a strict majority still repairs."""
+    """Without the persisted crc ledger (``persist_ledger=False``) the
+    ledger is empty after reopen, so a 1-vs-1 primary/replica tie is
+    undecidable: resync must flag it and REFUSE to repair — overwriting
+    the replica with the corrupt primary would turn recoverable
+    divergence into data loss.  With >= 3 copies a strict majority still
+    repairs."""
     path = str(tmp_path / "vol")
-    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=2,
-                      cache_bytes=32 * 4096, backend="file", path=path)
+    kw = dict(n_lbas=256, n_shards=3, replicas=2, cache_bytes=32 * 4096,
+              backend="file", path=path, persist_ledger=False)
+    vol = make_volume("caiti", **kw)
     vol.write(5, _blk(55))
     vol.fsync()
     vol.close()
-    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=2,
-                      cache_bytes=32 * 4096, backend="file", path=path)
+    vol = make_volume("caiti", **kw)
     _corrupt_primary(vol, 5)
     try:
         assert vol.scrub_replicas() == 1
@@ -267,13 +269,13 @@ def test_reopen_tie_divergence_never_destroys_good_copy(tmp_path):
         vol.close()
     # three copies: majority decides even with an empty ledger
     path3 = str(tmp_path / "vol3")
-    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=3,
-                      cache_bytes=32 * 4096, backend="file", path=path3)
+    kw3 = dict(n_lbas=256, n_shards=3, replicas=3, cache_bytes=32 * 4096,
+               backend="file", path=path3, persist_ledger=False)
+    vol = make_volume("caiti", **kw3)
     vol.write(5, _blk(66))
     vol.fsync()
     vol.close()
-    vol = make_volume("caiti", n_lbas=256, n_shards=3, replicas=3,
-                      cache_bytes=32 * 4096, backend="file", path=path3)
+    vol = make_volume("caiti", **kw3)
     _corrupt_primary(vol, 5)
     try:
         assert vol.scrub_replicas() >= 1
@@ -445,6 +447,193 @@ def test_caiti_volume_crash_recovery(tmp_path):
     got = [bytes(vol2.read(10 + i)) for i in range(6)]
     assert got == [_blk(31 + i) for i in range(6)]
     vol2.close()
+
+
+# -------------------------------------------------- chained-tx atomicity
+def _crash_on_nth_btt_write(vol, n):
+    """Global (cross-shard) crash injection at BTT-write granularity —
+    one counter over every shard, so crash points line up with the
+    protocol steps of ``repro.core.sim.chain_commit_steps``."""
+    state = {"count": 0}
+    for d in vol.shards:
+        btt = d.impl.btt
+        orig = btt.write
+
+        def wrapped(lba, data, _orig=orig):
+            state["count"] += 1
+            if state["count"] == n:
+                raise SimulatedCrash("btt_write")
+            return _orig(lba, data)
+
+        btt.write = wrapped
+    return state
+
+
+_CHAIN_KW = dict(n_lbas=128, n_shards=2, stripe_blocks=1,
+                 journal_slots=16, journal_span=2, backend="file")
+
+
+def _chain_crash_run(tmp_path, crash_write: int):
+    """Write an 8-block (4x-span) object, fsync, then overwrite it with
+    a crash injected on BTT write ``crash_write`` of the chained tx.
+    Returns (outcome, steps_executed): outcome 'old' | 'new' | 'torn'
+    read back after reopen+recovery."""
+    path = str(tmp_path / f"chain{crash_write}")
+    old = [_blk(10 + i) for i in range(8)]
+    new = [_blk(110 + i) for i in range(8)]
+    vol = make_volume("btt", path=path, **_CHAIN_KW)
+    vol.write_multi(8, old)
+    vol.fsync()
+    state = _crash_on_nth_btt_write(vol, crash_write)
+    crashed = True
+    try:
+        vol.write_multi(8, new)
+        crashed = False
+    except SimulatedCrash:
+        pass
+    # "power loss": abandon the torn volume, reopen from the files
+    for d in vol.shards:
+        d.impl.btt.pmem.persist()
+    del vol
+    vol2 = make_volume("btt", path=path, **_CHAIN_KW)
+    got = [bytes(vol2.read(8 + i)) for i in range(8)]
+    vol2.close()
+    outcome = "old" if got == old else "new" if got == new else "torn"
+    return outcome, state["count"] - (1 if crashed else 0), crashed
+
+
+def test_chain_crash_between_links_leaves_old_object(tmp_path):
+    """Kill between chain links (inside the journal phase, before the
+    tail header): the OLD object must be fully intact — the chain never
+    committed, no in-place write happened."""
+    steps = chain_commit_steps(8, 2)
+    tail = steps.index(("tail_header",))          # step 11 of 20
+    # crash on the 6th BTT write: mid payload of link 2 (between links)
+    outcome, done, crashed = _chain_crash_run(tmp_path, 6)
+    assert crashed and outcome == "old"
+    assert done < tail                            # really pre-commit
+    # crash on the LAST non-tail header (the write before the commit pt)
+    outcome, done, crashed = _chain_crash_run(tmp_path, tail + 1)
+    assert crashed and outcome == "old"
+
+
+def test_chain_crash_between_tail_header_and_inplace_rolls_forward(tmp_path):
+    """Kill between the tail header and the in-place writes: the tail
+    landed, so recovery must roll the WHOLE new object forward."""
+    steps = chain_commit_steps(8, 2)
+    tail = steps.index(("tail_header",))
+    # tail header is BTT write tail+1; crash on the first in-place write
+    outcome, done, crashed = _chain_crash_run(tmp_path, tail + 2)
+    assert crashed and outcome == "new"
+    assert done == tail + 1                       # exactly post-commit
+
+
+@pytest.mark.slow
+def test_chain_crash_property_every_point_whole_object(tmp_path):
+    """ACCEPTANCE: a crash ANYWHERE inside a 4x-span logical write
+    surfaces either the complete new object or the complete old one —
+    property-tested over every injected BTT-write crash point, and
+    cross-validated against the simulator's chain-crash model."""
+    steps = chain_commit_steps(8, 2)              # 8 payload, 3 hdr, 1
+    n = 1                                         # tail, 8 in-place = 20
+    while True:
+        outcome, done, crashed = _chain_crash_run(tmp_path, n)
+        if not crashed:                           # past the last write
+            assert outcome == "new"
+            assert done == len(steps)             # model counts the
+            break                                 # protocol exactly
+        assert outcome in ("old", "new"), f"torn object at write {n}"
+        assert outcome == chain_crash_outcome(8, 2, done), \
+            f"real volume disagrees with sim model at crash point {n}"
+        n += 1
+    assert n == len(steps) + 1                    # swept every step
+
+
+def test_chain_crash_smoke_key_points(tmp_path):
+    """Fast (not slow-marked) subset of the property sweep: one point in
+    each protocol phase, still model-checked."""
+    steps = chain_commit_steps(8, 2)
+    tail = steps.index(("tail_header",))
+    for n in (1, tail, tail + 1, tail + 2, len(steps)):
+        outcome, done, crashed = _chain_crash_run(tmp_path, n)
+        assert crashed and outcome == chain_crash_outcome(8, 2, done), n
+
+
+def test_write_multi_exceeding_ring_rejected(tmp_path):
+    vol = make_volume("btt", n_lbas=128, n_shards=2, stripe_blocks=1,
+                      journal_slots=4, journal_span=2)
+    try:
+        assert vol.max_atomic_write_blocks() == 8
+        with pytest.raises(AssertionError, match="exceeds"):
+            vol.write_multi(0, [_blk(i) for i in range(10)])
+    finally:
+        vol.close()
+
+
+# ------------------------------------------------------- group commit
+def test_group_commit_coalesces_concurrent_fsyncs():
+    """>= 4 concurrent fsync callers share a leader's drain+checkpoint:
+    far fewer commits than calls, and every caller's writes are covered
+    (applied mark reaches the last txid)."""
+    vol = make_volume("caiti", n_lbas=1024, n_shards=2,
+                      cache_bytes=64 * 4096, commit_window=0.1)
+    try:
+        start = threading.Barrier(8)
+
+        def worker(j):
+            start.wait()
+            vol.write_multi(j * 16, [_blk(j + i) for i in range(4)])
+            vol.fsync()
+
+        ts = [threading.Thread(target=worker, args=(j,)) for j in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=30)
+        st = vol._committer.stats()
+        assert st["calls"] == 8
+        # generous bounds (loaded CI schedulers stagger threads): the
+        # essential claim is that coalescing HAPPENED and accounting adds
+        # up, not an exact batch shape
+        assert st["commits"] + st["coalesced"] == 8
+        assert st["commits"] <= 5, st           # leaders gathered others
+        assert st["coalesced"] >= 3, st
+        assert vol.journal.applied_txid == vol.journal.last_txid()
+        for j in range(8):
+            for i in range(4):
+                assert bytes(vol.read(j * 16 + i)) == _blk(j + i)
+        snap = vol.metrics_snapshot()
+        assert snap["group_commit"]["coalesced"] >= 3
+    finally:
+        vol.close()
+
+
+def test_reopen_verifies_reads_from_persisted_ledger(tmp_path):
+    """A reopened volume must verify reads BEFORE the first overwrite:
+    the crc ledger summary persisted at fsync makes post-reopen
+    corruption detectable, and the read degrades to the replica."""
+    path = str(tmp_path / "vol")
+    kw = dict(n_lbas=256, n_shards=3, replicas=2, cache_bytes=32 * 4096,
+              backend="file", path=path)
+    vol = make_volume("caiti", **kw)
+    for lba in range(0, 64, 2):
+        vol.write(lba, _blk(lba + 9))
+    vol.fsync()
+    vol.close()
+    vol = make_volume("caiti", **kw)
+    try:
+        assert len(vol._crcs) >= 32              # ledger survived reopen
+        _corrupt_primary(vol, 10)
+        assert bytes(vol.read(10)) == _blk(19)   # degraded, not garbage
+        snap = vol.metrics_snapshot()
+        assert snap["degraded_reads"] == 1
+        assert snap["verify_failures"] == 1
+        # and the divergence is now decidable: resync repairs it
+        vol.resyncer.resync()
+        assert vol.resyncer.wait_idle(10.0)
+        assert vol.scrub_replicas() == 0
+    finally:
+        vol.close()
 
 
 # ---------------------------------------------------------------- QoS
