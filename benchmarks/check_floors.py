@@ -1,0 +1,70 @@
+"""CI perf/quality gate over a ``benchmarks/run.py --json`` artifact.
+
+Fails (exit 1) when a coalescing sweep lost its win outright: the
+``volume_logbatch`` or ``volume_groupcommit`` best-vs-per-call speedup
+dropping below 1.0x means batching/group commit became a pessimization.
+This is a FLOOR, not a ratchet — the acceptance bars (>= 1.3x at real op
+counts) live in the sim-backed tests; smoke-sized runs are noisy enough
+that ratcheting on them would flake, but a sub-1.0x result is wrong at
+any size.
+
+    python benchmarks/check_floors.py BENCH_smoke.json
+
+Tables listed in FLOORS must be PRESENT in the artifact (a missing table
+is the registry-drift failure smoke exists to catch), unless explicitly
+skipped with --allow-missing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# table name in the results JSON -> minimum acceptable "speedup" value
+FLOORS = {
+    "volume_logbatch": 1.0,
+    "volume_groupcommit": 1.0,
+}
+
+
+def check(results: dict, allow_missing: bool = False) -> list[str]:
+    problems = []
+    for table, floor in FLOORS.items():
+        if table not in results:
+            if not allow_missing:
+                problems.append(f"{table}: missing from results "
+                                f"(benchmark registry drift?)")
+            continue
+        entry = results[table]
+        speedup = entry.get("speedup") if isinstance(entry, dict) else None
+        if speedup is None:
+            problems.append(f"{table}: no 'speedup' key in results")
+            continue
+        speedup = float(speedup)
+        status = "OK" if speedup >= floor else "FAIL"
+        print(f"[check_floors] {table}: speedup {speedup:.2f}x "
+              f"(floor {floor:.1f}x) {status}")
+        if speedup < floor:
+            problems.append(f"{table}: speedup {speedup:.2f}x is below the "
+                            f"{floor:.1f}x floor")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="results JSON from benchmarks/run.py --json")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="tolerate absent tables (partial --only runs)")
+    args = ap.parse_args()
+    with open(args.path) as f:
+        results = json.load(f)
+    problems = check(results, allow_missing=args.allow_missing)
+    if problems:
+        for p in problems:
+            print(f"[check_floors] FAIL: {p}", file=sys.stderr)
+        sys.exit(1)
+    print("[check_floors] all perf floors hold")
+
+
+if __name__ == "__main__":
+    main()

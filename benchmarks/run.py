@@ -85,6 +85,12 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
                                "coalesced (sim)",
                                lambda: volume_bench.groupcommit(
                                    n_ops=ops // 10)),
+        "volume_logbatch": ("batched log pipeline sweep, per-call vs "
+                            "LogBatcher-coalesced (sim)",
+                            lambda: volume_bench.logbatch(n_ops=ops // 10)),
+        "volume_fairness": ("tier-aware WFQ fairness: read/write-heavy "
+                            "tenants vs weight share (sim)",
+                            lambda: volume_bench.fairness(n_ops=ops // 2)),
         "roofline": ("dry-run derived roofline terms (deliverable g)",
                      lambda: len(roofline.run("experiments/dryrun",
                                               mesh="pod16x16"))),
@@ -103,6 +109,10 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated table names to run")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--json", default=None,
+                    help="also write the results JSON to this exact path "
+                         "(CI uploads it as the BENCH_smoke artifact and "
+                         "gates perf floors on it)")
     args = ap.parse_args()
 
     ops = 2_000 if args.smoke else 12_000 if args.fast else 50_000
@@ -136,6 +146,9 @@ def main() -> None:
 
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
     print(f"\n[benchmarks.run] {len(results)} tables in "
           f"{time.time() - t0:.1f}s -> {args.out}/results.json")
     if failures:

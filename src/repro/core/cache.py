@@ -272,6 +272,24 @@ class CaitiCache:
             self._notify_eviction(sh)                      # L26
 
     # --------------------------------------------------------------- read
+    def probe(self, lba: int) -> str | None:
+        """Non-mutating guess of where a read of ``lba`` would be served
+        from ('transit' | 'tier' | None-for-backend) — no hit counters,
+        no CLOCK second chance, no scan-detector update.  The volume
+        prices tier-aware WFQ read admission with it BEFORE walking the
+        stack; a racing write/eviction can invalidate the guess, which
+        the post-service settle (``WFQGate.charge``) absorbs."""
+        cs = self._set_for(lba)
+        with cs.lock:
+            sh = cs.table.get(lba)
+        if sh is not None and sh.lba == lba \
+                and sh.state in (VALID, PENDING, EVICTING):
+            return "transit"
+        if self.read_tier is not None \
+                and (self.tier_ns, lba) in self.read_tier:
+            return "tier"
+        return None
+
     def read(self, lba: int, out: np.ndarray | None = None) -> np.ndarray:
         return self.read_ex(lba, out=out)[0]
 

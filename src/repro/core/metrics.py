@@ -25,14 +25,26 @@ Read-path counters (the layered read stack of PR 2) are plain events on
                           (sequential-scan bypass: the scan must not
                           flush the tier's hot set)
 
-Commit-path counters (the transactional write pipeline of PR 3) live on
-``count`` as well — ``commit_path()`` summarizes them:
+Commit-path counters (the transactional write pipeline of PR 3, batched
+log pipeline of PR 4) live on ``count`` as well — ``commit_path()``
+summarizes them:
   chain_txs             — chained-journal links logged (whole-object
                           atomicity for >span logical writes)
   group_commits         — leader-executed fsync checkpoints
   group_commit_waiters  — fsync calls that coalesced onto a leader's
                           commit instead of paying their own drain +
                           superblock pass
+  log_batches           — LogBatcher flushes (one _txlock acquisition +
+                          one batched slot-shard journal pass each)
+  log_batch_links       — chain links written through batched passes
+  log_batch_coalesced   — log()/write_multi chains that rode another
+                          caller's batch instead of paying their own pass
+
+Per-tenant counters are bumped under ``"<event>::<tenant>"`` keys and
+collected with :meth:`Metrics.per_tenant` — the volume records
+``wfq_vbytes::<tenant>``, the tier-aware WFQ virtual time (priced bytes)
+each tenant has been charged across reads, writes and batched journal
+traffic.
 """
 from __future__ import annotations
 
@@ -68,6 +80,9 @@ COMMIT_COUNTERS = (
     "chain_txs",
     "group_commits",
     "group_commit_waiters",
+    "log_batches",
+    "log_batch_links",
+    "log_batch_coalesced",
 )
 
 
@@ -123,14 +138,27 @@ class Metrics:
         return out
 
     def commit_path(self) -> dict[str, float]:
-        """Commit-path summary: chained-tx and group-commit counters plus
-        the fraction of fsync calls that rode a leader's commit."""
+        """Commit-path summary: chained-tx, group-commit and batched-log
+        counters plus the coalescing rates (the fraction of fsync calls
+        that rode a leader's commit, and of chains that rode another
+        caller's log batch)."""
         with self._lock:
             out = {c: self.count.get(c, 0) for c in COMMIT_COUNTERS}
         calls = out["group_commits"] + out["group_commit_waiters"]
         out["coalesce_rate"] = (out["group_commit_waiters"] / calls
                                 if calls else 0.0)
+        chains = out["log_batches"] + out["log_batch_coalesced"]
+        out["log_coalesce_rate"] = (out["log_batch_coalesced"] / chains
+                                    if chains else 0.0)
         return out
+
+    def per_tenant(self, prefix: str) -> dict[str, int]:
+        """Collect per-tenant counters bumped as ``f"{prefix}::{t}"``
+        (e.g. ``per_tenant('wfq_vbytes')`` -> tenant -> priced bytes)."""
+        pre = prefix + "::"
+        with self._lock:
+            return {k[len(pre):]: v for k, v in self.count.items()
+                    if k.startswith(pre)}
 
     def percentile_us(self, p: float) -> float:
         if not self.latencies_ns:

@@ -49,14 +49,14 @@ so crash atomicity (redo journal + BTT Flog) is untouched by the tier.
 """
 from .admission import AdmissionPolicy, ScanDetector
 from .evict_pool import SharedEvictionPool
-from .journal import GroupCommitter, VolumeJournal
+from .journal import GroupCommitter, LogBatcher, LogEntry, VolumeJournal
 from .qos import QoSError, TenantSpec, TokenBucket, WFQGate
 from .read_tier import ReadTier, ReplicaResyncer
 from .volume import StripedVolume, VolumeConfig, make_volume
 
 __all__ = [
-    "SharedEvictionPool", "VolumeJournal", "GroupCommitter", "TokenBucket",
-    "WFQGate", "TenantSpec", "QoSError", "StripedVolume", "VolumeConfig",
-    "make_volume", "ReadTier", "ReplicaResyncer", "AdmissionPolicy",
-    "ScanDetector",
+    "SharedEvictionPool", "VolumeJournal", "GroupCommitter", "LogBatcher",
+    "LogEntry", "TokenBucket", "WFQGate", "TenantSpec", "QoSError",
+    "StripedVolume", "VolumeConfig", "make_volume", "ReadTier",
+    "ReplicaResyncer", "AdmissionPolicy", "ScanDetector",
 ]

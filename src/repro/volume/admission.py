@@ -157,6 +157,23 @@ class AdmissionPolicy:
     def write_charge(self, nbytes: int) -> int:
         return nbytes
 
+    def op_charge(self, nbytes: int, op: str, tier: str | None = None) -> int:
+        """Virtual-time price of one op for the tier-aware WFQ gate.
+
+        Reads are priced like :meth:`read_charge` by their PROBED tier
+        (``CaitiCache.probe``): a read the probe found DRAM-resident
+        ('transit'/'tier') admits at the DRAM fraction; an untagged read
+        (``tier=None`` — probe says it is headed for the backend) pays
+        the full PMem price up front.  The probe can race the stack, so
+        the volume settles one-sidedly post-service (``_debit_read``): a
+        read that cost MORE than its tag charges the remainder via
+        ``WFQGate.charge``; the rare cheaper-than-tagged read (a fill
+        landed mid-flight) keeps its conservative price.  Writes
+        (including batched ``log`` flushes) pay full byte price."""
+        if op == "read":
+            return self.read_charge(nbytes, tier or "backend")
+        return self.write_charge(nbytes)
+
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
         return {"scan_fill_denials": self.scan_fill_denials,

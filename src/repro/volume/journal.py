@@ -37,6 +37,19 @@ chain is *complete* — all links present with the tail flagged.  Torn
 in-place writes are rolled forward to the complete image; a chain whose
 tail never landed is invisible.
 
+Batched log pipeline
+--------------------
+``log_batch`` persists MANY chains in shared slot-shard passes — one txid
+reservation, all payloads, all non-tail headers grouped per shard, then
+every tail header in one final pass (each tail is still its own chain's
+atomic commit point, so a crash inside the tail pass commits whole
+members only, never a partial member chain).  :class:`LogBatcher` feeds
+it: concurrent ``log()``/``write_multi`` callers elect a leader that
+flushes the whole pending list under ONE volume ``_txlock`` acquisition
+(``log_window`` gathers followers, mirroring ``commit_window``) — the
+NVCache-style shared log that absorbs small-write bursts without
+per-I/O journal stalls.
+
 Checkpoints and group commit
 ----------------------------
 ``fsync`` checkpoints: after the caches drain, all journaled txids are
@@ -138,59 +151,137 @@ class VolumeJournal:
         """Persist one logical write as a chain of records; returns the
         txids, tail last.  The write is committed — recovery will roll the
         WHOLE image forward — only once this returns (tail header landed);
-        any earlier crash leaves it invisible.
+        any earlier crash leaves it invisible.  A batch of one: see
+        :meth:`log_batch` for the checkpoint-callback contract."""
+        return self.log_batch([(lba, blocks)], checkpoint_cb=checkpoint_cb)[0]
+
+    @staticmethod
+    def _chunk_links(blocks, span: int) -> list[list[bytes]]:
+        return [blocks[off:off + span] for off in range(0, len(blocks), span)]
+
+    def log_batch(self, entries, checkpoint_cb=None,
+                  apply_cb=None) -> list[list[int]]:
+        """Persist MANY logical writes as batched slot-shard passes;
+        returns one txid list (tail last) per entry, in entry order.
+
+        ``entries`` is a sequence of ``(lba, blocks)`` pairs.  Each entry
+        is its own chain (its own ``chain_id`` and its own tail commit
+        point) but the batch shares the passes:
+
+          1. ONE txid reservation under the journal lock for the whole
+             group (instead of one per call);
+          2. every entry's payload blocks into their slots;
+          3. ALL non-tail headers of the batch, one pass per slot shard;
+          4. ALL tail headers, one final pass per slot shard — written
+             strictly after every non-tail header of the batch, so each
+             member chain is complete on media before ANY member commits.
+
+        Crash semantics per member are unchanged from :meth:`log_chain`:
+        a member whose tail landed replays whole; a member whose tail
+        did not land is invisible (its old image intact).  A crash inside
+        the tail pass commits some members and not others — but NEVER a
+        partial member chain, because phase 3 ordered all of its links
+        onto media first.
+
+        A batch whose total links exceed the ring is split into
+        consecutive sub-groups that fit (each group <= ``n_slots`` links;
+        a single oversized entry still asserts, as ``log_chain`` did).
+        ``apply_cb(entry_index, txids)`` is invoked for every member of a
+        group as soon as that group's tails are on media and BEFORE the
+        next group journals: a later group may reuse the earlier group's
+        slots (and its ring-wrap checkpoint will mark them applied), so
+        the earlier members' in-place writes must already be issued —
+        exactly the ordering sequential ``log_chain`` calls had.  The
+        caller that applies AFTER ``log_batch`` returns (no ``apply_cb``)
+        must only pass batches that fit one group.
 
         ``checkpoint_cb(upto)`` is invoked when the ring wraps onto slots
         whose previous occupants have not been checkpointed yet — the
         volume drains its caches and advances ``applied_txid``.  The
-        callback receives an upper bound strictly below this chain's first
-        txid: marking any chain link applied before its in-place writes
-        happen would let a crash skip the replay and surface a torn
-        object.
+        callback receives an upper bound strictly below the group's first
+        txid: marking any chain of the CURRENT group applied before its
+        in-place writes happen would let a crash skip the replay and
+        surface a torn object (earlier groups are already applied via
+        ``apply_cb``).
         """
-        blocks = [bytes(b) for b in blocks]
-        assert blocks, "empty transaction"
-        links = [blocks[off:off + self.span]
-                 for off in range(0, len(blocks), self.span)]
-        assert len(links) <= self.n_slots, \
-            f"chain of {len(links)} links exceeds the {self.n_slots}-slot " \
-            f"ring (max {self.max_chain_blocks()} blocks per logical write)"
+        ents = []
+        for lba, blocks in entries:
+            blocks = [bytes(b) for b in blocks]
+            assert blocks, "empty transaction"
+            links = self._chunk_links(blocks, self.span)
+            assert len(links) <= self.n_slots, \
+                f"chain of {len(links)} links exceeds the {self.n_slots}-" \
+                f"slot ring (max {self.max_chain_blocks()} blocks per " \
+                f"logical write)"
+            ents.append((lba, links))
+        results: list[list[int] | None] = [None] * len(ents)
+        i = 0
+        while i < len(ents):
+            group, total = [], 0
+            while i < len(ents) and (not group
+                                     or total + len(ents[i][1])
+                                     <= self.n_slots):
+                group.append(i)
+                total += len(ents[i][1])
+                i += 1
+            self._log_group([ents[g] for g in group], group, results,
+                            checkpoint_cb)
+            if apply_cb is not None:
+                for g in group:
+                    apply_cb(g, results[g])
+        return results
+
+    def _log_group(self, group, idxs, results, checkpoint_cb) -> None:
+        """One batched slot-shard pass for a group of chains whose links
+        fit the ring together."""
+        n_links = sum(len(links) for _, links in group)
         with self._lock:
             first = self.next_txid
-            self.next_txid += len(links)
-            last = first + len(links) - 1
+            self.next_txid += n_links
+            last = first + n_links - 1
             # slots for txids (last - n_slots, last] are about to be
             # reused; everything at or below last - n_slots must be
             # checkpointed first.  The checkpoint drains every cache, so
             # marking applied up to first - 1 is safe — but never the
-            # chain itself (its in-place writes have not happened yet)
+            # group itself (its in-place writes have not happened yet)
             need_ckpt = last > self.n_slots \
                 and last - self.n_slots > self.applied_txid
         if need_ckpt and checkpoint_cb is not None:
             checkpoint_cb(first - 1)
-        chain_id = first
-        # phase 1: all payloads
-        homes = []
-        off = 0
-        for i, link in enumerate(links):
-            txid = first + i
-            shard, hdr_lba, crc = self._write_payload(txid, link)
-            homes.append((txid, lba + off, len(link), shard, hdr_lba, crc))
-            off += len(link)
-        # phase 2: non-tail headers, one pass per slot shard
-        body = homes[:-1]
+        # phase 1: all payloads, every entry of the batch
+        txid = first
+        per_entry = []          # [(txid, lba, n, shard, hdr_lba, crc,
+        for lba, links in group:                        # chain_id, seq)]
+            chain_id = txid
+            homes = []
+            off = 0
+            for seq, link in enumerate(links):
+                shard, hdr_lba, crc = self._write_payload(txid, link)
+                homes.append((txid, lba + off, len(link), shard, hdr_lba,
+                              crc, chain_id, seq))
+                off += len(link)
+                txid += 1
+            per_entry.append(homes)
+        # phase 2: non-tail headers of the WHOLE batch, one pass per shard
+        body = [h for homes in per_entry for h in homes[:-1]]
         for shard in sorted({h[3] for h in body}):
-            for seq, (txid, l, n, s, hdr_lba, crc) in enumerate(body):
+            for (txid, l, n, s, hdr_lba, crc, chain_id, seq) in body:
                 if s == shard:
                     self._write_header(s, hdr_lba, txid, l, n, crc,
                                        chain_id, seq, 0)
-        # phase 3: THE commit point — the tail header, written last
-        txid, l, n, s, hdr_lba, crc = homes[-1]
-        self._write_header(s, hdr_lba, txid, l, n, crc,
-                           chain_id, len(homes) - 1, CHAIN_TAIL)
+        # phase 3: the commit points — every tail header, one final pass
+        # per slot shard, written after all of phase 2 (each member chain
+        # is wholly on media before any member becomes committed)
+        tails = [homes[-1] for homes in per_entry]
+        for shard in sorted({h[3] for h in tails}):
+            for (txid, l, n, s, hdr_lba, crc, chain_id, seq) in tails:
+                if s == shard:
+                    self._write_header(s, hdr_lba, txid, l, n, crc,
+                                       chain_id, seq, CHAIN_TAIL)
         with self._lock:
-            self.chains_logged += 1
-        return [h[0] for h in homes]
+            self.chains_logged += len(group)
+        for k, homes in zip(idxs, per_entry):
+            results[k] = [h[0] for h in homes]
 
     def mark_applied(self, txid: int) -> None:
         with self._lock:
@@ -330,3 +421,103 @@ class GroupCommitter:
         with self._lock:
             return {"calls": self.calls, "commits": self.commits,
                     "coalesced": self.calls - self.commits}
+
+
+class LogEntry:
+    """One logical write riding a :class:`LogBatcher` batch."""
+
+    __slots__ = ("lba", "blocks", "tenant", "txids", "error", "done")
+
+    def __init__(self, lba: int, blocks, tenant=None) -> None:
+        self.lba = lba
+        self.blocks = blocks
+        self.tenant = tenant
+        self.txids: list[int] | None = None
+        self.error: BaseException | None = None
+        self.done = False
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(b) for b in self.blocks)
+
+
+class LogBatcher:
+    """Leader/follower coalescing for chained-tx ``log()`` payload writes.
+
+    The group committer (above) coalesces *fsyncs*; this coalesces the
+    **log writes themselves**.  Without it every ``write_multi`` chain
+    serializes its own slot-shard pass under the volume ``_txlock`` —
+    N concurrent small logged writes pay N lock acquisitions, N header
+    passes and N tail fences.  With it, concurrent ``submit()`` callers
+    elect a leader that (optionally after gathering ``window`` seconds,
+    the ``log_window`` knob mirroring ``commit_window``) hands the WHOLE
+    pending list to ``flush_fn`` in one go: one ``_txlock`` acquisition,
+    headers grouped per slot shard across the batch, one tail pass per
+    batch (see :meth:`VolumeJournal.log_batch`) — the NVCache-style
+    shared-log batching of small durable writes.
+
+    ``flush_fn(entries)`` journals + applies every entry (setting
+    ``entry.txids``); an exception it raises is delivered to exactly the
+    callers whose entries were in that batch, never leaked to a later
+    batch.  ``submit()`` returns the entry's txids once its batch has
+    fully committed AND applied in place — same post-condition as a
+    direct ``log_chain`` + in-place pass.
+    """
+
+    def __init__(self, flush_fn, window: float = 0.0) -> None:
+        self._flush_fn = flush_fn
+        self.window = window
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: list[LogEntry] = []
+        self._leader = False
+        self.calls = 0               # submit() invocations
+        self.batches = 0             # flush_fn invocations
+        self.batched_entries = 0     # entries flushed (== calls, eventually)
+        self.max_batch = 0
+
+    def submit(self, lba: int, blocks, tenant=None) -> list[int]:
+        entry = LogEntry(lba, blocks, tenant)
+        with self._cond:
+            self.calls += 1
+            self._pending.append(entry)
+            while True:
+                if entry.done:
+                    if entry.error is not None:
+                        raise entry.error
+                    return entry.txids
+                if not self._leader:
+                    self._leader = True
+                    break
+                self._cond.wait(timeout=0.5)
+        # ---- leader: gather, flush the whole pending list in one pass
+        try:
+            if self.window > 0:
+                time.sleep(self.window)
+            with self._lock:
+                batch, self._pending = self._pending, []
+            err = None
+            try:
+                self._flush_fn(batch)
+            except BaseException as e:   # delivered to THIS batch only
+                err = e
+            with self._cond:
+                self.batches += 1
+                self.batched_entries += len(batch)
+                self.max_batch = max(self.max_batch, len(batch))
+                for b in batch:
+                    b.error = err
+                    b.done = True
+        finally:
+            with self._cond:
+                self._leader = False
+                self._cond.notify_all()
+        if entry.error is not None:
+            raise entry.error
+        return entry.txids
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"calls": self.calls, "batches": self.batches,
+                    "coalesced": self.batched_entries - self.batches,
+                    "max_batch": self.max_batch}

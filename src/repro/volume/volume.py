@@ -25,6 +25,18 @@ cache over BTT over PMem) — into one logical LBA space:
     :class:`~repro.volume.journal.GroupCommitter` leader — one drain +
     one applied-mark superblock pass per batch (``commit_window``
     gathers followers), amortizing the sync round trip across tenants;
+  * **batched log pipeline**: concurrent ``write_multi`` chains coalesce
+    behind a :class:`~repro.volume.journal.LogBatcher` leader into ONE
+    slot-shard journal pass — one ``_txlock`` acquisition, headers
+    grouped per shard, one tail pass per batch (``log_window`` gathers
+    followers) — so small-write-heavy tenants stop paying a serialized
+    journal pass per ``log()``;
+  * **tier-aware WFQ**: tenant reads pass the gate tagged with their
+    probed serving tier and are charged virtual time at
+    ``tier_hit_cost_frac`` for DRAM service; batched log writes are
+    charged once per batch to their constituent tenants
+    (``WFQGate.charge_batch``) — one coherent fairness story across
+    reads, writes and journal traffic;
   * **unified admission** (:class:`~repro.volume.AdmissionPolicy`): the
     bypass watermark, the read-tier fill policy (sequential-scan bypass)
     and tier-aware QoS read pricing live behind one object consulted by
@@ -66,7 +78,7 @@ from repro.core.pmem import LatencyModel
 
 from .admission import AdmissionPolicy
 from .evict_pool import SharedEvictionPool
-from .journal import GroupCommitter, VolumeJournal
+from .journal import GroupCommitter, LogBatcher, VolumeJournal
 from .qos import TenantSpec, TokenBucket, WFQGate
 from .read_tier import ReadTier, ReplicaResyncer
 
@@ -88,6 +100,7 @@ class VolumeConfig:
                  read_tier_bytes: int = 0, n_sockets: int = 1,
                  verify_reads: bool | None = None,
                  commit_window: float = 0.0,
+                 log_window: float = 0.0,
                  scan_threshold: int = 64,
                  tier_hit_cost_frac: float = 0.125,
                  persist_ledger: bool = True) -> None:
@@ -110,6 +123,7 @@ class VolumeConfig:
         self.read_tier_bytes = read_tier_bytes
         self.n_sockets = n_sockets
         self.commit_window = commit_window
+        self.log_window = log_window
         self.scan_threshold = scan_threshold
         self.tier_hit_cost_frac = tier_hit_cost_frac
         # reads are verified (and can degrade to a replica) only when a
@@ -216,6 +230,11 @@ class StripedVolume:
         # applied-mark superblock pass (window gathers followers)
         self._committer = GroupCommitter(self._commit_group,
                                          window=cfg.commit_window)
+        # batched log pipeline: concurrent write_multi chains coalesce
+        # behind a leader into ONE slot-shard journal pass under one
+        # _txlock acquisition (log_window gathers followers)
+        self._log_batcher = LogBatcher(self._flush_log_batch,
+                                       window=cfg.log_window)
         self._ledger_count = 0
         self._ledger_crc = 0
         # QoS (lazy: volumes without tenants pay nothing)
@@ -246,19 +265,28 @@ class StripedVolume:
     def add_tenant(self, name: str, weight: float = 1.0,
                    rate_mbps: float = 0.0, burst_bytes: int = 4 << 20) -> None:
         if self._gate is None:
-            self._gate = WFQGate(max_inflight=self.cfg.max_inflight)
+            # the unified AdmissionPolicy prices the gate's virtual time
+            # (tier-aware reads, batched log charges)
+            self._gate = WFQGate(max_inflight=self.cfg.max_inflight,
+                                 policy=self.admission)
         self._gate.set_tenant(name, weight)
         if rate_mbps > 0:
             self._buckets[name] = TokenBucket(rate_mbps * 1e6,
                                               burst_bytes=burst_bytes)
 
-    def _admit(self, tenant: str | None, nbytes: int):
+    def _admit(self, tenant: str | None, nbytes: int, op: str = "write",
+               tier: str | None = None):
         if tenant is None or self._gate is None:
             return None
-        bucket = self._buckets.get(tenant)
-        if bucket is not None:
-            bucket.acquire(nbytes)
-        return self._gate.admit(tenant, nbytes)
+        if op == "write":
+            # reads settle their token-bucket debit post-service
+            # (_debit_read: DRAM hits never sleep on the PMem budget)
+            bucket = self._buckets.get(tenant)
+            if bucket is not None:
+                bucket.acquire(nbytes)
+        cost = self.admission.op_charge(nbytes, op, tier)
+        self.metrics.bump(f"wfq_vbytes::{tenant}", int(cost))
+        return self._gate.admit(tenant, nbytes, op=op, tier=tier)
 
     def _release(self, ticket) -> None:
         if ticket is not None:
@@ -320,27 +348,80 @@ class StripedVolume:
         transaction (``journal_span`` blocks per link, tail header as the
         single commit point), so a crash anywhere surfaces either the
         complete new object or the complete old one — never a torn mix.
-        Bounded by the journal ring (``journal.max_chain_blocks()``)."""
+        Bounded by the journal ring (``journal.max_chain_blocks()``).
+
+        Chains ride the batched log pipeline: concurrent callers coalesce
+        behind a :class:`~repro.volume.journal.LogBatcher` leader into
+        one slot-shard journal pass (``log_window`` gathers followers).
+        The token bucket still caps each caller's rate up front, and the
+        chain occupies a WFQ in-flight slot (``op='log'``) so chained
+        writes stay ``max_inflight``-bounded and SFQ-ordered against the
+        tenant's accumulated virtual time — but the admit itself prices
+        ~nothing (one clamped byte): the actual bytes are charged once
+        per BATCH to the constituent tenants at flush
+        (``WFQGate.charge_batch``), so a small-write-heavy tenant no
+        longer pays a full gate-pricing pass per ``log()``."""
         blocks = list(blocks)
-        ticket = self._admit(tenant, self.block_size * len(blocks))
-        try:
-            if len(blocks) == 1:
+        if len(blocks) == 1:
+            ticket = self._admit(tenant, self.block_size)
+            try:
                 self._write_block(lba, blocks[0])
                 return 0
-            self._write_tx(lba, blocks)
+            finally:
+                self._release(ticket)
+        if tenant is not None:
+            bucket = self._buckets.get(tenant)
+            if bucket is not None:
+                bucket.acquire(self.block_size * len(blocks))
+        ticket = None
+        if tenant is not None and self._gate is not None:
+            ticket = self._gate.admit(tenant, 0, op="log")
+        try:
+            self._write_tx(lba, blocks, tenant)
             return 0
         finally:
             self._release(ticket)
 
-    def _write_tx(self, lba: int, blocks) -> None:
+    def _write_tx(self, lba: int, blocks, tenant: str | None = None) -> None:
+        self._log_batcher.submit(lba, blocks, tenant)
+
+    def _flush_log_batch(self, entries) -> None:
+        """LogBatcher flush: ONE ``_txlock`` acquisition journals every
+        entry of the batch in shared slot-shard passes and applies the
+        in-place writes group by group (``apply_cb``): a member's tails
+        land (phase 3) before its in-place writes, so recovery rolls it
+        forward whole if anything tears — and every member is applied
+        before a later sub-group can reuse its journal slots or mark it
+        checkpointed (the multi-group ring-wrap hazard)."""
         with self._txlock:
-            txids = self.journal.log_chain(
-                lba, blocks, checkpoint_cb=self._checkpoint_locked)
-            self.metrics.bump("chain_txs", len(txids))
-            # tail header landed: the chain is committed, and recovery
-            # rolls the whole image forward if any in-place write tears
-            for i, blk in enumerate(blocks):
-                self._write_block(lba + i, blk)
+            def apply_entry(k: int, txids: list[int]) -> None:
+                e = entries[k]
+                e.txids = txids
+                for i, blk in enumerate(e.blocks):
+                    self._write_block(e.lba + i, blk)
+
+            txid_lists = self.journal.log_batch(
+                [(e.lba, e.blocks) for e in entries],
+                checkpoint_cb=self._checkpoint_locked,
+                apply_cb=apply_entry)
+            n_links = 0
+            per_tenant: dict[str, int] = {}
+            for e, txids in zip(entries, txid_lists):
+                n_links += len(txids)
+                if e.tenant is not None:
+                    per_tenant[e.tenant] = (per_tenant.get(e.tenant, 0)
+                                            + e.nbytes)
+            self.metrics.bump("chain_txs", n_links)
+            self.metrics.bump("log_batches")
+            self.metrics.bump("log_batch_links", n_links)
+            if len(entries) > 1:
+                self.metrics.bump("log_batch_coalesced", len(entries) - 1)
+            # tier-aware WFQ: the whole batch's log traffic is charged to
+            # its constituent tenants in one gate pass
+            if self._gate is not None and per_tenant:
+                for t, cost in self._gate.charge_batch(per_tenant,
+                                                       op="log").items():
+                    self.metrics.bump(f"wfq_vbytes::{t}", int(cost))
 
     def _shard_read(self, shard: int, local: int,
                     out: np.ndarray | None = None):
@@ -350,14 +431,26 @@ class StripedVolume:
             return impl.read_ex(local, out=out)
         return impl.read(local, out=out), "backend"
 
-    def _debit_read(self, tenant: str | None, source: str) -> None:
+    def _debit_read(self, tenant: str | None, source: str,
+                    pre_tier: str | None = None) -> None:
         """Tier-aware QoS accounting: a DRAM-served read (transit or
         tier hit) is charged a fraction of the PMem price, so a tier-hot
-        tenant is not throttled like a PMem-bound one."""
+        tenant is not throttled like a PMem-bound one.  Both disciplines
+        settle post-service: the token bucket via ``charge`` debt, the
+        WFQ gate via ``WFQGate.charge`` for the remainder a read that
+        served WORSE than its probed admission tag (``pre_tier``) turned
+        out to owe — one-sided, so a probe raced by a fill keeps its
+        conservative price."""
         if tenant is None:
             return
         cost = self.admission.read_charge(self.block_size, source)
         self.read_debits[tenant] = self.read_debits.get(tenant, 0) + cost
+        if self._gate is not None:
+            pre = self.admission.op_charge(self.block_size, "read", pre_tier)
+            if cost > pre:
+                extra = self._gate.charge(tenant, cost - pre, op="read",
+                                          tier="backend")
+                self.metrics.bump(f"wfq_vbytes::{tenant}", int(extra))
         bucket = self._buckets.get(tenant)
         if bucket is None or cost <= 0:
             return
@@ -366,19 +459,46 @@ class StripedVolume:
         else:
             bucket.charge(cost)        # DRAM hits never sleep: debt only
 
+    def _probe_read_tier(self, shard: int, local: int) -> str | None:
+        """Cheap non-mutating guess of a read's serving tier ('transit'
+        | 'tier' | None) so WFQ admission can price it before the stack
+        is walked."""
+        impl = self.shards[shard].impl
+        probe = getattr(impl, "probe", None)
+        return probe(local) if probe is not None else None
+
     def read(self, lba: int, out: np.ndarray | None = None,
              tenant: str | None = None) -> np.ndarray:
         """Layered read: tier -> primary shard (transit cache -> BTT) ->
         replica (degraded).  The tier probe happens inside the shard's
-        cache; this level verifies the result and falls back."""
+        cache; this level verifies the result and falls back.  Tenant
+        reads pass the WFQ gate tagged ``op='read'`` with the probed
+        tier — ``tier_hit_cost_frac`` price when the probe found the
+        block DRAM-resident, full PMem price otherwise (ROADMAP: gate
+        tags no longer charge reads nothing)."""
         shard, local = self._map(lba, 0)
+        ticket = None
+        pre_tier = None
+        if tenant is not None and self._gate is not None:
+            pre_tier = self._probe_read_tier(shard, local)
+            ticket = self._admit(tenant, self.block_size, op="read",
+                                 tier=pre_tier)
+        try:
+            return self._read_verified(lba, shard, local, out, tenant,
+                                       pre_tier)
+        finally:
+            self._release(ticket)
+
+    def _read_verified(self, lba: int, shard: int, local: int,
+                       out: np.ndarray | None, tenant: str | None,
+                       pre_tier: str | None = None):
         data, source = self._shard_read(shard, local, out=out)
         if not self.cfg.verify_reads:
-            self._debit_read(tenant, source)
+            self._debit_read(tenant, source, pre_tier)
             return data
         want = self._crcs.get(lba)
         if want is None or self._crc(data) == want:
-            self._debit_read(tenant, source)
+            self._debit_read(tenant, source, pre_tier)
             return data
         # a read racing a write can see the new ledger entry before the
         # staged block is visible — one primary re-read (through the
@@ -387,10 +507,10 @@ class StripedVolume:
         data, source = self._shard_read(shard, local, out=out)
         want = self._crcs.get(lba)
         if want is None or self._crc(data) == want:
-            self._debit_read(tenant, source)
+            self._debit_read(tenant, source, pre_tier)
             return data
         self.metrics.bump("verify_failures")
-        self._debit_read(tenant, "backend")    # detours are PMem-priced
+        self._debit_read(tenant, "backend", pre_tier)  # detours: PMem price
         last_alt = None
         for r in range(1, self.cfg.replicas):
             s2, l2 = self._map(lba, r)
@@ -610,13 +730,18 @@ class StripedVolume:
         vol = self.metrics.snapshot()["count"]
         for k in ("verify_failures", "degraded_reads", "verify_races",
                   "unrecoverable_reads", "resync_repairs", "chain_txs",
-                  "group_commits", "group_commit_waiters"):
+                  "group_commits", "group_commit_waiters", "log_batches",
+                  "log_batch_links", "log_batch_coalesced"):
             out[k] = vol.get(k, 0)
         out["journal_txs"] = self.journal.last_txid()
         out["applied_txid"] = self.journal.applied_txid
         out["chains_logged"] = self.journal.chains_logged
         out["group_commit"] = self._committer.stats()
+        out["log_batcher"] = self._log_batcher.stats()
         out["admission"] = self.admission.stats()
+        out["wfq_vbytes"] = self.metrics.per_tenant("wfq_vbytes")
+        if self._gate is not None:
+            out["wfq"] = self._gate.stats()
         if self.read_tier is not None:
             out["read_tier"] = self.read_tier.stats()
         return out
@@ -644,6 +769,7 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                 n_sockets: int = 1,
                 verify_reads: bool | None = None,
                 commit_window: float = 0.0,
+                log_window: float = 0.0,
                 scan_threshold: int = 64,
                 tier_hit_cost_frac: float = 0.125,
                 persist_ledger: bool = True) -> StripedVolume:
@@ -674,6 +800,7 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                        read_tier_bytes=read_tier_bytes, n_sockets=n_sockets,
                        verify_reads=verify_reads,
                        commit_window=commit_window,
+                       log_window=log_window,
                        scan_threshold=scan_threshold,
                        tier_hit_cost_frac=tier_hit_cost_frac,
                        persist_ledger=persist_ledger)

@@ -1,0 +1,52 @@
+"""CI wiring guards: the benchmarks-smoke matrix must cover EVERY table
+in the ``benchmarks/run.py`` registry (a new entry landing in no CI group
+would silently lose its end-to-end smoke coverage — exactly the drift
+the smoke job exists to catch), and the perf-floor gate must reference
+tables that are really registered."""
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _registry_tables() -> set[str]:
+    with open(os.path.join(ROOT, "benchmarks", "run.py")) as f:
+        src = f.read()
+    tables = set(re.findall(r'^        "([a-z0-9_]+)": \(', src, re.M))
+    assert tables, "failed to parse the benchmark registry out of run.py"
+    return tables
+
+
+def _ci_smoke_tables() -> set[str]:
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    groups = re.findall(r"tables: ([a-z0-9_,]+)", ci)
+    assert groups, "failed to parse the benchmarks-smoke matrix out of ci.yml"
+    return {t for g in groups for t in g.split(",") if t}
+
+
+def test_smoke_matrix_covers_every_registered_table():
+    registered = _registry_tables()
+    covered = _ci_smoke_tables()
+    assert covered == registered, (
+        f"benchmarks-smoke matrix drift: "
+        f"missing {sorted(registered - covered)}, "
+        f"stale {sorted(covered - registered)}")
+
+
+def test_floor_gate_references_registered_tables():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_floors", os.path.join(ROOT, "benchmarks", "check_floors.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    registered = _registry_tables()
+    assert set(mod.FLOORS) <= registered, \
+        sorted(set(mod.FLOORS) - registered)
+    # the gate fails (not passes) when a floored table goes missing
+    problems = mod.check({}, allow_missing=False)
+    assert len(problems) == len(mod.FLOORS)
+    assert mod.check({}, allow_missing=True) == []
+    assert mod.check({t: {"speedup": 2.0} for t in mod.FLOORS}) == []
+    bad = mod.check({t: {"speedup": 0.8} for t in mod.FLOORS})
+    assert len(bad) == len(mod.FLOORS)

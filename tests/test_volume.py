@@ -10,8 +10,8 @@ import pytest
 from repro.core import SimulatedCrash
 from repro.core.sim import (chain_commit_steps, chain_crash_outcome,
                             run_volume_sim_workload)
-from repro.volume import (SharedEvictionPool, TenantSpec, TokenBucket,
-                          WFQGate, make_volume)
+from repro.volume import (AdmissionPolicy, LogEntry, SharedEvictionPool,
+                          TenantSpec, TokenBucket, WFQGate, make_volume)
 
 
 def _blk(x: int) -> bytes:
@@ -570,6 +570,242 @@ def test_write_multi_exceeding_ring_rejected(tmp_path):
         vol.close()
 
 
+# ------------------------------------------------- batched log pipeline
+def test_log_batcher_coalesces_concurrent_chains():
+    """>= 4 concurrent write_multi chains share a leader's slot-shard
+    pass: far fewer journal batches than calls, every chain committed
+    and readable, metrics account for the coalescing."""
+    vol = make_volume("caiti", n_lbas=2048, n_shards=2,
+                      cache_bytes=64 * 4096, log_window=0.1)
+    try:
+        start = threading.Barrier(8)
+
+        def worker(j):
+            start.wait()
+            vol.write_multi(j * 32, [_blk(j + i) for i in range(4)])
+
+        ts = [threading.Thread(target=worker, args=(j,)) for j in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=30)
+        st = vol._log_batcher.stats()
+        assert st["calls"] == 8
+        assert st["batches"] + st["coalesced"] == 8
+        # generous bounds (loaded CI schedulers stagger threads): the
+        # essential claim is that coalescing HAPPENED
+        assert st["batches"] <= 5, st
+        assert st["coalesced"] >= 3, st
+        for j in range(8):
+            for i in range(4):
+                assert bytes(vol.read(j * 32 + i)) == _blk(j + i)
+        snap = vol.metrics_snapshot()
+        assert snap["log_batches"] == st["batches"]
+        assert snap["log_batch_links"] == 8          # 4 blocks = 1 link each
+        assert snap["log_batch_coalesced"] >= 3
+        assert snap["chain_txs"] == 8
+    finally:
+        vol.close()
+
+
+def test_journal_log_batch_multi_entry_pass_and_scan():
+    """A multi-entry log_batch reserves contiguous txids per entry, each
+    entry its own chain, and scan() replays every member whole."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                      journal_slots=16, journal_span=2)
+    try:
+        jl = vol.journal
+        e1 = [_blk(10 + i) for i in range(5)]        # 3 links (span 2)
+        e2 = [_blk(40 + i) for i in range(2)]        # 1 link
+        e3 = [_blk(70 + i) for i in range(4)]        # 2 links
+        res = jl.log_batch([(8, e1), (32, e2), (64, e3)])
+        assert res[0] == [1, 2, 3]
+        assert res[1] == [4]
+        assert res[2] == [5, 6]
+        assert jl.chains_logged == 3
+        recs = jl.scan()
+        assert [t for t, _, _ in recs] == [1, 2, 3, 4, 5, 6]
+        replay = {}
+        for _txid, lba, blocks in recs:
+            for i, b in enumerate(blocks):
+                replay[lba + i] = b
+        for base, blks in ((8, e1), (32, e2), (64, e3)):
+            for i, b in enumerate(blks):
+                assert replay[base + i] == b, (base, i)
+    finally:
+        vol.close()
+
+
+def test_log_batch_oversized_group_splits_and_single_chain_rejected():
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                      journal_slots=4, journal_span=2)
+    try:
+        jl = vol.journal
+        # 3 entries x 2 links = 6 links > 4 slots: must split into
+        # sub-groups that fit, all entries still committed
+        entries = [(k * 8, [_blk(k * 10 + i) for i in range(4)])
+                   for k in range(3)]
+        res = jl.log_batch([(lba, blks) for lba, blks in entries])
+        assert [len(r) for r in res] == [2, 2, 2]
+        # a SINGLE oversized chain still asserts, as log_chain always did
+        with pytest.raises(AssertionError, match="exceeds"):
+            jl.log_batch([(0, [_blk(i) for i in range(10)])])
+    finally:
+        vol.close()
+
+
+_BATCH_KW = dict(n_lbas=128, n_shards=2, stripe_blocks=1,
+                 journal_slots=16, journal_span=2, backend="file")
+
+
+def _batch_crash_run(tmp_path, crash_write: int):
+    """Two 8-block objects overwritten through ONE LogBatcher flush with
+    a crash injected on global BTT write ``crash_write``.  Returns the
+    post-recovery outcomes (['old'|'new'|'torn'] per member, crashed).
+
+    Deterministic write schedule of the batched flush (16 payloads, 6
+    non-tail headers, 2 tails, 16 in-place): write 23 is member 1's tail,
+    write 24 member 2's — so a crash anywhere must surface each member
+    whole, never a partially replayed member chain."""
+    path = str(tmp_path / f"batch{crash_write}")
+    old1 = [_blk(10 + i) for i in range(8)]
+    old2 = [_blk(30 + i) for i in range(8)]
+    new1 = [_blk(110 + i) for i in range(8)]
+    new2 = [_blk(130 + i) for i in range(8)]
+    vol = make_volume("btt", path=path, **_BATCH_KW)
+    vol.write_multi(8, old1)
+    vol.write_multi(32, old2)
+    vol.fsync()
+    state = _crash_on_nth_btt_write(vol, crash_write)
+    crashed = True
+    try:
+        # both members in ONE batch flush (the deterministic equivalent
+        # of two concurrent write_multi calls coalescing)
+        vol._flush_log_batch([LogEntry(8, new1), LogEntry(32, new2)])
+        crashed = False
+    except SimulatedCrash:
+        pass
+    for d in vol.shards:
+        d.impl.btt.pmem.persist()
+    del vol
+    vol2 = make_volume("btt", path=path, **_BATCH_KW)
+    outs = []
+    for base, old, new in ((8, old1, new1), (32, old2, new2)):
+        got = [bytes(vol2.read(base + i)) for i in range(8)]
+        outs.append("old" if got == old else "new" if got == new
+                    else "torn")
+    vol2.close()
+    return outs, state["count"] - (1 if crashed else 0), crashed
+
+
+# batched-flush protocol geometry (see _batch_crash_run docstring)
+_BATCH_TAIL1, _BATCH_TAIL2, _BATCH_WRITES = 23, 24, 40
+
+
+def _assert_batch_crash_point(n, outs, done, crashed):
+    assert crashed, n
+    assert all(o in ("old", "new") for o in outs), \
+        f"partial member chain replayed at crash write {n}: {outs}"
+    if done < _BATCH_TAIL1:                  # no tail landed
+        assert outs == ["old", "old"], (n, outs)
+    elif done < _BATCH_TAIL2:                # member 1's tail only
+        assert outs == ["new", "old"], (n, outs)
+    else:                                    # both tails on media
+        assert outs == ["new", "new"], (n, outs)
+
+
+def test_batched_log_crash_key_points(tmp_path):
+    """Fast subset of the batched-flush crash sweep: one point per
+    protocol phase (payloads, headers, first/second tail, in-place)."""
+    for n in (1, 9, 20, _BATCH_TAIL1, _BATCH_TAIL2, _BATCH_TAIL2 + 1,
+              _BATCH_WRITES):
+        outs, done, crashed = _batch_crash_run(tmp_path, n)
+        _assert_batch_crash_point(n, outs, done, crashed)
+
+
+@pytest.mark.slow
+def test_batched_log_crash_property_every_point(tmp_path):
+    """ACCEPTANCE (PR 4 satellite): a crash ANYWHERE inside a LogBatcher
+    flush never replays a partial batch member chain — each member is
+    wholly old or wholly new, and members commit in tail order."""
+    n = 1
+    while True:
+        outs, done, crashed = _batch_crash_run(tmp_path, n)
+        if not crashed:
+            assert outs == ["new", "new"]
+            assert done == _BATCH_WRITES     # schedule counted exactly
+            break
+        _assert_batch_crash_point(n, outs, done, crashed)
+        n += 1
+    assert n == _BATCH_WRITES + 1            # swept every write point
+
+
+def test_log_batch_multigroup_crash_never_loses_applied_members(tmp_path):
+    """REGRESSION: when a batch splits into ring-bounded sub-groups, an
+    earlier group's members must be applied in place BEFORE a later
+    group journals — the later group's ring-wrap checkpoint marks them
+    applied and its slots reuse theirs, so deferring their in-place
+    writes to the end of the batch would let a crash silently LOSE
+    fully-committed chains.  Swept over every BTT write point of a
+    two-group flush: members only ever commit in order, whole.
+
+    Deterministic schedule (journal_slots=4, span=2; three 4-block
+    members -> group 1 = {m0, m1} [4 links, txids 7-10], group 2 = {m2}
+    [txids 11-12, wraps onto m0's slots]): writes 1-10 group-1
+    payloads+headers, 11-12 its tails (m0's then m1's), 13-20 its
+    in-place phase, 21-22 the wrap checkpoint's superblocks, 23-28
+    group-2 payloads+headers+tail, 29-32 its in-place phase."""
+    kw = dict(n_lbas=128, n_shards=2, stripe_blocks=1,
+              journal_slots=4, journal_span=2, backend="file")
+    bases = (8, 24, 40)
+    olds = [[_blk(20 * k + i) for i in range(4)] for k in range(3)]
+    news = [[_blk(100 + 20 * k + i) for i in range(4)] for k in range(3)]
+    n = 1
+    while True:
+        path = str(tmp_path / f"mg{n}")
+        vol = make_volume("btt", path=path, **kw)
+        for base, old in zip(bases, olds):
+            vol.write_multi(base, old)
+        vol.fsync()
+        state = _crash_on_nth_btt_write(vol, n)
+        crashed = True
+        try:
+            vol._flush_log_batch([LogEntry(b, nw)
+                                  for b, nw in zip(bases, news)])
+            crashed = False
+        except SimulatedCrash:
+            pass
+        for d in vol.shards:
+            d.impl.btt.pmem.persist()
+        del vol
+        vol2 = make_volume("btt", path=path, **kw)
+        outs = []
+        for base, old, new in zip(bases, olds, news):
+            got = [bytes(vol2.read(base + i)) for i in range(4)]
+            outs.append("old" if got == old else "new" if got == new
+                        else "torn")
+        vol2.close()
+        done = state["count"] - (1 if crashed else 0)
+        if not crashed:
+            assert outs == ["new", "new", "new"]
+            assert done == 32                    # schedule counted exactly
+            break
+        assert all(o in ("old", "new") for o in outs), (n, outs)
+        if done < 11:                            # before m0's tail
+            assert outs == ["old", "old", "old"], (n, outs)
+        elif done < 12:                          # m0's tail only
+            assert outs == ["new", "old", "old"], (n, outs)
+        elif done < 28:
+            # group 1 committed; THE regression window is done in
+            # [20, 27]: group 2 checkpointed + overwrote group 1's
+            # slots — its members must still read back new
+            assert outs == ["new", "new", "old"], (n, outs)
+        else:                                    # m2's tail on media
+            assert outs == ["new", "new", "new"], (n, outs)
+        n += 1
+    assert n == 33                               # swept every write point
+
+
 # ------------------------------------------------------- group commit
 def test_group_commit_coalesces_concurrent_fsyncs():
     """>= 4 concurrent fsync callers share a leader's drain+checkpoint:
@@ -671,6 +907,124 @@ def test_wfq_gate_admits_by_start_tag():
     assert order == ["b", "a"]
 
 
+def test_wfq_zero_byte_admit_advances_virtual_time():
+    """Regression: a zero-byte admit used to advance NO virtual time, so
+    the tenant's next request kept an identical start tag and could
+    leapfrog earlier waiters in the (S, seq) heap.  Clamped to >= 1
+    byte, every admit moves the finish tag."""
+    gate = WFQGate(max_inflight=4)
+    gate.set_tenant("a")
+    gate.set_tenant("b")
+    for _ in range(3):
+        gate.done(gate.admit("a", 0))
+    assert gate.zero_byte_admits == 3
+    assert gate._finish["a"] >= 3.0          # 1 clamped byte per admit
+    # ordering must respect the accumulated (clamped) virtual time: with
+    # one slot held, "a" (3 burned vbytes + the holder's tag) queues
+    # behind a fresh "b" whose start tag is the smaller
+    gate2 = WFQGate(max_inflight=1)
+    gate2.set_tenant("a")
+    gate2.set_tenant("b")
+    hold = gate2.admit("a", 0)               # zero-byte: still >= 1 vbyte
+    order = []
+
+    def waiter(name):
+        t = gate2.admit(name, 8)
+        order.append(name)
+        gate2.done(t)
+
+    ta = threading.Thread(target=waiter, args=("a",))
+    ta.start()
+    time.sleep(0.05)
+    tb_ = threading.Thread(target=waiter, args=("b",))
+    tb_.start()
+    time.sleep(0.05)
+    gate2.done(hold)
+    ta.join(timeout=5)
+    tb_.join(timeout=5)
+    # a's tag inherits the clamped finish (> 0); b starts at 0 and wins
+    assert order == ["b", "a"]
+
+
+def test_wfq_tier_aware_pricing_and_batch_charge():
+    """admit/charge/charge_batch price virtual time through the
+    AdmissionPolicy: DRAM-served reads cost tier_hit_cost_frac, writes
+    and batched log flushes full bytes."""
+    pol = AdmissionPolicy(tier_hit_cost_frac=0.25, scan_threshold=0)
+    gate = WFQGate(max_inflight=8, policy=pol)
+    gate.set_tenant("a")
+    gate.done(gate.admit("a", 4096, op="read", tier="tier"))
+    assert gate._finish["a"] == pytest.approx(1024.0)       # 1/4 price
+    assert gate.vtime_charged["a"] == pytest.approx(1024.0)
+    gate.done(gate.admit("a", 4096, op="write"))
+    assert gate.vtime_charged["a"] == pytest.approx(1024.0 + 4096.0)
+    # an untagged read (probe found nothing DRAM-resident) pre-pays the
+    # full PMem price up front — no settle owed
+    gate.done(gate.admit("a", 4096, op="read"))
+    assert gate.vtime_charged["a"] == pytest.approx(1024.0 + 2 * 4096.0)
+    # a probed-DRAM read that raced and served from the backend settles
+    # the remainder post-service via charge()
+    gate.charge("a", 3072, op="read", tier="backend")
+    assert gate.vtime_charged["a"] == pytest.approx(4096.0 + 2 * 4096.0)
+    # an op='log' slot admit is intentionally ~free (1 clamped vbyte)
+    # and not flagged as a zero-byte bug
+    gate.done(gate.admit("a", 0, op="log"))
+    assert gate.zero_byte_admits == 0
+    assert gate.vtime_charged["a"] == pytest.approx(3 * 4096.0 + 1.0)
+    # batched log charge: one pass, both tenants' tags advance
+    gate.set_tenant("b", weight=2.0)
+    charged = gate.charge_batch({"a": 8192, "b": 8192}, op="log")
+    assert charged == {"a": 8192.0, "b": 8192.0}
+    assert gate.vtime_charged["b"] == pytest.approx(8192.0)
+    # weight 2 halves the finish-tag advance for the same priced bytes
+    assert gate._finish["b"] - gate._vtime <= 4096.0 + 1e-9
+    stats = gate.stats()
+    assert stats["post_charges"] == 2
+    assert stats["vtime_charged"]["a"] == int(3 * 4096.0 + 1.0 + 8192.0)
+
+
+def test_threaded_volume_reads_priced_tier_aware():
+    """ROADMAP close-out: gate tags no longer charge reads nothing — a
+    tenant's DRAM-served reads debit tier_hit_cost_frac of the PMem
+    price, and the per-tenant wfq counters expose it."""
+    vol = make_volume("caiti", n_lbas=1024, n_shards=2,
+                      cache_bytes=512 * 4096, read_tier_bytes=512 * 4096,
+                      tier_hit_cost_frac=0.125,
+                      tenants=[TenantSpec("hot"), TenantSpec("cold")])
+    try:
+        n = 32
+        for i in range(n):
+            vol.write(i, _blk(i), tenant="hot")
+        vol.fsync()                  # writebacks populate the read tier
+        for i in range(n):
+            assert bytes(vol.read(i, tenant="hot")) == _blk(i)
+        snap = vol.metrics_snapshot()
+        assert snap["read_misses"] == 0          # all DRAM-served
+        charged = snap["wfq"]["vtime_charged"]
+        # hot's reads cost 1/8 of PMem price: total = writes (full) +
+        # n reads at 512 bytes each — far below double-full-price
+        assert charged["hot"] == n * 4096 + n * 512
+        assert snap["wfq_vbytes"]["hot"] == charged["hot"]
+        assert vol.read_debits["hot"] == n * 512
+        # chained writes occupy a gate slot (op='log', 1 clamped vbyte)
+        # and charge their real bytes once per batch at flush
+        before = vol.metrics_snapshot()["wfq"]["vtime_charged"]["hot"]
+        vol.write_multi(512, [_blk(9 + i) for i in range(4)], tenant="hot")
+        after = vol.metrics_snapshot()["wfq"]["vtime_charged"]["hot"]
+        assert after == before + 1 + 4 * 4096
+        # a cold (probe=None) read pre-pays the full PMem price at admit
+        # — backend service owes no settle
+        lba = 700
+        vol.write(lba, _blk(7), tenant="cold")
+        vol.fsync()
+        vol.read_tier.clear()
+        assert bytes(vol.read(lba, tenant="cold")) == _blk(7)
+        charged = vol.metrics_snapshot()["wfq"]["vtime_charged"]
+        assert charged["cold"] == 4096 + 4096
+    finally:
+        vol.close()
+
+
 def test_volume_qos_threaded_smoke():
     vol = make_volume("caiti", n_lbas=1024, n_shards=2,
                       cache_bytes=32 * 4096,
@@ -755,6 +1109,52 @@ def test_sim_degraded_reads_modeled():
     assert ok["degraded_reads"] == 0
     assert dg["degraded_reads"] > 0
     assert dg["agg_mb_s"] < ok["agg_mb_s"]
+
+
+def test_sim_logbatch_speedup_acceptance():
+    """ACCEPTANCE: with >= 4 tenants issuing 4-block chained-tx logged
+    writes, the batched log pipeline sustains >= 1.3x the
+    logged-writes/s of per-call log() (each chain paying its own
+    serialized slot-shard pass)."""
+    kw = dict(n_shards=4, n_lbas=262144, cache_slots=4096, n_workers=16,
+              log_blocks=4, tenants=_tenants(4, 1200))
+    per = run_volume_sim_workload("caiti", log_window_us=0.0, **kw)
+    bat = run_volume_sim_workload("caiti", log_window_us=50.0, **kw)
+
+    def logged_s(r):
+        return r["counts"]["log_calls"] / max(r["makespan_us"] / 1e6, 1e-9)
+
+    assert bat["counts"]["log_coalesced"] > 0
+    assert bat["counts"]["log_batches"] < per["counts"]["log_batches"]
+    assert logged_s(bat) >= 1.3 * logged_s(per), \
+        (logged_s(per), logged_s(bat))
+
+
+def test_sim_fairness_mixed_tenants_within_20pct_of_weight_share():
+    """ACCEPTANCE: under tier-aware WFQ, read-heavy (90% reads, DRAM-hot)
+    and write-heavy tenants each receive a charged-service share within
+    20% of their weight share in the contended window — and the
+    read-heavy tenant moves MORE raw bytes for the same charged share
+    (DRAM hits priced at tier_hit_cost_frac)."""
+    ts = [{"name": "rheavy", "n_ops": 4000, "weight": 2.0, "jobs": 8,
+           "read_frac": 0.90},
+          {"name": "wheavy", "n_ops": 4000, "weight": 1.0, "jobs": 8,
+           "read_frac": 0.0},
+          {"name": "mixed", "n_ops": 4000, "weight": 1.0, "jobs": 8,
+           "read_frac": 0.50}]
+    r = run_volume_sim_workload("caiti", n_shards=2, n_lbas=16384,
+                                cache_slots=1024, n_workers=4, qdepth=4,
+                                tier_slots=8192, lba_dist="zipf",
+                                zipf_theta=1.1, tenants=ts)
+    for name, d in r["per_tenant"].items():
+        err = abs(d["contended_charged_share"] / d["weight_share"] - 1.0)
+        assert err <= 0.20, (name, d["contended_charged_share"],
+                             d["weight_share"])
+    # same weight, but DRAM-priced reads buy the mixed tenant more raw
+    # throughput than the all-PMem writer
+    pt = r["per_tenant"]
+    assert pt["mixed"]["contended_mb_s"] > pt["wheavy"]["contended_mb_s"]
+    assert r["tier_hit_rate"] > 0.3
 
 
 def test_sim_watermark_increases_bypass():
