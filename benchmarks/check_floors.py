@@ -24,6 +24,9 @@ import sys
 FLOORS = {
     "volume_logbatch": 1.0,
     "volume_groupcommit": 1.0,
+    # async frontend: qd8 dropping below qd1 means the submission/
+    # completion split became a pessimization
+    "volume_aio": 1.0,
 }
 
 

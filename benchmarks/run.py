@@ -91,6 +91,9 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
         "volume_fairness": ("tier-aware WFQ fairness: read/write-heavy "
                             "tenants vs weight share (sim)",
                             lambda: volume_bench.fairness(n_ops=ops // 2)),
+        "volume_aio": ("async frontend queue-depth sweep, qd1 vs qd8+ "
+                       "(sim)",
+                       lambda: volume_bench.aio(n_ops=ops // 10)),
         "roofline": ("dry-run derived roofline terms (deliverable g)",
                      lambda: len(roofline.run("experiments/dryrun",
                                               mesh="pod16x16"))),

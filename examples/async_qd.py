@@ -1,0 +1,59 @@
+"""Async submission/completion frontend quickstart + queue-depth sweep.
+
+    PYTHONPATH=src python examples/async_qd.py
+
+1. submit/poll against a real threaded volume: overlapped writes, an
+   async read, a failed ticket (journal-ring overflow) that does NOT
+   tear down the ring, and an async fsync barrier.
+2. The paper-scale contrast in virtual time: ops/s at queue depth
+   1 (what a blocking frontend gets) vs 2/4/8/16 — submission batching
+   amortizes the per-op stack cost and submitted ops overlap across the
+   engine cores and shard DIMM banks.
+"""
+import numpy as np
+
+from repro.core.sim import run_aio_sim_workload
+from repro.volume import make_volume
+
+
+def blk(x):
+    return bytes([x % 256]) * 4096
+
+
+# -- 1. real threaded engine -------------------------------------------------
+vol = make_volume("caiti", n_lbas=65536, n_shards=4, cache_bytes=16 << 20)
+# size the submit-side window up front (the default rides
+# cfg.max_inflight; a submit over the bound fails ITS ticket — never
+# blocks, never deadlocks the ring)
+vol.aio_engine(n_workers=2, max_inflight_per_tenant=128)
+rng = np.random.default_rng(0)
+tickets = [vol.submit("write", int(lba), data=blk(int(lba)))
+           for lba in rng.integers(0, 65536, size=64)]
+tickets.append(vol.submit("write_multi", 70_000 % 65536,
+                          blocks=[blk(i) for i in range(8)]))
+bad = vol.submit("write_multi", 0, blocks=[blk(i) for i in range(4096)])
+rd = vol.submit("read", int(tickets[0].lba))
+sync = vol.submit("fsync")                   # barrier: runs after the rest
+vol.wait(sync)
+done = vol.poll()
+ok = sum(1 for t in done if t.ok)
+print(f"[aio] {len(done)} completions polled, {ok} ok; "
+      f"oversized chain failed ITS ticket only: {type(bad.error).__name__}")
+print(f"[aio] async read value matches: "
+      f"{bytes(rd.value) == blk(int(tickets[0].lba))}")
+print(f"[aio] engine stats: {vol.metrics_snapshot()['aio']}")
+vol.close()
+
+# -- 2. queue-depth sweep (virtual time, deterministic) ----------------------
+print("\n[sim] qd sweep: 4 shards, 4 tenants, uniform 4K writes")
+tenants = [{"name": f"t{j}", "n_ops": 4000} for j in range(4)]
+base = None
+for qd in (1, 2, 4, 8, 16):
+    r = run_aio_sim_workload("caiti", n_shards=4, n_lbas=262144,
+                             cache_slots=8192, n_workers=16, qdepth=qd,
+                             tenants=tenants)
+    base = base or r["ops_s"]
+    print(f"  qd={qd:<3d} ops/s={r['ops_s']:12.0f}  "
+          f"agg={r['agg_mb_s']:8.1f} MB/s  "
+          f"({r['ops_s'] / base:.2f}x vs qd=1)")
+print("-> depth 8 is the acceptance point: >= 1.5x over depth 1")

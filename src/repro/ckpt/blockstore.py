@@ -40,7 +40,7 @@ class BlockStore:
     """Keyed object store with generation-atomic commits."""
 
     def __init__(self, device, n_lbas: int,
-                 manifest_blocks: int = 256) -> None:
+                 manifest_blocks: int = 256, aio: bool = False) -> None:
         # ``device`` is anything speaking write/read/fsync/close — a single
         # BlockDevice or a repro.volume.StripedVolume (sharded checkpoints)
         self.dev = device
@@ -54,6 +54,14 @@ class BlockStore:
         # whole-object-atomic write_multi — no ping-pong, no root flip
         self._chained = bool(getattr(device, "supports_chained_tx", False)
                              and hasattr(device, "write_multi"))
+        # overlapped I/O (striped volumes with the async frontend):
+        # ``put`` submits its block writes and returns while they are in
+        # flight; ``get`` fans its block reads out over the engine
+        # workers.  Outstanding put tickets are settled (checked for
+        # per-ticket errors) before any dependent read or commit.
+        self._aio = bool(aio and hasattr(device, "submit"))
+        self._pending: list = []
+        self._unsettled_keys: set[str] = set()
         self.generation = 0
         self._alloc_ptr = self._data_base
         # the manifest region the committed root points at — a fallback
@@ -96,8 +104,34 @@ class BlockStore:
         assert self._alloc_ptr <= self.n_lbas, "store exhausted"
         return lba
 
+    def _settle_pending(self) -> None:
+        """Wait out EVERY in-flight put ticket (consuming their
+        completions — a failure must not abandon siblings on the shared
+        ring), then surface the first per-ticket device error here (on
+        the dependent read/commit/close), not mid-flight."""
+        pending, self._pending = self._pending, []
+        keys, self._unsettled_keys = self._unsettled_keys, set()
+        first_err = None
+        for t in pending:
+            self.dev.wait(t)
+            if t.error is not None and first_err is None:
+                first_err = t.error
+        if first_err is not None:
+            # the sync path never registers a key whose write failed; a
+            # key whose blocks may be torn must not stay readable —
+            # drop the whole unsettled batch (callers re-put on error)
+            for k in keys:
+                self.directory.pop(k, None)
+            raise first_err
+
+
     def put(self, key: str, payload: bytes | memoryview) -> None:
-        """Stage one object (writes go through the device's cache policy)."""
+        """Stage one object (writes go through the device's cache policy).
+
+        With ``aio`` the block writes are SUBMITTED, not performed: the
+        caller overlaps serialization of the next object with this one's
+        descent through the stack; ``commit``/``get`` settle the
+        tickets."""
         nbytes = len(payload)
         bs = self.block_size
         n_blocks = max(1, (nbytes + bs - 1) // bs)
@@ -110,12 +144,62 @@ class BlockStore:
             chunk = bytes(mv[i * bs:(i + 1) * bs])
             if len(chunk) < bs:
                 chunk = chunk + b"\x00" * (bs - len(chunk))
-            self.dev.write(lba + i, chunk)
+            if self._aio:
+                # block=True: the engine's in-flight window is the flow
+                # control — a put burst waits its turn, never fails
+                self._pending.append(self.dev.submit("write", lba + i,
+                                                     data=chunk,
+                                                     block=True))
+            else:
+                self.dev.write(lba + i, chunk)
+        if self._aio:
+            self._unsettled_keys.add(key)
         self.directory[key] = (lba, n_blocks, nbytes)
 
     def get(self, key: str) -> bytes:
         lba, n_blocks, nbytes = self.directory[key]
         out = np.empty(n_blocks * self.block_size, dtype=np.uint8)
+        if self._aio:
+            # overlapped restore: fan the block reads out across the
+            # engine workers (a sliding window honoring the in-flight
+            # bound), then gather in order
+            self._settle_pending()   # reads must see completed puts
+            tickets: dict[int, object] = {}
+            next_sub = 0
+
+            def pump(need: int = -1) -> None:
+                nonlocal next_sub
+                while next_sub < n_blocks:
+                    if next_sub <= need:
+                        t = self.dev.submit("read", lba + next_sub,
+                                            block=True)
+                    else:
+                        # probe, don't count refusals as failures
+                        t = self.dev.try_submit("read", lba + next_sub)
+                        if t is None:
+                            return       # window full: gather first
+                    tickets[next_sub] = t
+                    next_sub += 1
+
+            pump()
+            err = None
+            for i in range(n_blocks):
+                if i not in tickets:
+                    if err is not None:
+                        break            # never submitted past a failure
+                    pump(need=i)         # blocks until read i submitted
+                t = tickets[i]
+                self.dev.wait(t)         # consume even failed siblings
+                if t.error is not None:
+                    err = err or t.error
+                    continue
+                out[i * self.block_size:(i + 1) * self.block_size] = \
+                    t.value
+                if err is None:
+                    pump()
+            if err is not None:
+                raise err
+            return bytes(out[:nbytes])
         for i in range(n_blocks):
             self.dev.read(lba + i, out=out[i * self.block_size:
                                            (i + 1) * self.block_size])
@@ -154,7 +238,9 @@ class BlockStore:
         root = root + b"\x00" * (bs - len(root))
         chunks = [man[i * bs:(i + 1) * bs] for i in range(n_blocks)]
         chunks = [c + b"\x00" * (bs - len(c)) for c in chunks]
-        # 1. drain the transit cache + BTT (all data durable first)
+        # 1. settle in-flight async puts, then drain the transit cache +
+        #    BTT (all data durable first)
+        self._settle_pending()
         self.dev.fsync()
         if chained:
             # 2. ONE whole-object-atomic logical write: root + manifest.
@@ -178,6 +264,9 @@ class BlockStore:
         return gen
 
     def close(self) -> None:
+        # surface any in-flight put failure instead of silently
+        # swallowing the only error report (the sync path raises in put)
+        self._settle_pending()
         self.dev.close()
 
 
@@ -186,13 +275,17 @@ def make_blockstore(path: str | None = None, *, policy: str = "caiti",
                     cache_bytes: int = 64 << 20,
                     latency: LatencyModel | None = None,
                     n_shards: int = 1,
-                    read_tier_bytes: int = 0) -> BlockStore:
+                    read_tier_bytes: int = 0,
+                    aio: bool = False) -> BlockStore:
     """``n_shards > 1`` stripes the store over a multi-device volume:
     checkpoint blocks spread across all shards' PMem (aggregate bandwidth)
     and multi-block puts ride the volume journal.  ``read_tier_bytes > 0``
     fronts the device(s) with a clean DRAM read tier — the restore path
     (``get`` walking manifest + chunk blocks) re-reads hot metadata blocks
-    through DRAM instead of PMem."""
+    through DRAM instead of PMem.  ``aio`` (volumes only) issues put/get
+    block I/O through the volume's async frontend: writes overlap the
+    caller's next serialization step, restore reads fan out across the
+    engine workers."""
     n_lbas = capacity_bytes // block_size
     if n_shards > 1:
         from repro.volume import make_volume
@@ -205,4 +298,4 @@ def make_blockstore(path: str | None = None, *, policy: str = "caiti",
                           cache_bytes=cache_bytes,
                           backend="file" if path else "ram", path=path,
                           latency=latency, read_tier_bytes=read_tier_bytes)
-    return BlockStore(dev, n_lbas)
+    return BlockStore(dev, n_lbas, aio=aio)

@@ -133,6 +133,12 @@ class CaitiCache:
         self._evict_cond = threading.Condition(self._evict_lock)
         self._enqueued = 0
         self._completed = 0
+        # one-shot drain waiters: (target_enqueued, callback) fired from
+        # the eviction completion path once everything enqueued at
+        # registration time has been written back — the async frontend
+        # completes flush tickets here instead of parking a thread in
+        # flush()
+        self._drain_waiters: list[tuple[int, object]] = []
         # background pool: private threads, or a shared cross-shard pool
         self._pool = evict_pool
         self._work: queue.SimpleQueue[SlotHeader | None] = queue.SimpleQueue()
@@ -178,6 +184,25 @@ class CaitiCache:
         with self._evict_cond:
             self._completed += n
             self._evict_cond.notify_all()
+            ready = [cb for tgt, cb in self._drain_waiters
+                     if self._completed >= tgt]
+            if ready:
+                self._drain_waiters = [
+                    (tgt, cb) for tgt, cb in self._drain_waiters
+                    if self._completed < tgt]
+        for cb in ready:             # outside the lock: callbacks may
+            cb()                     # re-enter the cache/engine
+
+    def add_drain_waiter(self, cb) -> bool:
+        """Register a one-shot callback fired (from the eviction
+        completion path) once every writeback enqueued SO FAR has
+        landed.  Returns False — without registering — when the cache is
+        already drained, so the caller can count it complete inline."""
+        with self._evict_cond:
+            if self._completed >= self._enqueued:
+                return False
+            self._drain_waiters.append((self._enqueued, cb))
+            return True
 
     # ------------------------------------------------------- write (Alg. 1)
     def write(self, lba: int, data) -> int:
@@ -398,19 +423,28 @@ class CaitiCache:
         time.sleep(0)   # nothing queued yet; let background threads run
 
     # -------------------------------------------------------------- flush
+    def kick_drain(self) -> None:
+        """Push every queued WBQ entry to the eviction pool NOW — the
+        staging-style drain step a flush needs when eager eviction is
+        off (with it on, writes already enqueued themselves).  Shared by
+        :meth:`flush` and the async frontend's flush tickets, which
+        must kick before registering drain waiters or a ``caiti-noee``
+        flush ticket would complete with everything still staged."""
+        if self.cfg.eager_eviction:
+            return
+        for cs in self._sets:
+            with cs.lock:
+                pending = [sh for sh in cs.wbq]
+            for sh in pending:
+                self._notify_eviction(sh)
+
     def flush(self, fua: bool = False) -> int:
         """REQ_PREFLUSH handling (§4.4): drain all WBQ entries, wait for BTT.
 
         Thanks to eager eviction this is almost always a no-op wait.
         """
         with self.metrics.timer("cache_flush"):
-            if not self.cfg.eager_eviction:
-                # staging-style drain: push everything queued to the pool now
-                for cs in self._sets:
-                    with cs.lock:
-                        pending = [sh for sh in cs.wbq]
-                    for sh in pending:
-                        self._notify_eviction(sh)
+            self.kick_drain()
             with self._evict_cond:
                 target = self._enqueued
                 while self._completed < target:

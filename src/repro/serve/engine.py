@@ -22,6 +22,7 @@ path for bulk decode lowers ``lm_decode_step`` with the dense ring cache
 """
 from __future__ import annotations
 
+import json
 import math
 import time
 from dataclasses import dataclass, field
@@ -174,15 +175,97 @@ class PagedLM:
             entry[1]["v"][layer][off] = np.asarray(v_t, np.float32)
 
 
+class AsyncRequestLog:
+    """Durable request log riding a striped volume's async frontend.
+
+    Each retired request is one JSON record, appended as a chained
+    ``write_multi`` through ``volume.submit`` — the write overlaps the
+    next decode step instead of stalling the scheduler tick on the PMem
+    round trip (the transit discipline, applied to the serving plane's
+    own durability).  ``drain()`` settles every in-flight ticket and
+    issues one async fsync barrier (which coalesces with any concurrent
+    committer via the volume's GroupCommitter); a device error surfaces
+    there as that record's per-ticket failure, not a serving-loop
+    exception."""
+
+    def __init__(self, volume, *, base_lba: int = 0,
+                 capacity_blocks: int | None = None,
+                 tenant: str | None = None) -> None:
+        self.vol = volume
+        self.tenant = tenant
+        self.block_size = volume.block_size
+        self._base = base_lba
+        # the log is a RING over [base_lba, base_lba + capacity): a
+        # long-running serve loop wraps and overwrites its oldest
+        # records instead of writing past the volume (ship records to
+        # cold storage before a wrap if they must be kept forever)
+        self._cap = (volume.n_lbas - base_lba if capacity_blocks is None
+                     else capacity_blocks)
+        assert self._cap >= 1
+        self._off = 0
+        self._tickets: list = []
+        self.logged = 0
+        self.wraps = 0
+        self.errors: list[tuple[int, BaseException]] = []
+
+    def _alloc(self, n_blocks: int) -> int:
+        assert n_blocks <= self._cap, "record larger than the log ring"
+        if self._off + n_blocks > self._cap:
+            self._off = 0                    # wrap: oldest records go
+            self.wraps += 1
+        lba = self._base + self._off
+        self._off += n_blocks
+        return lba
+
+    def append(self, record: dict) -> None:
+        raw = json.dumps(record).encode()
+        bs = self.block_size
+        payload = len(raw).to_bytes(4, "little") + raw
+        blocks = [payload[i:i + bs].ljust(bs, b"\x00")
+                  for i in range(0, len(payload), bs)]
+        # block=True: a retirement burst deeper than the engine's
+        # in-flight window waits its turn (the one stall this log
+        # accepts) — a record is never silently dropped
+        lba = self._alloc(len(blocks))
+        if len(blocks) > 1:
+            t = self.vol.submit("write_multi", lba, blocks=blocks,
+                                tenant=self.tenant, block=True)
+        else:
+            t = self.vol.submit("write", lba, data=blocks[0],
+                                tenant=self.tenant, block=True)
+        self._tickets.append((lba, t))
+        self.logged += 1
+
+    def drain(self) -> int:
+        """Settle in-flight appends + one async fsync barrier; returns
+        how many records have failed since the previous drain (all
+        failures stay collected in ``errors``)."""
+        reported = len(self.errors)
+        tickets, self._tickets = self._tickets, []
+        for lba, t in tickets:
+            self.vol.wait(t)
+            if t.error is not None:
+                self.errors.append((lba, t.error))
+        sync = self.vol.submit("fsync", block=True)
+        self.vol.wait(sync)
+        if sync.error is not None:
+            raise sync.error
+        return len(self.errors) - reported
+
+
 class ServeEngine:
     """Continuous-batching front end."""
 
     def __init__(self, cfg: ModelConfig, params, *,
                  cache_cfg: PagedCacheConfig | None = None,
                  max_batch: int = 8, eos_token: int = -1,
-                 use_kernel: bool = False, rng_seed: int = 0) -> None:
+                 use_kernel: bool = False, rng_seed: int = 0,
+                 request_log: AsyncRequestLog | None = None) -> None:
         self.cfg = cfg
         self.metrics = Metrics()
+        # optional durable request log: retired requests are appended
+        # through the volume's async frontend, overlapped with decode
+        self.request_log = request_log
         self.cache = PagedKVCache(cache_cfg or PagedCacheConfig(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd), metrics=self.metrics)
@@ -233,6 +316,10 @@ class ServeEngine:
         req.t_done = time.perf_counter()
         self.cache.deactivate(req.seq_id)     # eager transit to host tier
         self.cache.release(req.seq_id)
+        if self.request_log is not None:      # overlapped, never a stall
+            self.request_log.append({"req_id": req.req_id,
+                                     "prompt": req.prompt,
+                                     "tokens": req.out_tokens})
         self.finished.append(req)
 
     def step(self) -> int:
@@ -263,4 +350,8 @@ class ServeEngine:
         while (self.queue or self.running) and ticks < max_ticks:
             self.step()
             ticks += 1
+        if self.request_log is not None:
+            n_bad = self.request_log.drain()  # settle overlapped appends
+            if n_bad:                         # surfaced, not swallowed
+                self.metrics.bump("request_log_failures", n_bad)
         return self.finished

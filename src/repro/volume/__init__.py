@@ -23,6 +23,11 @@ Generalizes the paper's single-device Caiti mechanism to a logical volume:
     TokenBucket, WFQGate   — per-tenant QoS (rate limits + weighted fair
                              scheduling)
     TenantSpec             — declarative tenant weight/rate description
+    AsyncIOEngine, Ticket  — io_uring-style submission/completion
+                             frontend (``StripedVolume.submit/poll``):
+                             per-tenant SQs, shared completion ring,
+                             bounded in-flight backpressure, per-ticket
+                             failure isolation
 
 The read path (layered, new in PR 2)
 ------------------------------------
@@ -48,6 +53,8 @@ conditional bypass under pressure); they only *invalidate* tier entries,
 so crash atomicity (redo journal + BTT Flog) is untouched by the tier.
 """
 from .admission import AdmissionPolicy, ScanDetector
+from .aio import (AsyncIOEngine, BackpressureError, CancelledError,
+                  SubmitError, Ticket, TicketError)
 from .evict_pool import SharedEvictionPool
 from .journal import GroupCommitter, LogBatcher, LogEntry, VolumeJournal
 from .qos import QoSError, TenantSpec, TokenBucket, WFQGate
@@ -59,4 +66,6 @@ __all__ = [
     "LogEntry", "TokenBucket", "WFQGate", "TenantSpec", "QoSError",
     "StripedVolume", "VolumeConfig", "make_volume", "ReadTier",
     "ReplicaResyncer", "AdmissionPolicy", "ScanDetector",
+    "AsyncIOEngine", "Ticket", "TicketError", "SubmitError",
+    "BackpressureError", "CancelledError",
 ]

@@ -57,10 +57,34 @@ class ScanDetector:
     def observe(self, ns, lba: int) -> int:
         streams = self._streams.setdefault(ns, OrderedDict())
         run = streams.pop(lba, 0) + 1
-        streams[lba + 1] = run
+        # expectation-key collision: a one-shot access at (stream head
+        # - 1) writes the SAME next-lba key an established run already
+        # owns — keep the longer counter instead of clobbering it (and
+        # pop first so the entry really moves to MRU, keeping the
+        # just-inserted-survives eviction rule honest)
+        run_kept = max(run, streams.pop(lba + 1, 0))
+        streams[lba + 1] = run_kept
         while len(streams) > self.max_streams:
-            streams.popitem(last=False)          # drop the coldest stream
-        return run
+            # Two-class eviction.  Run-length-1 entries (noise and
+            # not-yet-established streams) churn in a NURSERY of up to
+            # half the table: while they fit, the victim is instead the
+            # least recently extended entry overall — so one-shot noise
+            # cannot push out an established run counter, stale counters
+            # from finished scans age out, and a brand-new stream's
+            # first expectation survives moderate noise long enough to
+            # establish.  Only when run-1 entries overflow the nursery
+            # does the coldest of THEM (never the one this access just
+            # inserted) get dropped — a noise rate of half the table per
+            # stream step is the documented starvation bound.
+            nursery = max(1, self.max_streams // 2)
+            newest = next(reversed(streams))
+            run1 = [k for k, v in streams.items()
+                    if v <= 1 and k != newest]
+            if len(run1) >= nursery:
+                streams.pop(run1[0])         # noise churns in the nursery
+            else:
+                streams.popitem(last=False)  # aging: least recently
+        return run                           # extended goes first
 
     def current_run(self, ns, lba: int) -> int:
         """Run length of the stream that ``lba`` belongs to (after its

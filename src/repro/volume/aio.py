@@ -1,0 +1,504 @@
+"""Asynchronous submission/completion I/O frontend for the striped volume.
+
+Every entry point the stack had so far — ``CaitiCache.write``,
+``StripedVolume.write_multi`` / ``fsync`` / ``read`` — is a *blocking*
+call: the submitting thread rides the whole stack down to the media and
+back, so callers serialize exactly the PMem stalls the paper's transit
+cache exists to hide.  :class:`AsyncIOEngine` is the io_uring-style
+front end that decouples submission from completion:
+
+  * **per-tenant submission queues** — ``submit(op, ...)`` appends a
+    :class:`Ticket` to the caller's tenant SQ and returns immediately;
+    dispatch merges the SQs in global submission order (per-tenant FIFO,
+    oldest seq first), so one tenant's burst cannot reorder another's
+    ops;
+  * **shared completion ring** — finished tickets land on one CQ;
+    ``poll()`` drains it (oldest first), ``wait(ticket)`` blocks for one
+    ticket.  ``Ticket.result()`` returns the op's value or re-raises its
+    error;
+  * **backpressure at submit time** — each tenant has a bounded
+    in-flight window (``max_inflight_per_tenant``, the submit-side
+    analogue of ``WFQGate``'s dispatch window).  A submit that would
+    exceed the bound FAILS ITS TICKET with :class:`SubmitError` instead
+    of blocking the caller or deadlocking the ring; deeper WFQ pricing
+    still happens on the execution path (ops run through the volume's
+    normal ``tenant=`` admission: token bucket + tier-aware SFQ tags);
+  * **async fsync barriers** — an ``op='fsync'`` ticket dispatches only
+    once every earlier-submitted ticket has completed (io_uring's
+    IO_DRAIN), then rides the volume's existing
+    :class:`~repro.volume.journal.GroupCommitter`: concurrent async
+    fsyncs from several engine workers elect ONE leader for the batch.
+    Chained ``write_multi`` tickets likewise coalesce behind the
+    :class:`~repro.volume.journal.LogBatcher` leader when workers
+    overlap;
+  * **eviction-drain completion callbacks** — an ``op='flush'`` ticket
+    (the WBQ-drain barrier) does not park a worker in
+    ``CaitiCache.flush``: it registers a one-shot drain waiter on every
+    shard cache (``CaitiCache.add_drain_waiter``) and completes from the
+    eviction pool's completion path when the last in-flight writeback
+    lands;
+  * **per-ticket failures** — an injected device error (or a journal
+    ring overflow, a cancelled ticket, a submit after close) surfaces on
+    THAT ticket's ``error``, never as a stack-wide exception tearing
+    down the ring.  Only :class:`~repro.core.SimulatedCrash` is fatal:
+    it models power loss, so the engine marks itself dead, fails every
+    queued ticket, and (in deterministic mode) re-raises so crash
+    harnesses observe the loss exactly like the synchronous sweeps do.
+
+Two execution modes share all of the above:
+
+  * ``n_workers >= 1`` (default): background worker threads drain the
+    SQs — real overlap for the threaded volume;
+  * ``n_workers == 0`` (**deterministic mode**, used by the
+    crash/fault-injection harness in ``tests/aio_harness.py``): nothing
+    runs until ``poll()`` / ``wait()`` executes queued ops inline, one
+    at a time, in submission order — every interleaving of
+    submit/poll/crash is replayable from a seed.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+
+from repro.core.pmem import SimulatedCrash
+
+# ticket states
+QUEUED, RUNNING, DONE = range(3)
+
+_BARRIER_OPS = ("fsync", "flush")
+_OPS = ("write", "write_multi", "read", "fsync", "flush")
+_PENDING = object()          # sentinel: op completes via callback later
+
+
+class TicketError(RuntimeError):
+    """Base class for engine-side (not device-side) ticket failures."""
+
+
+class SubmitError(TicketError):
+    """The submit itself was refused (closed engine / unknown op)."""
+
+
+class BackpressureError(SubmitError):
+    """The submit was refused because the tenant is at its in-flight
+    bound — the retryable refusal: settle a completion and resubmit."""
+
+
+class CancelledError(TicketError):
+    """The ticket was cancelled before dispatch."""
+
+
+class Ticket:
+    """One asynchronous I/O: handle returned by ``submit``, delivered on
+    the completion ring.  ``value`` holds a read's data; ``error`` holds
+    the per-ticket failure (device error, journal overflow, cancel,
+    refused submit)."""
+
+    __slots__ = ("tid", "seq", "op", "lba", "tenant", "state", "value",
+                 "error", "_engine")
+
+    def __init__(self, tid: int, seq: int, op: str, lba: int,
+                 tenant, engine) -> None:
+        self.tid = tid
+        self.seq = seq
+        self.op = op
+        self.lba = lba
+        self.tenant = tenant
+        self.state = QUEUED
+        self.value = None
+        self.error: BaseException | None = None
+        self._engine = engine
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+    @property
+    def ok(self) -> bool:
+        return self.state == DONE and self.error is None
+
+    def result(self, timeout: float | None = None):
+        """Block until complete; return the op's value or re-raise the
+        ticket's error."""
+        self._engine.wait(self, timeout=timeout)
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        st = ("queued", "running", "done")[self.state]
+        return (f"Ticket({self.tid}, {self.op}@{self.lba}, "
+                f"tenant={self.tenant}, {st}"
+                f"{', err=' + repr(self.error) if self.error else ''})")
+
+
+class AsyncIOEngine:
+    """io_uring-style submit/poll front end over a :class:`StripedVolume`
+    (anything speaking write/write_multi/read/fsync/flush works).
+
+    ``n_workers`` — background dispatch threads (0 = deterministic
+    inline mode: ops execute during ``poll``/``wait``).
+    ``max_inflight_per_tenant`` — submit-side backpressure window; a
+    tenant over its bound gets a failed ticket, never a blocked submit.
+    """
+
+    def __init__(self, volume, *, n_workers: int = 2,
+                 max_inflight_per_tenant: int = 32) -> None:
+        assert n_workers >= 0 and max_inflight_per_tenant >= 1
+        self.vol = volume
+        self.max_inflight_per_tenant = max_inflight_per_tenant
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._sqs: dict[object, deque[Ticket]] = {}   # tenant -> SQ
+        self._cq: deque[Ticket] = deque()             # shared completion ring
+        self._open: dict[int, Ticket] = {}            # seq -> live ticket
+        self._inflight: dict[object, int] = {}        # per-tenant live count
+        self._tids = itertools.count(1)
+        self._seqs = itertools.count(1)
+        self._closed = False
+        self._dead: BaseException | None = None
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.cancelled = 0
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"aio-{i}")
+            for i in range(n_workers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    @property
+    def inline(self) -> bool:
+        return not self._workers
+
+    # ------------------------------------------------------------ submission
+    def submit(self, op: str, lba: int = 0, data=None, blocks=None,
+               tenant=None, block: bool = False) -> Ticket:
+        """Queue one op; returns its ticket immediately.  NEVER raises
+        for per-op conditions: a refused submit (closed engine, tenant
+        over its in-flight bound, unknown op) comes back as an
+        already-failed ticket in the caller's hand — with no completion
+        event, like io_uring's -EAGAIN.
+
+        ``block=True`` turns the in-flight bound from a refusal into
+        BLOCKING backpressure: the submit waits for the tenant's window
+        (executing queued ops itself in deterministic mode) instead of
+        failing the ticket — what batch producers (blockstore puts, the
+        request log) want.  Other refusals still fail the ticket."""
+        while True:
+            t = self._submit_once(op, lba, data, blocks, tenant,
+                                  count_refusal=not block)
+            if not (block and t.state == DONE
+                    and isinstance(t.error, BackpressureError)):
+                return t
+            if self.inline:
+                if self._run_inline(1) == 0:
+                    time.sleep(0.001)    # head blocked on a drain
+            else:                        # callback: let the pool run
+                with self._cond:
+                    if self._inflight.get(tenant, 0) \
+                            >= self.max_inflight_per_tenant:
+                        self._cond.wait(timeout=0.05)
+
+    def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
+                   tenant=None) -> Ticket | None:
+        """Non-blocking window probe: returns None — without counting a
+        failure — when the tenant is at its in-flight bound, the ticket
+        otherwise.  Flow-control probes (the blockstore's restore pump)
+        must not pollute the per-ticket failure stats."""
+        t = self._submit_once(op, lba, data, blocks, tenant,
+                              count_refusal=False)
+        if t.state == DONE and isinstance(t.error, BackpressureError):
+            return None
+        return t
+
+    def _submit_once(self, op, lba, data, blocks, tenant,
+                     count_refusal: bool = True) -> Ticket:
+        with self._cond:
+            t = Ticket(next(self._tids), next(self._seqs), op, lba,
+                       tenant, self)
+            err = None
+            if op not in _OPS:
+                err = SubmitError(f"unknown op {op!r}")
+            elif self._closed:
+                err = SubmitError("submit after close")
+            elif self._dead is not None:
+                err = SubmitError(f"engine dead: {self._dead!r}")
+            elif self._inflight.get(tenant, 0) \
+                    >= self.max_inflight_per_tenant:
+                err = BackpressureError(
+                    f"tenant {tenant!r} over its in-flight bound "
+                    f"({self.max_inflight_per_tenant})")
+            if err is not None:
+                # refused submissions complete in the caller's hand and
+                # generate NO completion event (io_uring's -EAGAIN): a
+                # retry loop must not litter the ring, and a blocking
+                # submit's wait attempts stay counter-invisible
+                t.state = DONE
+                t.error = err
+                if count_refusal or not isinstance(err, BackpressureError):
+                    self.submitted += 1
+                    self.failed += 1
+                return t
+            self.submitted += 1
+            t.value = (data, blocks)          # op args ride the ticket
+            self._sqs.setdefault(tenant, deque()).append(t)
+            self._open[t.seq] = t
+            self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
+            self._cond.notify_all()
+            return t
+
+    def cancel(self, ticket: Ticket) -> bool:
+        """Cancel a still-queued ticket: it completes on the ring with
+        :class:`CancelledError`.  Returns False once dispatched (an op
+        already on its way to the media cannot be recalled)."""
+        with self._cond:
+            if ticket.state != QUEUED or ticket.seq not in self._open:
+                return False
+            sq = self._sqs.get(ticket.tenant)
+            try:
+                sq.remove(ticket)
+            except (ValueError, AttributeError):
+                return False
+            self._finish_locked(ticket, error=CancelledError("cancelled"))
+            return True
+
+    # ------------------------------------------------------------ completion
+    def poll(self, max_ops: int | None = None) -> list[Ticket]:
+        """Drain the completion ring (oldest first).  In deterministic
+        mode this FIRST executes up to ``max_ops`` queued ops inline in
+        submission order (all eligible ops when ``None``), so
+        ``submit(); poll()`` is a replayable schedule."""
+        if self.inline:
+            self._run_inline(max_ops)
+        with self._cond:
+            out = list(self._cq)
+            self._cq.clear()
+            return out
+
+    def wait(self, ticket: Ticket, timeout: float | None = None) -> Ticket:
+        """Block until ``ticket`` completes.  Waiting CONSUMES the
+        completion — the ticket will not show up on a later ``poll`` —
+        so wait()-only consumers (blockstore, request log) never grow
+        the ring.  In deterministic mode this executes queued ops ONE at
+        a time, stopping the moment the ticket completes: ops submitted
+        after it stay queued (the replayable schedule does not advance
+        past the caller's intent)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._cond:
+                if ticket.state == DONE:
+                    try:
+                        self._cq.remove(ticket)
+                    except ValueError:
+                        pass             # already polled
+                    return ticket
+            if self.inline:
+                if self._run_inline(1) == 0:
+                    with self._cond:     # head blocked on a drain
+                        if ticket.state != DONE:    # callback: let the
+                            self._cond.wait(timeout=0.05)   # pool run
+            else:
+                with self._cond:
+                    if ticket.state != DONE:
+                        self._cond.wait(timeout=0.05)
+            if deadline is not None and time.monotonic() >= deadline:
+                with self._cond:
+                    if ticket.state == DONE:     # completed AT the
+                        try:                     # deadline: not a timeout
+                            self._cq.remove(ticket)
+                        except ValueError:
+                            pass
+                        return ticket
+                    raise TimeoutError(
+                        f"ticket {ticket.tid} still "
+                        f"{('queued', 'running', 'done')[ticket.state]}")
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Wait for every submitted ticket to complete."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self.inline:
+                self._run_inline(None)
+            with self._cond:
+                if not self._open:
+                    return
+                if self._dead is not None:
+                    raise self._dead
+                self._cond.wait(timeout=0.05)
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(f"{len(self._open)} tickets open")
+
+    # -------------------------------------------------------------- dispatch
+    def _pick_locked(self):
+        """(ticket, barrier_blocked): the queued ticket with the oldest
+        seq across every SQ; barriers are not ready while any earlier
+        ticket is still open."""
+        best = None
+        for sq in self._sqs.values():
+            if sq and (best is None or sq[0].seq < best.seq):
+                best = sq[0]
+        if best is None:
+            return None, False
+        if best.op in _BARRIER_OPS and min(self._open) < best.seq:
+            return best, True
+        return best, False
+
+    def _pop_locked(self, ticket: Ticket) -> None:
+        self._sqs[ticket.tenant].popleft()
+        ticket.state = RUNNING
+
+    def _run_inline(self, max_ops: int | None) -> int:
+        n = 0
+        while max_ops is None or n < max_ops:
+            with self._cond:
+                t, blocked = self._pick_locked()
+                if t is None or blocked:
+                    # a blocked barrier waits on callback-completed
+                    # tickets (eviction drains) — the pool threads will
+                    # finish them; the caller polls again
+                    return n
+                self._pop_locked(t)
+            self._execute(t)
+            n += 1
+        return n
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if self._dead is not None:
+                        self._fail_queued_locked()
+                    t, blocked = self._pick_locked()
+                    if t is not None and not blocked:
+                        self._pop_locked(t)
+                        break
+                    if self._closed and t is None:
+                        return
+                    self._cond.wait(timeout=0.2)
+            self._execute(t)
+
+    def _execute(self, t: Ticket) -> None:
+        data, blocks = t.value if isinstance(t.value, tuple) else (None, None)
+        t.value = None
+        try:
+            val = self._run_op(t, data, blocks)
+        except SimulatedCrash as e:
+            # power loss: the whole ring dies with the machine
+            self._fatal(e, t)
+            if self.inline:
+                raise
+            return
+        except Exception as e:       # injected device error, journal
+            self._complete(t, error=e)          # overflow, ... — per-ticket
+            return
+        if val is _PENDING:
+            return                   # completes via drain callback
+        self._complete(t, value=val)
+
+    def _run_op(self, t: Ticket, data, blocks):
+        vol = self.vol
+        if t.op == "write":
+            return vol.write(t.lba, data, tenant=t.tenant)
+        if t.op == "write_multi":
+            return vol.write_multi(t.lba, blocks, tenant=t.tenant)
+        if t.op == "read":
+            return vol.read(t.lba, tenant=t.tenant)
+        if t.op == "fsync":
+            return vol.fsync()       # rides the GroupCommitter leader
+        assert t.op == "flush"
+        return self._flush_async(t)
+
+    def _flush_async(self, t: Ticket):
+        """WBQ-drain barrier without parking a worker: register one-shot
+        drain waiters on every shard cache; the ticket completes from
+        the eviction pool's completion path."""
+        caches = [c for c in getattr(self.vol, "_caches", [])
+                  if hasattr(c, "add_drain_waiter")]
+        if not caches:
+            self.vol.flush()
+            return None
+        for c in caches:
+            if hasattr(c, "kick_drain"):
+                c.kick_drain()       # staging configs enqueue their WBQs
+        state = {"left": 1}          # sentinel guards registration phase
+        slock = threading.Lock()
+
+        def child_done() -> None:
+            with slock:
+                state["left"] -= 1
+                fire = state["left"] == 0
+            if fire:
+                self._complete(t, value=None)
+
+        for c in caches:
+            with slock:
+                state["left"] += 1
+            if not c.add_drain_waiter(child_done):
+                child_done()         # already drained
+        child_done()                 # drop the sentinel
+        return _PENDING
+
+    # ------------------------------------------------------------ accounting
+    def _finish_locked(self, t: Ticket, value=None, error=None) -> None:
+        t.value = value
+        t.error = error
+        t.state = DONE
+        self._open.pop(t.seq, None)
+        n = self._inflight.get(t.tenant, 0)
+        if n:
+            self._inflight[t.tenant] = n - 1
+        if error is None:
+            self.completed += 1
+        elif isinstance(error, CancelledError):
+            self.cancelled += 1          # cancels are not failures
+        else:
+            self.failed += 1
+        self._cq.append(t)
+        self._cond.notify_all()
+
+    def _complete(self, t: Ticket, value=None, error=None) -> None:
+        with self._cond:
+            self._finish_locked(t, value=value, error=error)
+
+    def _fail_queued_locked(self) -> None:
+        err = self._dead
+        for sq in self._sqs.values():
+            while sq:
+                self._finish_locked(sq.popleft(), error=SubmitError(
+                    f"engine dead: {err!r}"))
+
+    def _fatal(self, err: BaseException, t: Ticket) -> None:
+        with self._cond:
+            self._dead = err
+            self._finish_locked(t, error=err)
+            self._fail_queued_locked()
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "cancelled": self.cancelled,
+                "open": len(self._open),
+                "cq_depth": len(self._cq),
+                "inflight": {k: v for k, v in self._inflight.items() if v},
+                "workers": len(self._workers),
+            }
+
+    def close(self, drain: bool = True) -> None:
+        if drain and self._dead is None:
+            try:
+                self.drain(timeout=30.0)
+            except (TimeoutError, SimulatedCrash):
+                pass
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        for w in self._workers:
+            w.join(timeout=5.0)

@@ -77,6 +77,7 @@ from repro.core.metrics import Metrics
 from repro.core.pmem import LatencyModel
 
 from .admission import AdmissionPolicy
+from .aio import AsyncIOEngine
 from .evict_pool import SharedEvictionPool
 from .journal import GroupCommitter, LogBatcher, VolumeJournal
 from .qos import TenantSpec, TokenBucket, WFQGate
@@ -103,7 +104,8 @@ class VolumeConfig:
                  log_window: float = 0.0,
                  scan_threshold: int = 64,
                  tier_hit_cost_frac: float = 0.125,
-                 persist_ledger: bool = True) -> None:
+                 persist_ledger: bool = True,
+                 aio_workers: int = 2) -> None:
         assert n_shards >= 1 and stripe_blocks >= 1
         assert 1 <= replicas <= n_shards
         assert policy not in ("raw", "dax"), \
@@ -126,6 +128,9 @@ class VolumeConfig:
         self.log_window = log_window
         self.scan_threshold = scan_threshold
         self.tier_hit_cost_frac = tier_hit_cost_frac
+        # async frontend: dispatch threads for the lazily-created
+        # AsyncIOEngine (0 = deterministic inline mode)
+        self.aio_workers = aio_workers
         # reads are verified (and can degrade to a replica) only when a
         # replica exists to fall back to — single-copy volumes pay nothing
         self.verify_reads = (replicas > 1 if verify_reads is None
@@ -242,6 +247,9 @@ class StripedVolume:
         self._buckets: dict[str, TokenBucket] = {}
         self.read_debits: dict[str, int] = {}
         self.recovery_stats: dict = {}
+        # async submission/completion frontend (lazy: blocking-only
+        # callers pay nothing; first submit() builds the engine)
+        self._aio: AsyncIOEngine | None = None
         # background replica repair rides the shared eviction pool (its
         # own daemon thread when the policy has no pool, e.g. plain btt)
         self.resyncer = (ReplicaResyncer(self, pool=evict_pool)
@@ -542,6 +550,66 @@ class StripedVolume:
         self.metrics.bump("unrecoverable_reads")
         return data
 
+    # --------------------------------------------------------- async frontend
+    def aio_engine(self, *, n_workers: int | None = None,
+                   max_inflight_per_tenant: int | None = None) \
+            -> AsyncIOEngine:
+        """The volume's :class:`~repro.volume.aio.AsyncIOEngine`,
+        created on first use.  ``n_workers=0`` selects deterministic
+        inline mode (ops execute during ``poll``/``wait`` — the crash
+        harness's replayable schedule).  The kwargs configure the FIRST
+        call only; an explicit kwarg that contradicts the live engine
+        asserts instead of silently handing back the wrong mode (a
+        crash harness must never silently get a threaded engine)."""
+        if self._aio is None:
+            self._aio = AsyncIOEngine(
+                self,
+                n_workers=self.cfg.aio_workers if n_workers is None
+                else n_workers,
+                max_inflight_per_tenant=self.cfg.max_inflight
+                if max_inflight_per_tenant is None
+                else max_inflight_per_tenant)
+        else:
+            assert n_workers is None \
+                or n_workers == len(self._aio._workers), \
+                f"aio engine already running {len(self._aio._workers)} " \
+                f"workers; cannot switch to {n_workers}"
+            assert max_inflight_per_tenant is None \
+                or max_inflight_per_tenant \
+                == self._aio.max_inflight_per_tenant, \
+                "aio engine already running a different in-flight bound"
+        return self._aio
+
+    def submit(self, op: str, lba: int = 0, data=None, blocks=None,
+               tenant: str | None = None, block: bool = False):
+        """Asynchronous submission: queue ``op`` ('write' | 'write_multi'
+        | 'read' | 'fsync' | 'flush') and return its ticket immediately.
+        Completions surface on :meth:`poll`; per-op failures (injected
+        device errors, journal-ring overflow, a tenant over its
+        in-flight bound) fail the TICKET, never the stack.
+        ``block=True`` waits out the in-flight window instead of failing
+        the ticket (blocking backpressure for batch producers)."""
+        return self.aio_engine().submit(op, lba=lba, data=data,
+                                        blocks=blocks, tenant=tenant,
+                                        block=block)
+
+    def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
+                   tenant: str | None = None):
+        """Non-blocking window probe: None when the tenant is at its
+        in-flight bound (not counted as a failure), a ticket otherwise."""
+        return self.aio_engine().try_submit(op, lba=lba, data=data,
+                                            blocks=blocks, tenant=tenant)
+
+    def poll(self, max_ops: int | None = None) -> list:
+        """Drain the shared completion ring (empty when nothing was ever
+        submitted)."""
+        if self._aio is None:
+            return []
+        return self._aio.poll(max_ops)
+
+    def wait(self, ticket, timeout: float | None = None):
+        return self.aio_engine().wait(ticket, timeout=timeout)
+
     def max_atomic_write_blocks(self) -> int:
         """Largest ``write_multi`` the chained journal can commit
         atomically (ring bound: n_slots links of span blocks)."""
@@ -738,6 +806,8 @@ class StripedVolume:
         out["chains_logged"] = self.journal.chains_logged
         out["group_commit"] = self._committer.stats()
         out["log_batcher"] = self._log_batcher.stats()
+        if self._aio is not None:
+            out["aio"] = self._aio.stats()
         out["admission"] = self.admission.stats()
         out["wfq_vbytes"] = self.metrics.per_tenant("wfq_vbytes")
         if self._gate is not None:
@@ -747,6 +817,8 @@ class StripedVolume:
         return out
 
     def close(self) -> None:
+        if self._aio is not None:
+            self._aio.close()        # drain in-flight tickets first
         self.fsync()
         if self.resyncer is not None:
             self.resyncer.close()
@@ -772,7 +844,8 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                 log_window: float = 0.0,
                 scan_threshold: int = 64,
                 tier_hit_cost_frac: float = 0.125,
-                persist_ledger: bool = True) -> StripedVolume:
+                persist_ledger: bool = True,
+                aio_workers: int = 2) -> StripedVolume:
     """Build (or reopen + recover) a striped volume.
 
     ``path`` is a prefix for file-backed shards (``{path}.shard{i}``); a
@@ -803,7 +876,8 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                        log_window=log_window,
                        scan_threshold=scan_threshold,
                        tier_hit_cost_frac=tier_hit_cost_frac,
-                       persist_ledger=persist_ledger)
+                       persist_ledger=persist_ledger,
+                       aio_workers=aio_workers)
     paths = [None] * n_shards
     if backend == "file":
         assert path is not None, "file backend needs a path prefix"

@@ -1,0 +1,335 @@
+"""Deterministic crash/fault-injection harness for the async I/O frontend.
+
+The engine's deterministic mode (``n_workers=0``: nothing executes until
+``poll``/``wait`` runs queued ops inline, in submission order) makes
+every interleaving of submit / poll / crash a *replayable schedule*:
+
+  * :class:`AsyncRun` — drives one volume through an explicit schedule of
+    sync calls, async submissions and polls, recording execution order
+    and per-ticket outcomes;
+  * :func:`crash_on_nth_btt_write` — global (cross-shard) crash injection
+    at BTT-write granularity, the same counter the PR 3/4 sweeps align
+    with the ``chain_commit_steps`` protocol model;
+  * :func:`crash_sweep` — re-runs a schedule against a fresh file-backed
+    volume with a crash injected at write point 1, 2, 3, ... until a run
+    survives, reopening + recovering after each crash and handing every
+    observation to an invariant checker.  This is how "a crash ANYWHERE
+    never replays a partial member chain and never loses a completed
+    ticket" becomes a swept property instead of a hand-picked example;
+  * :func:`fail_shard_writes` — injected *device* errors (not crashes):
+    BTT writes on one shard raise ``IOError``, which must surface as
+    per-ticket failures, leaving the ring serving other tenants;
+  * :class:`VersionedObjects` + :func:`random_schedule` — seeded
+    generator of interleaved multi-tenant schedules over versioned
+    objects, with whole-object / monotone-version / completed-never-lost
+    invariant checking after a clean run or a crash+recovery.
+
+Durability contract the invariants rely on (matching the synchronous
+sweeps in tests/test_volume.py): chained ``write_multi`` ops are durable
+the moment they complete — the redo journal's tail header landed before
+the call/ticket finished, so recovery rolls the whole chain forward.
+Plain single-block writes are only crash-durable on ``btt``-policy
+volumes (no staging), which is what the sweeps use.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SimulatedCrash
+from repro.volume import make_volume
+
+
+def blk(x: int) -> bytes:
+    return bytes([x % 256]) * 4096
+
+
+# ------------------------------------------------------- fault injection
+def crash_on_nth_btt_write(vol, n: int) -> dict:
+    """Arm a global (cross-shard) crash on BTT write number ``n``; the
+    returned state dict's ``count`` says how many writes were attempted
+    (``count - 1`` completed when the crash fired)."""
+    state = {"count": 0}
+    for d in vol.shards:
+        btt = d.impl.btt
+        orig = btt.write
+
+        def wrapped(lba, data, _orig=orig):
+            state["count"] += 1
+            if state["count"] == n:
+                raise SimulatedCrash("btt_write")
+            return _orig(lba, data)
+
+        btt.write = wrapped
+    return state
+
+
+def fail_shard_writes(vol, shard: int, local_lbas=None,
+                      exc=IOError) -> dict:
+    """Inject DEVICE errors (not crashes): BTT writes on ``shard`` —
+    optionally only to ``local_lbas`` — raise ``exc``.  The media is
+    untouched; the failure must surface on the one ticket whose op hit
+    it."""
+    state = {"failures": 0}
+    btt = vol.shards[shard].impl.btt
+    orig = btt.write
+
+    def wrapped(lba, data, _orig=orig):
+        if local_lbas is None or lba in local_lbas:
+            state["failures"] += 1
+            raise exc(f"injected device error: shard {shard} lba {lba}")
+        return _orig(lba, data)
+
+    btt.write = wrapped
+    state["restore"] = lambda: setattr(btt, "write", orig)
+    return state
+
+
+def volume_lba_on_shard(vol, shard: int, start: int = 0) -> int:
+    """Smallest volume lba >= ``start`` whose primary copy lives on
+    ``shard`` (so error-injection tests can aim an op at the bad
+    device)."""
+    for lba in range(start, vol.n_lbas):
+        if vol._map(lba, 0)[0] == shard:
+            return lba
+    raise AssertionError(f"no lba maps to shard {shard}")
+
+
+# ---------------------------------------------------- schedule execution
+class AsyncRun:
+    """One deterministic run: an inline-mode engine driven through a
+    schedule of steps, each a tuple:
+
+      ("submit_multi", name, lba, blocks)   async chained write
+      ("submit_write", name, lba, data)     async single-block write
+      ("submit_read",  name, lba)           async read
+      ("submit_fsync", name)                async barrier + group commit
+      ("poll", max_ops | None)              execute queued ops inline
+      ("sync_multi", lba, blocks)           blocking write_multi
+      ("sync_write", lba, data)             blocking write
+      ("fsync",)                            blocking fsync
+
+    ``tickets`` maps names to tickets; ``executed_sync`` counts blocking
+    steps that ran to completion.  A ``SimulatedCrash`` aborts the run
+    exactly where power was lost — tickets completed before that point
+    keep ``ok == True``, everything queued is failed by the dying ring.
+    """
+
+    def __init__(self, vol) -> None:
+        self.vol = vol
+        self.eng = vol.aio_engine(n_workers=0)
+        self.tickets: dict[str, object] = {}
+        self.executed_sync: list[tuple] = []
+
+    def step(self, s: tuple) -> None:
+        kind = s[0]
+        if kind == "submit_multi":
+            _, name, lba, blocks = s
+            self.tickets[name] = self.eng.submit("write_multi", lba,
+                                                 blocks=blocks)
+        elif kind == "submit_write":
+            _, name, lba, data = s
+            self.tickets[name] = self.eng.submit("write", lba, data=data)
+        elif kind == "submit_read":
+            _, name, lba = s
+            self.tickets[name] = self.eng.submit("read", lba)
+        elif kind == "submit_fsync":
+            self.tickets[s[1]] = self.eng.submit("fsync")
+        elif kind == "poll":
+            self.eng.poll(s[1])
+        elif kind == "sync_multi":
+            _, lba, blocks = s
+            self.vol.write_multi(lba, blocks)
+            self.executed_sync.append(s)
+        elif kind == "sync_write":
+            _, lba, data = s
+            self.vol.write(lba, data)
+            self.executed_sync.append(s)
+        elif kind == "fsync":
+            self.vol.fsync()
+            self.executed_sync.append(s)
+        else:
+            raise ValueError(s)
+
+    def run(self, schedule) -> "AsyncRun":
+        for s in schedule:
+            self.step(s)
+        self.eng.poll(None)          # settle any stragglers
+        return self
+
+    def ok_tickets(self) -> set[str]:
+        """Names of tickets that completed successfully (before a crash,
+        if one fired)."""
+        return {name for name, t in self.tickets.items() if t.ok}
+
+
+# ----------------------------------------------------------- crash sweep
+def run_crash_point(path: str, n: int, schedule_fn, *, vol_kw,
+                    prep_fn=None):
+    """One crash point: build a fresh file-backed volume at ``path``,
+    run ``prep_fn(vol)`` un-instrumented (base state + fsync), arm
+    :func:`crash_on_nth_btt_write` at write ``n``, run ``schedule_fn()``
+    through an :class:`AsyncRun`, simulate power loss (persist mmaps,
+    abandon the object) and reopen + recover.  Returns
+    ``(writes_done, crashed, run, reopened_vol)`` — the caller checks
+    invariants and closes the volume."""
+    vol = make_volume(path=path, **vol_kw)
+    if prep_fn is not None:
+        prep_fn(vol)
+    state = crash_on_nth_btt_write(vol, n)
+    run = AsyncRun(vol)
+    crashed = True
+    try:
+        run.run(schedule_fn())
+        crashed = False
+    except SimulatedCrash:
+        pass
+    for d in vol.shards:             # power loss keeps media state
+        d.impl.btt.pmem.persist()
+    del vol
+    vol2 = make_volume(path=path, **vol_kw)
+    done = state["count"] - (1 if crashed else 0)
+    return done, crashed, run, vol2
+
+
+def crash_sweep(tmp_path, schedule_fn, check_fn, *, vol_kw,
+                prep_fn=None, max_points: int = 2000) -> int:
+    """Property-sweep a schedule over EVERY BTT write point: run
+    :func:`run_crash_point` for n = 1, 2, ... and hand every observation
+    to ``check_fn(n, writes_done, crashed, run, reopened_vol)``.  Stops
+    after the first run that survives (every write point swept) and
+    returns how many points that took."""
+    n = 1
+    while n <= max_points:
+        done, crashed, run, vol2 = run_crash_point(
+            str(tmp_path / f"sweep{n}"), n, schedule_fn,
+            vol_kw=vol_kw, prep_fn=prep_fn)
+        try:
+            check_fn(n, done, crashed, run, vol2)
+        finally:
+            vol2.close()
+        if not crashed:
+            return n
+        n += 1
+    raise AssertionError(f"sweep did not terminate in {max_points} points")
+
+
+# ------------------------------------------- seeded interleaved schedules
+class VersionedObjects:
+    """O disjoint multi-block objects, each carrying a version counter.
+    Block i of object o at version v is a distinct constant pattern, so
+    a read-back either matches exactly one whole version or is torn."""
+
+    def __init__(self, n_objects: int = 4, n_blocks: int = 4,
+                 stride: int = 16, base_lba: int = 8) -> None:
+        self.n_objects = n_objects
+        self.n_blocks = n_blocks
+        self.lbas = [base_lba + o * stride for o in range(n_objects)]
+        self.issued: list[int] = [0] * n_objects     # highest version issued
+
+    def pattern(self, o: int, v: int) -> list[bytes]:
+        return [blk(17 + o * 31 + v * 7 + i) for i in range(self.n_blocks)]
+
+    def write_base(self, vol) -> None:
+        for o in range(self.n_objects):
+            vol.write_multi(self.lbas[o], self.pattern(o, 0))
+        vol.fsync()
+
+    def next_version(self, o: int) -> tuple[int, int, list[bytes]]:
+        self.issued[o] += 1
+        return self.lbas[o], self.issued[o], self.pattern(o, self.issued[o])
+
+    def read_version(self, vol, o: int) -> int:
+        """The whole version object ``o`` holds on ``vol``, or -1 if the
+        blocks do not match any single issued version (TORN — the
+        atomicity violation the sweeps exist to catch)."""
+        got = [bytes(vol.read(self.lbas[o] + i))
+               for i in range(self.n_blocks)]
+        for v in range(self.issued[o] + 1):
+            if got == self.pattern(o, v):
+                return v
+        return -1
+
+
+def random_schedule(rng: np.random.Generator, objs: VersionedObjects,
+                    n_steps: int = 24) -> list[tuple]:
+    """Seeded interleaving of async submissions, polls, sync writes and
+    fsync barriers over the versioned objects.  Ticket names encode the
+    (object, version) they wrote so invariants can be checked later.
+
+    Writes to ONE object are serialized against its queued-but-not-yet-
+    executed async write (the generator mirrors the inline engine's
+    FIFO to know what is still pending): version order == execution
+    order per object, so "surviving version >= highest completed
+    version" is exactly the completed-tickets-are-never-lost claim.
+    Cross-object interleaving stays fully random."""
+    sched: list[tuple] = []
+    pending: list[object] = []       # queued, unexecuted: object id | "F"
+    for k in range(n_steps):
+        r = rng.random()
+        busy = {p for p in pending if p != "F"}
+        free = [o for o in range(objs.n_objects) if o not in busy]
+        if r < 0.40 and free:
+            o = free[int(rng.integers(len(free)))]
+            lba, v, blocks = objs.next_version(o)
+            sched.append(("submit_multi", f"o{o}v{v}", lba, blocks))
+            pending.append(o)
+        elif r < 0.55 and free:
+            o = free[int(rng.integers(len(free)))]
+            lba, v, blocks = objs.next_version(o)
+            sched.append(("sync_multi", lba, blocks))
+        elif r < 0.70:
+            sched.append(("poll", 1))
+            if pending:
+                pending.pop(0)
+        elif r < 0.85:
+            sched.append(("poll", None))
+            pending.clear()
+        elif r < 0.95:
+            sched.append(("submit_fsync", f"fsync{k}"))
+            pending.append("F")
+        else:
+            sched.append(("fsync",))
+    sched.append(("poll", None))
+    return sched
+
+
+def check_versioned_invariants(objs: VersionedObjects, run: AsyncRun,
+                               vol, crashed: bool) -> None:
+    """Post-run (and post-recovery, if crashed) invariants of a
+    versioned-object schedule:
+
+      * **whole-object**: every object reads back exactly one version —
+        never a torn mix of two (``read_version != -1``);
+      * **completed tickets are never lost**: an async chained write
+        whose ticket completed OK is durable, so the surviving version
+        is >= it; likewise every blocking ``sync_multi`` that returned;
+      * **no invented data**: the surviving version never exceeds the
+        highest version issued (vacuously true via read_version).
+
+    Versions are monotone per object (each writer bumps the counter),
+    so "v >= floor" is exactly "nothing committed was rolled back".
+    """
+    floors = [0] * objs.n_objects
+    for s in run.executed_sync:
+        if s[0] == "sync_multi":
+            o = objs.lbas.index(s[1])
+            floors[o] = max(floors[o], _version_of(objs, o, s[2]))
+    for name in run.ok_tickets():
+        if name.startswith("o") and "v" in name:
+            o, v = name[1:].split("v")
+            floors[int(o)] = max(floors[int(o)], int(v))
+    for o in range(objs.n_objects):
+        v = objs.read_version(vol, o)
+        assert v != -1, f"object {o} is TORN after " \
+                        f"{'crash+recovery' if crashed else 'clean run'}"
+        assert v >= floors[o], \
+            (f"object {o} lost committed version: read v{v}, but "
+             f"v{floors[o]} had completed before the crash")
+
+
+def _version_of(objs: VersionedObjects, o: int, blocks) -> int:
+    first = bytes(blocks[0])
+    for v in range(objs.issued[o] + 1):
+        if first == objs.pattern(o, v)[0]:
+            return v
+    raise AssertionError("unknown version payload")

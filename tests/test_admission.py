@@ -28,6 +28,111 @@ def test_scan_detector_tracks_interleaved_streams():
     assert d.current_run("ns", 42) == 1
 
 
+def test_scan_detector_noise_does_not_evict_active_streams():
+    """REGRESSION: one-shot noise accesses (random reads from other
+    tenants interleaved with the streams) used to push ESTABLISHED run
+    counters out of the bounded table — each noise access inserts a new
+    expectation and the coldest entry evicted was an active stream.
+    Eviction now prefers run-length-1 entries, so interleaved sequential
+    streams from different tenants keep their counters under noise."""
+    d = ScanDetector(max_streams=4)
+    for i in range(2):                       # streams establish (run >= 2)
+        assert d.observe("ns", 1000 + i) == i + 1     # tenant A's stream
+        assert d.observe("ns", 5000 + i) == i + 1     # tenant B's stream
+    for i in range(2, 50):                   # then heavy noise interleaves
+        assert d.observe("ns", 1000 + i) == i + 1
+        assert d.observe("ns", 5000 + i) == i + 1
+        for k in range(3):                            # 3 one-shot noise
+            d.observe("ns", 1_000_000 + 7919 * i + 13 * k)
+    assert d.current_run("ns", 1049) == 50
+    assert d.current_run("ns", 5049) == 50
+
+
+def test_scan_detector_eviction_bound_holds():
+    """The multi-stream table stays bounded at max_streams even when
+    more genuine streams than slots interleave — capacity is traded
+    between them (counters churn), never exceeded."""
+    d = ScanDetector(max_streams=4)
+    for i in range(10):
+        for s in range(6):                   # 6 streams > 4 slots
+            d.observe("ns", 100 * s + i)
+    assert len(d._streams["ns"]) <= 4
+    # within capacity every stream keeps growing
+    d2 = ScanDetector(max_streams=4)
+    for i in range(10):
+        for s in range(4):
+            assert d2.observe("ns", 100 * s + i) == i + 1
+
+
+def test_scan_detector_expectation_collision_keeps_longer_run():
+    """REGRESSION: a one-shot access at (stream head - 1) writes the
+    SAME expectation key the established run owns — it must not clobber
+    the counter (the overwrite variant of noise killing a stream)."""
+    d = ScanDetector(max_streams=8)
+    for i in range(10):
+        d.observe("ns", 100 + i)             # run: 100..109, expects 110
+    assert d.observe("ns", 109) == 1         # noise re-read of the head
+    assert d.current_run("ns", 109) == 10    # counter survived
+    assert d.observe("ns", 110) == 11        # the scan continues
+
+
+def test_scan_detector_new_stream_establishes_under_noise():
+    """REGRESSION: with the table full of stale established counters, a
+    NEW scan with one noise access interleaved per step must still
+    establish — run-1 protection must not evict the scan's own first
+    expectation while stale entries pin the table."""
+    d = ScanDetector(max_streams=4)
+    for s in range(4):                       # 4 scans run and finish
+        for i in range(12):
+            d.observe("ns", 1000 * s + i)
+    for i in range(10):                      # new scan + 1 noise / step
+        assert d.observe("ns", 9000 + i) == i + 1, i
+        d.observe("ns", 500_000 + 7919 * i)
+    assert d.current_run("ns", 9009) == 10
+
+
+def test_scan_detector_stale_streams_age_out_for_new_scans():
+    """REGRESSION (starvation): counters left behind by FINISHED scans
+    must not pin the table forever — a new sequential scan arriving
+    when every slot holds a stale established run must still be able to
+    establish (the just-inserted expectation survives, the least
+    recently extended stale entry is evicted)."""
+    d = ScanDetector(max_streams=4)
+    for s in range(4):                       # 4 scans run and finish
+        for i in range(12):
+            d.observe("ns", 1000 * s + i)
+    # a 5th scan starts against a table full of stale run counters
+    for i in range(10):
+        assert d.observe("ns", 9000 + i) == i + 1, i
+    assert d.current_run("ns", 9009) == 10
+
+
+def test_volume_interleaved_tenant_scans_both_detected():
+    """End to end: two tenants scanning concurrently (interleaved at the
+    volume) must BOTH trip the scan-bypass once past the threshold —
+    neither resets the other's run."""
+    vol = make_volume("caiti", n_lbas=2048, n_shards=2, stripe_blocks=4,
+                      cache_bytes=1024 * 4096, read_tier_bytes=64 * 4096,
+                      scan_threshold=8)
+    try:
+        for lba in range(1024):
+            vol.write(lba, _blk(lba + 1))
+        vol.fsync()
+        vol.read_tier.clear()
+        # interleave two disjoint sequential scans + per-round noise
+        for i in range(64):
+            assert bytes(vol.read(256 + i)) == _blk(256 + i + 1)
+            assert bytes(vol.read(768 + i)) == _blk(768 + i + 1)
+            vol.read((37 * i + 11) % 256)    # random-reader tenant
+        # each volume-level scan is 2 per-shard sequential streams (the
+        # stripes interleave, per-shard locals stay consecutive): 4
+        # streams x ~(32 - 8) denials — both tenants' scans tripped
+        snap = vol.metrics_snapshot()
+        assert snap["admission"]["scan_fill_denials"] >= 80
+    finally:
+        vol.close()
+
+
 def test_admission_denies_fills_past_scan_threshold():
     adm = AdmissionPolicy(scan_threshold=4)
     denied = 0

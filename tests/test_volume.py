@@ -806,6 +806,82 @@ def test_log_batch_multigroup_crash_never_loses_applied_members(tmp_path):
     assert n == 33                               # swept every write point
 
 
+# ------------------------------------- async frontend x chained-tx crashes
+_ASYNC_KW = dict(policy="btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+                 journal_slots=16, journal_span=2, backend="file")
+
+
+def _async_mixed_fixture():
+    """Three 8-block versioned objects overwritten by a deterministic
+    mixed schedule: an ASYNC chain (queued), a SYNC write_multi (runs
+    first — chains submitted via AsyncIOEngine mix with blocking
+    callers), a poll executing the async chain, then a second async
+    chain.  Per object: 8 payloads + 3 headers + 1 tail + 8 in-place =
+    20 BTT writes, execution order o1(sync), o0, o2 — 60 write points."""
+    from aio_harness import VersionedObjects
+    cell = {}
+
+    def prep(vol):
+        cell["objs"] = VersionedObjects(n_objects=3, n_blocks=8, stride=16)
+        cell["objs"].write_base(vol)
+
+    def sched():
+        objs = cell["objs"]
+        s = []
+        lba, v, blocks = objs.next_version(0)
+        s.append(("submit_multi", f"o0v{v}", lba, blocks))   # queued
+        lba, v, blocks = objs.next_version(1)
+        s.append(("sync_multi", lba, blocks))                # runs first
+        s.append(("poll", None))                             # runs o0
+        lba, v, blocks = objs.next_version(2)
+        s.append(("submit_multi", f"o2v{v}", lba, blocks))
+        s.append(("poll", None))
+        return s
+
+    def check(n, done, crashed, run, vol2):
+        from aio_harness import check_versioned_invariants
+        check_versioned_invariants(cell["objs"], run, vol2, crashed)
+        if crashed:
+            # execution order o1, o0, o2 (20 writes each, tail = write
+            # 12 of its own chain): commit points at global writes 12,
+            # 32, 52 — each member commits whole, in order
+            objs = cell["objs"]
+            got = [objs.read_version(vol2, o) for o in (1, 0, 2)]
+            want = [1 if done >= tail else 0 for tail in (12, 32, 52)]
+            assert got == want, (n, done, got, want)
+
+    return prep, sched, check
+
+
+def test_async_mixed_chain_crash_key_points(tmp_path):
+    """Fast subset of the async crash sweep: one point per protocol
+    phase of each member (payloads / pre-tail / tail / in-place)."""
+    from aio_harness import run_crash_point
+    prep, sched, check = _async_mixed_fixture()
+    for n in (1, 11, 12, 13, 31, 32, 33, 52, 60):
+        done, crashed, run, vol2 = run_crash_point(
+            str(tmp_path / f"akey{n}"), n, sched, vol_kw=_ASYNC_KW,
+            prep_fn=prep)
+        try:
+            assert crashed, n
+            check(n, done, crashed, run, vol2)
+        finally:
+            vol2.close()
+
+
+@pytest.mark.slow
+def test_async_mixed_chain_crash_property_every_point(tmp_path):
+    """ACCEPTANCE (async frontend): chains submitted via AsyncIOEngine,
+    mixed with sync write_multi, crashed at EVERY BTT write point —
+    recovery never surfaces a torn member, members commit in execution
+    order, and a ticket that completed before the crash is never lost."""
+    from aio_harness import crash_sweep
+    prep, sched, check = _async_mixed_fixture()
+    points = crash_sweep(tmp_path, sched, check, vol_kw=_ASYNC_KW,
+                         prep_fn=prep)
+    assert points == 61                      # 3 x 20 writes, swept exactly
+
+
 # ------------------------------------------------------- group commit
 def test_group_commit_coalesces_concurrent_fsyncs():
     """>= 4 concurrent fsync callers share a leader's drain+checkpoint:
