@@ -27,7 +27,54 @@ FLOORS = {
     # async frontend: qd8 dropping below qd1 means the submission/
     # completion split became a pessimization
     "volume_aio": 1.0,
+    # cluster replication tax: pipelined K=2 at 4 nodes must keep
+    # >= 0.6x of the single-node unreplicated ops/s (the acceptance bar
+    # — pipelined >= 1.5x serial fanout — lives in the sim tests)
+    "cluster": 0.6,
 }
+
+
+def check_meta(results: dict) -> list[str]:
+    """Provenance gate: the artifact's embedded ``_meta`` (seed +
+    registry fingerprint, written by ``benchmarks/run.py --json``) must
+    match the CURRENT registry — floors compared across different
+    registries or seeds are not apples-to-apples.  Skipped (with a
+    warning) for artifacts predating the meta block or when the
+    registry cannot be imported here."""
+    meta = results.get("_meta")
+    if not isinstance(meta, dict):
+        print("[check_floors] WARN: artifact has no _meta block "
+              "(pre-provenance artifact); skipping registry check")
+        return []
+    print(f"[check_floors] artifact meta: seed={meta.get('seed')} "
+          f"registry={meta.get('registry_version')} "
+          f"mode={meta.get('mode')}")
+    try:
+        import run as bench_run
+    except ImportError:
+        try:
+            from benchmarks import run as bench_run
+        except ImportError:
+            print("[check_floors] WARN: benchmarks.run not importable; "
+                  "skipping registry-version check")
+            return []
+    problems = []
+    if meta.get("seed") != bench_run.SEED:
+        problems.append(f"artifact seed {meta.get('seed')!r} != current "
+                        f"bench seed {bench_run.SEED!r}")
+    try:
+        current = bench_run.registry_version(
+            bench_run._registry(1, fast=True, smoke=True))
+    except ImportError as e:        # bench deps absent in this env
+        print(f"[check_floors] WARN: registry not importable ({e}); "
+              f"skipping registry-version check")
+        return problems
+    if meta.get("registry_version") != current:
+        problems.append(
+            f"artifact registry_version {meta.get('registry_version')!r} "
+            f"!= current {current!r} (table set changed — regenerate the "
+            f"artifact before comparing floors)")
+    return problems
 
 
 def check(results: dict, allow_missing: bool = False) -> list[str]:
@@ -61,7 +108,8 @@ def main() -> None:
     args = ap.parse_args()
     with open(args.path) as f:
         results = json.load(f)
-    problems = check(results, allow_missing=args.allow_missing)
+    problems = check_meta(results)
+    problems += check(results, allow_missing=args.allow_missing)
     if problems:
         for p in problems:
             print(f"[check_floors] FAIL: {p}", file=sys.stderr)

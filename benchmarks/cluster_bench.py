@@ -1,0 +1,158 @@
+"""Distributed cluster-volume sweeps (virtual time).
+
+Extends the volume benches one level up: N member volumes behind
+simulated network links, chunk chains placed by the real
+``repro.cluster.placement.PlacementPolicy``.
+
+  --table pipeline   pipelined chain replication vs serial client-fanout
+                     at 4 nodes / K=2 (acceptance: >= 1.5x ops/s), plus
+                     the single-node unreplicated reference (CI floor:
+                     pipelined K=2 >= 0.6x of it — replication tax
+                     bounded)
+  --table scaling    nodes x K sweep, pipelined ops/s per configuration
+  --table placement  ring vs spread vs balanced: rack diversity and
+                     placement balance under the same workload
+  --table kill       node death mid-workload: re-replication storm span
+                     and regenerated block count at each K
+
+Primary engine: ``repro.core.sim.run_cluster_sim_workload``
+(deterministic virtual time; same cost model as every other table).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.sim import run_cluster_sim_workload
+
+N_LBAS = 1 << 16
+CHUNK_BLOCKS = 64
+N_BLOCKS = 8          # blocks per replicated logical write (one group)
+QDEPTH = 4
+
+
+def _tenants(n: int, ops: int) -> list[dict]:
+    return [{"name": f"t{j}", "n_ops": ops} for j in range(n)]
+
+
+def _run(n_ops: int, **kw) -> dict:
+    kw.setdefault("n_lbas", N_LBAS)
+    kw.setdefault("chunk_blocks", CHUNK_BLOCKS)
+    kw.setdefault("n_blocks", N_BLOCKS)
+    kw.setdefault("qdepth", QDEPTH)
+    kw.setdefault("tenants", _tenants(1, n_ops))
+    return run_cluster_sim_workload(**kw)
+
+
+def pipeline(n_ops: int = 2000) -> dict:
+    """ACCEPTANCE: 4-node K=2 pipelined chain writes must sustain
+    >= 1.5x the ops/s of serial per-replica (client-fanout) writes —
+    cut-through forwarding overlaps the K transfers to within a block
+    and the client uplinks the payload once instead of K times.  The CI
+    floor (``speedup`` >= 0.6) bounds the replication tax instead:
+    pipelined K=2 must keep >= 0.6x of the single-node unreplicated
+    ops/s."""
+    print(f"# chain replication: 1 client x {n_ops} x {N_BLOCKS}-block "
+          f"writes, qd={QDEPTH}, 4 nodes, K=2 (acceptance: pipelined "
+          f">= 1.5x serial; CI floor: >= 0.6x single-node)")
+    rows = {}
+    for label, kw in (
+            ("single-node", dict(n_nodes=1, replication_k=1)),
+            ("serial K=2", dict(n_nodes=4, replication_k=2,
+                                mode="serial")),
+            ("pipelined K=2", dict(n_nodes=4, replication_k=2,
+                                   mode="pipelined"))):
+        r = _run(n_ops, **kw)
+        rows[label] = {"ops_s": r["ops_s"], "agg_mb_s": r["agg_mb_s"],
+                       "makespan_us": r["makespan_us"]}
+        print(f"{label:14s} ops/s={r['ops_s']:10.0f} "
+              f"agg={r['agg_mb_s']:9.1f} MB/s "
+              f"makespan={r['makespan_us']:12.0f}us")
+    out = dict(rows)
+    out["speedup_pipeline"] = (rows["pipelined K=2"]["ops_s"]
+                               / rows["serial K=2"]["ops_s"])
+    out["speedup"] = (rows["pipelined K=2"]["ops_s"]
+                      / rows["single-node"]["ops_s"])
+    print(f"-> pipelined vs serial: {out['speedup_pipeline']:.2f}x ops/s "
+          f"(acceptance: >= 1.5x); replication tax: {out['speedup']:.2f}x "
+          f"of single-node (CI floor: >= 0.6x)")
+    return out
+
+
+def scaling(n_ops: int = 1500) -> dict:
+    print(f"# nodes x K sweep, pipelined, 1 client, qd={QDEPTH}")
+    out = {}
+    for n_nodes in (2, 4, 8):
+        for k in (1, 2, 3):
+            if k > n_nodes:
+                continue
+            r = _run(n_ops, n_nodes=n_nodes, replication_k=k)
+            out[f"n{n_nodes}_k{k}"] = r["ops_s"]
+            print(f"nodes={n_nodes} K={k}: ops/s={r['ops_s']:10.0f} "
+                  f"agg={r['agg_mb_s']:9.1f} MB/s")
+    return out
+
+
+def placement(n_ops: int = 1500) -> dict:
+    print("# placement policies at 6 nodes / 3 racks / K=3")
+    out = {}
+    for pol in ("ring", "spread", "balanced"):
+        r = _run(n_ops, n_nodes=6, replication_k=3, racks=3, placement=pol)
+        out[pol] = {"ops_s": r["ops_s"],
+                    "rack_diversity": r["rack_diversity"],
+                    "balance": r["balance"]}
+        print(f"{pol:10s} ops/s={r['ops_s']:10.0f} "
+              f"rack_div={r['rack_diversity']:.2f} "
+              f"balance={r['balance']:.3f}")
+    return out
+
+
+def kill(n_ops: int = 1500) -> dict:
+    print("# node death at 50% of the workload: re-replication storm")
+    out = {}
+    for k in (2, 3):
+        r = _run(n_ops, n_nodes=5, replication_k=k, kill_node=1)
+        c = r["counts"]
+        out[f"k{k}"] = {"ops_s": r["ops_s"],
+                        "storm_span_us": c["storm_span_us"],
+                        "chunks_repaired": c.get("chunks_repaired", 0),
+                        "rereplicated_blocks":
+                            c.get("rereplicated_blocks", 0)}
+        print(f"K={k}: ops/s={r['ops_s']:10.0f} "
+              f"storm={c['storm_span_us']:10d}us "
+              f"chunks={c.get('chunks_repaired', 0):5d} "
+              f"blocks={c.get('rereplicated_blocks', 0):7d}")
+    return out
+
+
+def run(n_ops: int = 2000) -> dict:
+    """The ``benchmarks.run`` registry entry: all four tables; the
+    ``speedup`` key (pipelined K=2 / single-node) is the CI floor."""
+    out = {"pipeline": pipeline(n_ops)}
+    out["scaling"] = scaling(max(200, (n_ops * 3) // 4))
+    out["placement"] = placement(max(200, (n_ops * 3) // 4))
+    out["kill"] = kill(max(200, (n_ops * 3) // 4))
+    out["speedup"] = out["pipeline"]["speedup"]
+    out["speedup_pipeline"] = out["pipeline"]["speedup_pipeline"]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default="pipeline",
+                    choices=["pipeline", "scaling", "placement", "kill",
+                             "all"])
+    ap.add_argument("--ops", type=int, default=2000)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.table == "all":
+        out = run(args.ops)
+    else:
+        out = globals()[args.table](args.ops)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

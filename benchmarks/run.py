@@ -16,14 +16,28 @@ directly).  Writes JSON artifacts under experiments/bench/.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import sys
 import time
 
+#: every sim table pins its RNG to this seed; recorded in the artifact's
+#: ``_meta`` so two artifacts are only compared apples-to-apples
+SEED = 0
+
 
 def _section(name: str):
     print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+
+
+def registry_version(tables) -> str:
+    """Fingerprint of the registered table set.  Embedded in every
+    ``--json`` artifact and re-derived by ``check_floors.py``: comparing
+    artifacts produced by different registries (a table added, renamed
+    or dropped between runs) is not apples-to-apples, and this makes
+    that mismatch loud instead of silent."""
+    return hashlib.sha1(",".join(sorted(tables)).encode()).hexdigest()[:12]
 
 
 def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
@@ -33,12 +47,12 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
     ``ops`` (fixed sweeps, real-thread state sizes) so the CI gate
     really runs tiny."""
     try:                                        # python -m benchmarks.run
-        from . import breakdown, ckpt_bench, fio_like, fsync_sweep, \
-            kvstore, roofline, serve_bench, volume_bench, ycsb
+        from . import breakdown, ckpt_bench, cluster_bench, fio_like, \
+            fsync_sweep, kvstore, roofline, serve_bench, volume_bench, ycsb
     except ImportError:                         # python benchmarks/run.py
         sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-        import breakdown, ckpt_bench, fio_like, fsync_sweep, kvstore, \
-            roofline, serve_bench, volume_bench, ycsb
+        import breakdown, ckpt_bench, cluster_bench, fio_like, \
+            fsync_sweep, kvstore, roofline, serve_bench, volume_bench, ycsb
 
     return {
         "fig2a": ("random-write execution time (sim)",
@@ -94,6 +108,9 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
         "volume_aio": ("async frontend queue-depth sweep, qd1 vs qd8+ "
                        "(sim)",
                        lambda: volume_bench.aio(n_ops=ops // 10)),
+        "cluster": ("distributed cluster volume: pipelined chain "
+                    "replication, placement, kill storm (sim)",
+                    lambda: cluster_bench.run(n_ops=max(200, ops // 10))),
         "roofline": ("dry-run derived roofline terms (deliverable g)",
                      lambda: len(roofline.run("experiments/dryrun",
                                               mesh="pod16x16"))),
@@ -147,12 +164,23 @@ def main() -> None:
             if not args.smoke:
                 raise
 
+    # artifact provenance: seed + registry fingerprint travel WITH the
+    # results so floor gates can refuse cross-registry comparisons
+    mode = "smoke" if args.smoke else "fast" if args.fast else "full"
+    results["_meta"] = {
+        "seed": SEED,
+        "registry_version": registry_version(tables),
+        "tables_registered": sorted(tables),
+        "mode": mode,
+        "base_ops": ops,
+    }
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1, default=str)
-    print(f"\n[benchmarks.run] {len(results)} tables in "
+    n_tables = sum(1 for k in results if not k.startswith("_"))
+    print(f"\n[benchmarks.run] {n_tables} tables in "
           f"{time.time() - t0:.1f}s -> {args.out}/results.json")
     if failures:
         print(f"[benchmarks.run] {len(failures)} table(s) FAILED: "

@@ -276,7 +276,9 @@ def make_blockstore(path: str | None = None, *, policy: str = "caiti",
                     latency: LatencyModel | None = None,
                     n_shards: int = 1,
                     read_tier_bytes: int = 0,
-                    aio: bool = False) -> BlockStore:
+                    aio: bool = False,
+                    cluster: int = 0,
+                    replication_k: int = 2) -> BlockStore:
     """``n_shards > 1`` stripes the store over a multi-device volume:
     checkpoint blocks spread across all shards' PMem (aggregate bandwidth)
     and multi-block puts ride the volume journal.  ``read_tier_bytes > 0``
@@ -285,9 +287,27 @@ def make_blockstore(path: str | None = None, *, policy: str = "caiti",
     through DRAM instead of PMem.  ``aio`` (volumes only) issues put/get
     block I/O through the volume's async frontend: writes overlap the
     caller's next serialization step, restore reads fan out across the
-    engine workers."""
+    engine workers.
+
+    ``cluster = N > 0`` backs the store with an N-node distributed
+    ``ClusterVolume`` instead (``replication_k`` copies per chunk):
+    checkpoints survive whole-node loss — puts are chain-replicated and
+    acked on K durable tails, restores fail over past dead or corrupt
+    members via the cluster crc ledger.  The BlockStore itself is
+    unchanged: the cluster speaks the same chained-tx write_multi /
+    verified-read surface as the striped volume, and manifest commits
+    stay whole-object atomic because the cluster caps
+    ``max_atomic_write_blocks`` at one placement chunk."""
     n_lbas = capacity_bytes // block_size
-    if n_shards > 1:
+    if cluster > 0:
+        from repro.cluster import make_cluster
+        dev = make_cluster(policy, n_lbas=n_lbas, n_nodes=cluster,
+                           replication_k=replication_k,
+                           block_size=block_size, cache_bytes=cache_bytes,
+                           node_shards=n_shards if n_shards > 1 else 2,
+                           backend="file" if path else "ram", path=path,
+                           read_tier_bytes=read_tier_bytes)
+    elif n_shards > 1:
         from repro.volume import make_volume
         dev = make_volume(policy, n_lbas=n_lbas, n_shards=n_shards,
                           block_size=block_size, cache_bytes=cache_bytes,

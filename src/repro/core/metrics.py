@@ -45,6 +45,16 @@ collected with :meth:`Metrics.per_tenant` — the volume records
 ``wfq_vbytes::<tenant>``, the tier-aware WFQ virtual time (priced bytes)
 each tenant has been charged across reads, writes and batched journal
 traffic.
+
+Service-time EWMAs (fail-slow groundwork): :meth:`Metrics.observe`
+tracks a per-key exponentially weighted moving average of service
+nanoseconds (plus count and max) under ``svc::<where>`` keys — the
+striped volume observes ``svc::shard<i>``, the async engine
+``svc::aio::<op>``, the cluster layer ``svc::node<i>``.
+:meth:`Metrics.per_node` collects them, and both the volume and cluster
+``scrub`` outputs surface the table: a limping shard/node (fail-slow,
+not fail-stop) shows up as one EWMA drifting away from its peers long
+before any heartbeat trips.
 """
 from __future__ import annotations
 
@@ -86,6 +96,12 @@ COMMIT_COUNTERS = (
 )
 
 
+#: EWMA smoothing for :meth:`Metrics.observe` — ~the last 10-ish
+#: observations dominate, so a shard/node turning slow moves its average
+#: within tens of ops instead of being diluted by history
+EWMA_ALPHA = 0.2
+
+
 class Metrics:
     """Thread-safe counters + nanosecond timers, cheap enough for hot paths."""
 
@@ -95,6 +111,8 @@ class Metrics:
         self.count = defaultdict(int)     # category/event -> occurrences
         self.latencies_ns: list[int] = [] # per-request response times
         self.record_latencies = False
+        # key -> [ewma_ns, n, max_ns] service-time summaries (observe())
+        self._svc: dict[str, list] = {}
 
     @contextmanager
     def timer(self, category: str):
@@ -120,6 +138,31 @@ class Metrics:
         if self.record_latencies:
             with self._lock:
                 self.latencies_ns.append(ns)
+
+    def observe(self, key: str, ns: int) -> None:
+        """Fold one service time (nanoseconds) into ``key``'s EWMA.
+        Keys follow the per-tenant convention (``svc::shard3``,
+        ``svc::node1``, ``svc::aio::write_multi``) so :meth:`per_node`
+        can collect a whole family at once."""
+        with self._lock:
+            st = self._svc.get(key)
+            if st is None:
+                self._svc[key] = [float(ns), 1, ns]
+            else:
+                st[0] += EWMA_ALPHA * (ns - st[0])
+                st[1] += 1
+                if ns > st[2]:
+                    st[2] = ns
+
+    def per_node(self, prefix: str = "svc") -> dict[str, dict]:
+        """Service-time summaries observed under ``f"{prefix}::..."``:
+        suffix -> ``{"ewma_us", "n", "max_us"}``.  The fail-slow detector
+        input: one EWMA drifting off its peers is a limping shard/node."""
+        pre = prefix + "::"
+        with self._lock:
+            return {k[len(pre):]: {"ewma_us": st[0] / 1e3, "n": st[1],
+                                   "max_us": st[2] / 1e3}
+                    for k, st in self._svc.items() if k.startswith(pre)}
 
     # -- report helpers -----------------------------------------------------
     def breakdown(self) -> dict[str, float]:
@@ -185,3 +228,4 @@ class Metrics:
             self.ns.clear()
             self.count.clear()
             self.latencies_ns.clear()
+            self._svc.clear()

@@ -1304,3 +1304,296 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         "counts": counts,
         "per_tenant": per_tenant,
     }
+
+
+# ---------------------------------------------------------------- cluster
+class SimCluster:
+    """Virtual-time model of the distributed cluster volume
+    (``repro.cluster``): ``n_nodes`` member :class:`SimVolume`\\ s, each
+    behind a serial NIC :class:`Bank`, with chunk chains mapped by the
+    REAL :class:`repro.cluster.placement.PlacementPolicy` (imported at
+    call time, like :class:`SimReadTier`) — the simulator exercises the
+    exact placement the threaded cluster runs.
+
+    Replication modes (the acceptance contrast):
+
+      ``pipelined``  chain replication with cut-through forwarding: the
+                     client uplinks the payload ONCE to the primary; hop
+                     j starts receiving one block behind hop j-1, so K
+                     transfers overlap to within a block and node writes
+                     overlap upstream transfers.  Acks ripple tail to
+                     head concurrently with upstream work — one final
+                     ack latency reaches the client;
+      ``serial``     client-fanout replication: the client sends the
+                     payload to every replica itself (K uplinks
+                     serialize on its NIC) and each replica acks
+                     directly — the flat-replication baseline.
+
+    NICs are serial servers, so concurrent tenants contend for node
+    ingress exactly like submitting cores contend for shard DIMM banks.
+    A node kill mid-workload drops it from every chain (writes fail over
+    to the surviving members); :meth:`rereplicate` runs the regeneration
+    storm — survivor media read, one-block transfer, target write per
+    lost block — in virtual time, chosen by ``placement.replacement``.
+    """
+
+    def __init__(self, policy: str, cost: CostModel, *, n_nodes: int,
+                 replication_k: int = 2, chunk_blocks: int = 64,
+                 cache_slots: int = 4096, n_workers: int = 4,
+                 n_shards: int = 2, stripe_blocks: int = 16,
+                 racks: int = 2, placement: str = "spread",
+                 net_latency_us: float = 5.0,
+                 net_mb_s: float = 3000.0) -> None:
+        from repro.cluster.placement import (NodeInfo,   # no import cycle
+                                             PlacementPolicy)  # at call time
+        self.cost = cost
+        self.vols = [SimVolume(policy, cost, n_shards=n_shards,
+                               cache_slots=cache_slots, n_workers=n_workers,
+                               stripe_blocks=stripe_blocks)
+                     for _ in range(n_nodes)]
+        self.nics = [Bank() for _ in range(n_nodes)]
+        infos = [NodeInfo(f"node{i}", rack=i % max(1, racks))
+                 for i in range(n_nodes)]
+        self.place = PlacementPolicy(infos, k=replication_k,
+                                     policy=placement)
+        self.lat = net_latency_us
+        self.bw = net_mb_s                 # MB/s == bytes/us (exact)
+        self.chunk_blocks = chunk_blocks
+        self.chains: dict[int, list[int]] = {}
+        self.alive = [True] * n_nodes
+        self._written: dict[int, set] = defaultdict(set)
+        self.ccounts: dict = defaultdict(int)
+        self.bs = 4096.0
+
+    # -------------------------------------------------------------- mapping
+    def _chain(self, chunk: int) -> list[int]:
+        ch = self.chains.get(chunk)
+        if ch is None:
+            elig = [i for i in range(len(self.vols)) if self.alive[i]]
+            ch = self.place.assign(chunk, self.chunk_blocks,
+                                   eligible=elig or None)
+            self.chains[chunk] = ch
+        return ch
+
+    def _span(self, nbytes: float) -> float:
+        return nbytes / self.bw
+
+    # ------------------------------------------------------------------ I/O
+    def write(self, t: float, client_nic: Bank, lba: int, n_blocks: int,
+              mode: str = "pipelined") -> float:
+        """One replicated logical write of ``n_blocks`` consecutive
+        blocks (must stay inside one chunk); returns the ack time at the
+        client."""
+        chunk = lba // self.chunk_blocks
+        chain = [i for i in self._chain(chunk) if self.alive[i]]
+        assert chain, "no live replica for chunk"
+        nbytes = n_blocks * self.bs
+        w = self._span(nbytes)             # full-payload transfer span
+        b = self._span(self.bs)            # one-block span (cut-through)
+        self.ccounts["cluster_writes"] += 1
+        self.ccounts["net_bytes"] += int(nbytes) * len(chain)
+        for i in range(n_blocks):
+            self._written[chunk].add(lba + i)
+        if mode == "pipelined":
+            depart = client_nic.serve(t, w)            # ONE client uplink
+            arr = self.nics[chain[0]].serve(depart - w + b + self.lat, w)
+            done = 0.0
+            for j, ni in enumerate(chain):
+                if j > 0:                  # hop j trails hop j-1 by a block
+                    arr = self.nics[ni].serve(arr - w + b + self.lat, w)
+                end = arr
+                for i in range(n_blocks):
+                    end = self.vols[ni].write(end, lba + i)
+                done = max(done, end)
+            return done + self.lat         # tail ack ripples concurrently
+        # serial: K uplinks on the client NIC, per-replica direct acks
+        done = 0.0
+        for ni in chain:
+            depart = client_nic.serve(t, w)
+            arr = self.nics[ni].serve(depart - w + b + self.lat, w)
+            end = arr
+            for i in range(n_blocks):
+                end = self.vols[ni].write(end, lba + i)
+            done = max(done, end + self.lat)
+        return done
+
+    def read(self, t: float, client_nic: Bank, lba: int) -> float:
+        chain = [i for i in self._chain(lba // self.chunk_blocks)
+                 if self.alive[i]]
+        assert chain, "no live replica for chunk"
+        ni = chain[0]
+        end = self.vols[ni].read(t + self.lat, lba)
+        self.ccounts["net_bytes"] += int(self.bs)
+        return client_nic.serve(end + self.lat, self._span(self.bs))
+
+    # ------------------------------------------------------------- failures
+    def kill(self, node: int) -> None:
+        self.alive[node] = False
+        self.ccounts["nodes_killed"] += 1
+
+    def rereplicate(self, t: float) -> float:
+        """The regeneration storm after a death: every written chunk that
+        lost a chain member is copied — survivor media read, one-block
+        transfer, target write — onto ``placement.replacement``'s pick.
+        Returns the storm's completion time."""
+        end = t
+        for chunk, chain in sorted(self.chains.items()):
+            for dead in [i for i in chain if not self.alive[i]]:
+                alive = [i for i in range(len(self.vols)) if self.alive[i]]
+                target = self.place.replacement(chain, dead, alive)
+                src = next((i for i in chain
+                            if i != dead and self.alive[i]), None)
+                if target is None or src is None:
+                    self.ccounts["rereplication_unplaceable"] += 1
+                    continue
+                tt = t
+                lbas = sorted(self._written.get(chunk, ()))
+                for lba in lbas:
+                    r = self.vols[src].read(tt, lba)
+                    a = self.nics[target].serve(r + self.lat,
+                                                self._span(self.bs))
+                    tt = self.vols[target].write(a, lba)
+                chain[chain.index(dead)] = target
+                self.place.transfer(dead, target, len(lbas))
+                self.ccounts["chunks_repaired"] += 1
+                self.ccounts["rereplicated_blocks"] += len(lbas)
+                self.ccounts["net_bytes"] += int(len(lbas) * self.bs)
+                end = max(end, tt)
+        return end
+
+    def counts(self) -> dict:
+        agg: dict = defaultdict(int)
+        for v in self.vols:
+            for k, x in v.counts().items():
+                agg[k] += x
+        for k, x in self.ccounts.items():
+            agg[k] += x
+        return dict(agg)
+
+
+def run_cluster_sim_workload(policy: str = "btt", *, n_nodes: int = 4,
+                             replication_k: int = 2, n_lbas: int,
+                             chunk_blocks: int = 64,
+                             cache_slots: int = 4096,
+                             tenants: list[dict], n_blocks: int = 8,
+                             qdepth: int = 4, mode: str = "pipelined",
+                             placement: str = "spread", racks: int = 2,
+                             net_latency_us: float = 5.0,
+                             net_mb_s: float = 3000.0,
+                             read_frac: float = 0.0,
+                             kill_node: int | None = None,
+                             kill_at_frac: float = 0.5,
+                             n_workers: int = 4, n_shards: int = 2,
+                             stripe_blocks: int = 16, seed: int = 0,
+                             cost: CostModel | None = None) -> dict:
+    """Closed-loop replicated-write workload against a
+    :class:`SimCluster` — the ``--table cluster`` engine.
+
+    Each tenant is one serial client core with its own NIC and a bounded
+    window of ``qdepth`` outstanding replicated writes (submission of
+    request i gates on completion of request i-qdepth).  Addresses are
+    chunk-aligned groups of ``n_blocks`` so every logical write stays
+    inside one chain — the whole-object-atomic envelope the threaded
+    cluster enforces.
+
+    ``mode`` selects the replication discipline (``pipelined`` chain vs
+    ``serial`` client-fanout — see :class:`SimCluster`); the ops/s ratio
+    between the two at 4 nodes / K=2 is the paper-style acceptance
+    contrast (>= 1.5x).
+
+    ``kill_node`` fail-stops that node once ``kill_at_frac`` of all ops
+    have completed: in-flight and subsequent writes fail over to the
+    surviving chain members, and the re-replication storm
+    (:meth:`SimCluster.rereplicate`) runs to completion in virtual time
+    — its span and block count are reported in ``counts``.
+    """
+    cost = cost or CostModel()
+    cl = SimCluster(policy, cost, n_nodes=n_nodes,
+                    replication_k=replication_k, chunk_blocks=chunk_blocks,
+                    cache_slots=cache_slots, n_workers=n_workers,
+                    n_shards=n_shards, stripe_blocks=stripe_blocks,
+                    racks=racks, placement=placement,
+                    net_latency_us=net_latency_us, net_mb_s=net_mb_s)
+    rng = np.random.default_rng(seed)
+    nt = len(tenants)
+    names = [t.get("name", f"t{j}") for j, t in enumerate(tenants)]
+    n_ops = [int(t["n_ops"]) for t in tenants]
+    n_chunks = max(1, n_lbas // chunk_blocks)
+    groups = max(1, chunk_blocks // n_blocks)
+    lbas = [rng.integers(0, n_chunks, size=n) * chunk_blocks
+            + rng.integers(0, groups, size=n) * n_blocks
+            for n in n_ops]
+    is_read = [rng.random(n) < read_frac if read_frac else None
+               for n in n_ops]
+    client_nics = [Bank() for _ in range(nt)]
+    stack = cost.bio_stack / max(1, min(qdepth, 16))
+    total = sum(n_ops)
+    kill_at = int(total * kill_at_frac) if kill_node is not None else -1
+
+    heads = [0] * nt
+    core_free = [0.0] * nt
+    inflight: list[list[float]] = [[] for _ in range(nt)]
+    metrics = [SimMetrics() for _ in range(nt)]
+    t_done, n_done = 0.0, 0
+    storm_span = 0.0
+    while True:
+        best_j, best_start = -1, float("inf")
+        for j in range(nt):
+            if heads[j] >= n_ops[j]:
+                continue
+            k = heads[j]
+            gate = inflight[j][k - qdepth] if k >= qdepth else 0.0
+            start = max(gate, core_free[j])
+            if start < best_start:
+                best_start, best_j = start, j
+        if best_j < 0:
+            break
+        j = best_j
+        k = heads[j]
+        heads[j] += 1
+        arrive = inflight[j][k - qdepth] if k >= qdepth else 0.0
+        lba = int(lbas[j][k])
+        t_sub = best_start + stack       # submit cost on the client core;
+        core_free[j] = t_sub             # the NIC serializes the uplinks
+        if is_read[j] is not None and is_read[j][k]:
+            done = cl.read(t_sub, client_nics[j], lba)
+        else:
+            done = cl.write(t_sub, client_nics[j], lba, n_blocks,
+                            mode=mode)
+        inflight[j].append(done)
+        metrics[j].lat(arrive, done)
+        t_done = max(t_done, done)
+        n_done += 1
+        if n_done == kill_at and cl.alive[kill_node]:
+            cl.kill(kill_node)
+            storm_end = cl.rereplicate(t_done)
+            storm_span = storm_end - t_done
+            t_done = max(t_done, storm_end)
+    counts = cl.counts()
+    counts["makespan_us"] = int(t_done)
+    counts["storm_span_us"] = int(storm_span)
+    per_tenant = {}
+    for j in range(nt):
+        span = inflight[j][-1] if inflight[j] else 0.0
+        per_tenant[names[j]] = {
+            "ops": len(inflight[j]),
+            "ops_s": len(inflight[j]) / max(span / 1e6, 1e-9),
+            "mean_us": metrics[j].mean(),
+            "p9999_us": metrics[j].pct(99.99),
+        }
+    return {
+        "policy": policy,
+        "mode": mode,
+        "n_nodes": n_nodes,
+        "replication_k": replication_k,
+        "placement": placement,
+        "makespan_us": t_done,
+        "ops_s": total / max(t_done / 1e6, 1e-9),
+        "agg_mb_s": total * n_blocks * 4096.0 / max(t_done, 1e-9),
+        "rack_diversity": (
+            sum(cl.place.rack_diversity(c) for c in cl.chains.values())
+            / max(1, len(cl.chains))),
+        "balance": cl.place.balance(),
+        "counts": counts,
+        "per_tenant": per_tenant,
+    }

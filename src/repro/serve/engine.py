@@ -186,7 +186,15 @@ class AsyncRequestLog:
     issues one async fsync barrier (which coalesces with any concurrent
     committer via the volume's GroupCommitter); a device error surfaces
     there as that record's per-ticket failure, not a serving-loop
-    exception."""
+    exception.
+
+    ``volume`` is anything speaking the async surface — a
+    ``StripedVolume`` or a ``repro.cluster.ClusterVolume`` (a
+    replicated request log that survives node loss).  Records are
+    capped at the device's ``max_atomic_write_blocks()`` so a
+    multi-block append stays whole-record atomic everywhere (on a
+    cluster that bound is one placement chunk — a record spanning
+    chunks would commit chain by chain)."""
 
     def __init__(self, volume, *, base_lba: int = 0,
                  capacity_blocks: int | None = None,
@@ -194,6 +202,9 @@ class AsyncRequestLog:
         self.vol = volume
         self.tenant = tenant
         self.block_size = volume.block_size
+        self._max_rec = (volume.max_atomic_write_blocks()
+                         if hasattr(volume, "max_atomic_write_blocks")
+                         else None)
         self._base = base_lba
         # the log is a RING over [base_lba, base_lba + capacity): a
         # long-running serve loop wraps and overwrites its oldest
@@ -210,6 +221,9 @@ class AsyncRequestLog:
 
     def _alloc(self, n_blocks: int) -> int:
         assert n_blocks <= self._cap, "record larger than the log ring"
+        assert self._max_rec is None or n_blocks <= self._max_rec, \
+            (f"record of {n_blocks} blocks exceeds the device's "
+             f"whole-object-atomic bound ({self._max_rec})")
         if self._off + n_blocks > self._cap:
             self._off = 0                    # wrap: oldest records go
             self.wraps += 1

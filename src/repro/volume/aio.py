@@ -384,6 +384,7 @@ class AsyncIOEngine:
     def _execute(self, t: Ticket) -> None:
         data, blocks = t.value if isinstance(t.value, tuple) else (None, None)
         t.value = None
+        t0 = time.perf_counter_ns()
         try:
             val = self._run_op(t, data, blocks)
         except SimulatedCrash as e:
@@ -393,11 +394,20 @@ class AsyncIOEngine:
                 raise
             return
         except Exception as e:       # injected device error, journal
-            self._complete(t, error=e)          # overflow, ... — per-ticket
+            self._observe_svc(t, t0)            # overflow, ... — per-ticket
+            self._complete(t, error=e)
             return
+        self._observe_svc(t, t0)
         if val is _PENDING:
             return                   # completes via drain callback
         self._complete(t, value=val)
+
+    def _observe_svc(self, t: Ticket, t0: int) -> None:
+        """Per-op service-time EWMA on the volume's metrics (fail-slow
+        groundwork: ``Metrics.per_node()`` keys ``aio::<op>``)."""
+        m = getattr(self.vol, "metrics", None)
+        if m is not None:
+            m.observe(f"svc::aio::{t.op}", time.perf_counter_ns() - t0)
 
     def _run_op(self, t: Ticket, data, blocks):
         vol = self.vol

@@ -68,6 +68,7 @@ import json
 import os
 import struct
 import threading
+import time
 import zlib
 
 import numpy as np
@@ -312,7 +313,10 @@ class StripedVolume:
             self._crcs[lba] = self._crc(data)
         for r in range(self.cfg.replicas):
             shard, local = self._map(lba, r)
+            t0 = time.perf_counter_ns()
             self.shards[shard].write(local, data)
+            self.metrics.observe(f"svc::shard{shard}",
+                                 time.perf_counter_ns() - t0)
 
     def _pick_good_copy(self, lba: int, candidates: list[bytes]):
         """The copy to trust among divergent replicas: the write-crc
@@ -435,9 +439,14 @@ class StripedVolume:
                     out: np.ndarray | None = None):
         """(data, source) from one shard: 'transit' | 'tier' | 'backend'."""
         impl = self.shards[shard].impl
+        t0 = time.perf_counter_ns()
         if hasattr(impl, "read_ex"):
-            return impl.read_ex(local, out=out)
-        return impl.read(local, out=out), "backend"
+            res = impl.read_ex(local, out=out)
+        else:
+            res = impl.read(local, out=out), "backend"
+        self.metrics.observe(f"svc::shard{shard}",
+                             time.perf_counter_ns() - t0)
+        return res
 
     def _debit_read(self, tenant: str | None, source: str,
                     pre_tier: str | None = None) -> None:
@@ -781,6 +790,16 @@ class StripedVolume:
         """Count-compatible wrapper over :meth:`scrub_replicas_detail`."""
         return len(self.scrub_replicas_detail(sample_every))
 
+    def scrub(self, sample_every: int = 1) -> dict:
+        """Operator-facing scrub report: replica divergence plus the
+        per-shard service-time EWMAs (``Metrics.per_node``) — the
+        fail-slow signal a limping DIMM set shows long before it fails
+        outright (one shard's EWMA drifting off its peers)."""
+        detail = self.scrub_replicas_detail(sample_every)
+        return {"divergent": len(detail),
+                "divergent_detail": detail,
+                "per_shard_svc": self.metrics.per_node()}
+
     # ---------------------------------------------------------------- stats
     def occupancy(self) -> float:
         if not self._caches:
@@ -809,6 +828,7 @@ class StripedVolume:
         if self._aio is not None:
             out["aio"] = self._aio.stats()
         out["admission"] = self.admission.stats()
+        out["per_shard_svc"] = self.metrics.per_node()
         out["wfq_vbytes"] = self.metrics.per_tenant("wfq_vbytes")
         if self._gate is not None:
             out["wfq"] = self._gate.stats()

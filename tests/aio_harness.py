@@ -333,3 +333,54 @@ def _version_of(objs: VersionedObjects, o: int, blocks) -> int:
         if first == objs.pattern(o, v)[0]:
             return v
     raise AssertionError("unknown version payload")
+
+
+# ---------------------------------------------------- cluster kill sweep
+def kill_node_on_nth_step(cluster, n: int) -> dict:
+    """Arm the cluster's ``step_hook`` to fail-stop the node involved in
+    pipeline step ``n`` — the cluster fires the hook immediately BEFORE
+    each transfer ("xfer"), durable member write ("write") and
+    acknowledgement ("ack") step, so sweeping n covers power loss at
+    every point of the replication pipeline.  The returned state's
+    ``fired`` records ``(step_no, phase, node_idx)`` once the kill
+    lands, or stays None when the schedule finished under step ``n``
+    (the sweep's termination signal)."""
+    state = {"fired": None}
+
+    def hook(step_no: int, phase: str, node_idx: int) -> None:
+        if step_no == n and state["fired"] is None:
+            state["fired"] = (step_no, phase, node_idx)
+            cluster.kill_node(node_idx)
+
+    cluster.step_hook = hook
+    return state
+
+
+def cluster_kill_sweep(make_cluster_fn, schedule_fn, check_fn, *,
+                       max_points: int = 2000) -> int:
+    """Property-sweep a cluster schedule over EVERY pipeline step: for
+    n = 1, 2, ... build a fresh cluster via ``make_cluster_fn()``, arm
+    :func:`kill_node_on_nth_step` at step ``n``, drive
+    ``schedule_fn(cluster)`` (which must absorb per-op ``ClusterError``
+    failures itself and remember what was acknowledged), then hand
+    ``check_fn(n, fired, cluster)`` the observation — fired is None on
+    the terminating kill-free run.  This is the distributed sibling of
+    :func:`crash_sweep`: "a node death ANYWHERE in the write pipeline
+    never loses an acknowledged write and never tears an object"
+    becomes a swept property."""
+    n = 1
+    while n <= max_points:
+        cl = make_cluster_fn()
+        state = kill_node_on_nth_step(cl, n)
+        try:
+            schedule_fn(cl)
+        finally:
+            cl.step_hook = None
+        try:
+            check_fn(n, state["fired"], cl)
+        finally:
+            cl.close()
+        if state["fired"] is None:
+            return n
+        n += 1
+    raise AssertionError(f"sweep did not terminate in {max_points} points")

@@ -48,5 +48,45 @@ def test_floor_gate_references_registered_tables():
     assert len(problems) == len(mod.FLOORS)
     assert mod.check({}, allow_missing=True) == []
     assert mod.check({t: {"speedup": 2.0} for t in mod.FLOORS}) == []
-    bad = mod.check({t: {"speedup": 0.8} for t in mod.FLOORS})
+    bad = mod.check({t: {"speedup": f * 0.5}
+                     for t, f in mod.FLOORS.items()})
     assert len(bad) == len(mod.FLOORS)
+
+
+def test_artifact_meta_gate():
+    """``run.py --json`` artifacts embed seed + registry fingerprint;
+    ``check_floors.check_meta`` must accept the CURRENT registry's own
+    meta, reject a stale fingerprint or a foreign seed, and tolerate
+    pre-provenance artifacts (no _meta) with a warning only."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_floors", os.path.join(ROOT, "benchmarks", "check_floors.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    spec_r = importlib.util.spec_from_file_location(
+        "benchrun", os.path.join(ROOT, "benchmarks", "run.py"))
+    bench_run = importlib.util.module_from_spec(spec_r)
+    spec_r.loader.exec_module(bench_run)
+    import sys
+    sys.modules["run"] = bench_run      # what check_meta imports
+    try:
+        current = bench_run.registry_version(
+            bench_run._registry(1, fast=True, smoke=True))
+        good = {"_meta": {"seed": bench_run.SEED,
+                          "registry_version": current, "mode": "smoke"}}
+        assert mod.check_meta(good) == []
+        stale = {"_meta": {"seed": bench_run.SEED,
+                           "registry_version": "deadbeef0000",
+                           "mode": "smoke"}}
+        assert len(mod.check_meta(stale)) == 1
+        foreign = {"_meta": {"seed": 7, "registry_version": current,
+                             "mode": "smoke"}}
+        assert len(mod.check_meta(foreign)) == 1
+        assert mod.check_meta({}) == []          # pre-provenance artifact
+    finally:
+        del sys.modules["run"]
+    # the fingerprint is over the table SET — order-insensitive, and
+    # any membership change moves it
+    v1 = bench_run.registry_version(["a", "b"])
+    assert v1 == bench_run.registry_version(["b", "a"])
+    assert v1 != bench_run.registry_version(["a", "b", "c"])
