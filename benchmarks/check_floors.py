@@ -20,13 +20,19 @@ import argparse
 import json
 import sys
 
-# table name in the results JSON -> minimum acceptable "speedup" value
+# table name in the results JSON -> minimum acceptable "speedup" value;
+# a dict value floors several keys of the same table at once
 FLOORS = {
     "volume_logbatch": 1.0,
     "volume_groupcommit": 1.0,
     # async frontend: qd8 dropping below qd1 means the submission/
     # completion split became a pessimization
     "volume_aio": 1.0,
+    # zero-copy data plane: registered-buffer pinning must beat
+    # copy-at-submit at qd=8, and the fused transit kernel must beat
+    # the three-pass composition — both contrasts are the tentpole's
+    # reason to exist, so losing either outright fails the gate
+    "volume_zerocopy": {"speedup": 1.2, "fused_speedup": 1.3},
     # cluster replication tax: pipelined K=2 at 4 nodes must keep
     # >= 0.6x of the single-node unreplicated ops/s (the acceptance bar
     # — pipelined >= 1.5x serial fanout — lives in the sim tests)
@@ -86,17 +92,19 @@ def check(results: dict, allow_missing: bool = False) -> list[str]:
                                 f"(benchmark registry drift?)")
             continue
         entry = results[table]
-        speedup = entry.get("speedup") if isinstance(entry, dict) else None
-        if speedup is None:
-            problems.append(f"{table}: no 'speedup' key in results")
-            continue
-        speedup = float(speedup)
-        status = "OK" if speedup >= floor else "FAIL"
-        print(f"[check_floors] {table}: speedup {speedup:.2f}x "
-              f"(floor {floor:.1f}x) {status}")
-        if speedup < floor:
-            problems.append(f"{table}: speedup {speedup:.2f}x is below the "
-                            f"{floor:.1f}x floor")
+        keyed = floor if isinstance(floor, dict) else {"speedup": floor}
+        for key, bar in keyed.items():
+            val = entry.get(key) if isinstance(entry, dict) else None
+            if val is None:
+                problems.append(f"{table}: no {key!r} key in results")
+                continue
+            val = float(val)
+            status = "OK" if val >= bar else "FAIL"
+            print(f"[check_floors] {table}: {key} {val:.2f}x "
+                  f"(floor {bar:.1f}x) {status}")
+            if val < bar:
+                problems.append(f"{table}: {key} {val:.2f}x is below the "
+                                f"{bar:.1f}x floor")
     return problems
 
 

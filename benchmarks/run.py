@@ -108,6 +108,9 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
         "volume_aio": ("async frontend queue-depth sweep, qd1 vs qd8+ "
                        "(sim)",
                        lambda: volume_bench.aio(n_ops=ops // 10)),
+        "volume_zerocopy": ("zero-copy data plane: pinned vs copy-at-"
+                            "submit, fused vs three-pass transit (sim)",
+                            lambda: volume_bench.zerocopy(n_ops=ops // 10)),
         "cluster": ("distributed cluster volume: pipelined chain "
                     "replication, placement, kill storm (sim)",
                     lambda: cluster_bench.run(n_ops=max(200, ops // 10))),
@@ -174,6 +177,11 @@ def main() -> None:
         "mode": mode,
         "base_ops": ops,
     }
+    # zero-copy data-plane counters from the real-engine row travel in
+    # _meta so artifact diffs surface pin-rate regressions at a glance
+    zc = results.get("volume_zerocopy", {}).get("engine")
+    if zc:
+        results["_meta"]["zerocopy_engine"] = zc
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)
     if args.json:

@@ -25,6 +25,11 @@ Extends the paper's single-device tables to the volume manager:
                      queue depth 1 (blocking-equivalent) vs 8+ — ops/s
                      speedup from submission batching + overlap
                      (acceptance: >= 1.5x at qd=8 with 4 tenants)
+  --table zerocopy   zero-copy data plane: copy-at-submit vs registered
+                     buffer pinning at qd 1/8, plus fused vs three-pass
+                     transit codec and a real-engine registered-pool row
+                     (acceptance: >= 1.2x zerocopy at qd=8, >= 1.3x
+                     fused transit)
 
 Primary engine: ``repro.core.sim.run_volume_sim_workload`` (deterministic
 virtual time; same cost model as fio_like.py, printed with every table).
@@ -315,6 +320,94 @@ def aio(n_ops: int = OPS) -> dict:
     return out
 
 
+def zerocopy(n_ops: int = OPS) -> dict:
+    """ACCEPTANCE (PR 7): the zero-copy data plane.
+
+      * registered buffers: at qd=8 with 4 tenants, pinned submission
+        (``copy_mode='zerocopy'``) must sustain >= 1.2x the ops/s of the
+        copying baseline (``'copy'``: every submit pays its defensive
+        staging snapshot under the engine lock, where
+        ``AsyncIOEngine._snapshot_locked`` runs it);
+      * fused transit kernel: the one-pass gather+quantize+checksum
+        spill codec must sustain >= 1.3x the pages/s of the three-pass
+        composition (pack kernel, host checksum walk, copy-out).
+
+    A real-engine row runs a small threaded volume with a registered
+    pool and reports the live counters (copies avoided / bytes pinned /
+    link depth) for ``_meta`` — wall time on the 1-core container is
+    informational; the floors gate the virtual-time contrast."""
+    from repro.core.sim import run_transit_sim_workload
+    print("# zero-copy sweep: 4 shards, 4 tenants, copy-at-submit vs "
+          "registered-buffer pinning (CI floors: qd8 zerocopy/copy >= "
+          "1.2x, fused transit >= 1.3x)")
+    out = {}
+    for qd in (1, 8):
+        row = {}
+        for mode in ("copy", "zerocopy"):
+            r = run_aio_sim_workload("caiti", n_shards=4, n_lbas=N_LBAS,
+                                     cache_slots=SLOTS, n_workers=WORKERS,
+                                     qdepth=qd, copy_mode=mode,
+                                     tenants=_tenants(4, n_ops))
+            row[mode] = {"ops_s": r["ops_s"], "agg_mb_s": r["agg_mb_s"]}
+            print(f"{'qd=' + str(qd) + ' ' + mode:16s} "
+                  f"ops/s={r['ops_s']:12.0f} agg={r['agg_mb_s']:9.1f} MB/s "
+                  f"makespan={r['makespan_us']:12.0f}us")
+        row["speedup"] = row["zerocopy"]["ops_s"] / row["copy"]["ops_s"]
+        print(f"  -> qd={qd}: zerocopy/copy = {row['speedup']:.2f}x")
+        out[f"qd{qd}"] = row
+    out["speedup"] = out["qd8"]["speedup"]
+
+    three = run_transit_sim_workload(n_pages=max(500, n_ops // 4),
+                                     fused=False)
+    fused = run_transit_sim_workload(n_pages=max(500, n_ops // 4),
+                                     fused=True)
+    out["transit"] = {
+        "three_pass_pages_s": three["pages_s"],
+        "fused_pages_s": fused["pages_s"],
+        "three_pass_mb_s": three["mb_s"],
+        "fused_mb_s": fused["mb_s"],
+    }
+    out["fused_speedup"] = fused["pages_s"] / three["pages_s"]
+    print(f"{'transit 3-pass':16s} pages/s={three['pages_s']:12.0f} "
+          f"({three['passes_per_page']} passes/page)")
+    print(f"{'transit fused':16s} pages/s={fused['pages_s']:12.0f} "
+          f"({fused['passes_per_page']} pass/page)")
+    print(f"  -> fused vs three-pass: {out['fused_speedup']:.2f}x")
+
+    # real engine: registered pool + linked chain counters (informational)
+    from repro.volume import make_volume
+    vol = make_volume("caiti", n_lbas=4096, n_shards=2,
+                      cache_bytes=4 << 20, aio_workers=2)
+    try:
+        reg = vol.register_buffers(16)
+        parents = []
+        for i in range(64):
+            buf = reg.acquire()
+            buf.data[:] = i & 0xFF
+            parents.append(vol.submit("write", i, data=buf, block=True))
+        links = [vol.submit("read", i, link_to=t, block=True,
+                            out=np.empty(vol.block_size, np.uint8))
+                 for i, t in enumerate(parents)]
+        for t in links:
+            t.result()
+        for t in parents:
+            vol.wait(t)
+        zc = vol.scrub()["zerocopy"]
+        out["engine"] = {k: zc[k] for k in
+                        ("copies_avoided", "bytes_pinned", "staging_copies",
+                         "links_submitted", "link_depth_max")}
+        out["engine"]["copy_on_evict"] = zc["registry"]["copy_on_evict"]
+        print(f"{'real engine':16s} copies_avoided={zc['copies_avoided']} "
+              f"bytes_pinned={zc['bytes_pinned']} "
+              f"staging_copies={zc['staging_copies']} "
+              f"copy_on_evict={zc['registry']['copy_on_evict']}")
+    finally:
+        vol.close()
+    print(f"-> zerocopy qd8: {out['speedup']:.2f}x (floor >= 1.2x); "
+          f"fused transit: {out['fused_speedup']:.2f}x (floor >= 1.3x)")
+    return out
+
+
 def real(n_ops: int = 2000) -> dict:
     """Threaded volume on the container (functional validation only)."""
     from repro.volume import make_volume
@@ -336,7 +429,7 @@ def real(n_ops: int = 2000) -> dict:
 TABLES = {"shards": shards, "tenants": tenants, "watermark": watermark,
           "qos": qos, "policies": policies, "readmix": readmix,
           "groupcommit": groupcommit, "logbatch": logbatch,
-          "fairness": fairness, "aio": aio}
+          "fairness": fairness, "aio": aio, "zerocopy": zerocopy}
 
 
 def main() -> None:

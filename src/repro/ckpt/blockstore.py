@@ -60,6 +60,14 @@ class BlockStore:
         # workers.  Outstanding put tickets are settled (checked for
         # per-ticket errors) before any dependent read or commit.
         self._aio = bool(aio and hasattr(device, "submit"))
+        # registered buffer pool (zero-copy puts): chunks serialize
+        # straight into pre-pinned engine buffers — the engine takes the
+        # handle without a defensive staging snapshot and releases the
+        # slot from the completion path
+        self._registry = (device.register_buffers(64)
+                          if self._aio and hasattr(device,
+                                                   "register_buffers")
+                          else None)
         self._pending: list = []
         self._unsettled_keys: set[str] = set()
         self.generation = 0
@@ -141,12 +149,28 @@ class BlockStore:
         # already invisible until commit() flips the root, so the volume's
         # redo journal would only double the write volume here
         for i in range(n_blocks):
-            chunk = bytes(mv[i * bs:(i + 1) * bs])
+            part = mv[i * bs:(i + 1) * bs]
+            if self._aio and self._registry is not None:
+                # zero-copy put: serialize the chunk straight into a
+                # registered buffer — the one unavoidable copy (payload
+                # -> wire) lands in the pinned slot, and the engine takes
+                # the handle without a second staging snapshot
+                buf = self._registry.acquire()
+                arr = buf.data
+                n = len(part)
+                arr[:n] = np.frombuffer(part, dtype=np.uint8)
+                if n < bs:
+                    arr[n:] = 0
+                # block=True: the engine's in-flight window is the flow
+                # control — a put burst waits its turn, never fails
+                self._pending.append(self.dev.submit("write", lba + i,
+                                                     data=buf,
+                                                     block=True))
+                continue
+            chunk = bytes(part)
             if len(chunk) < bs:
                 chunk = chunk + b"\x00" * (bs - len(chunk))
             if self._aio:
-                # block=True: the engine's in-flight window is the flow
-                # control — a put burst waits its turn, never fails
                 self._pending.append(self.dev.submit("write", lba + i,
                                                      data=chunk,
                                                      block=True))
@@ -160,22 +184,27 @@ class BlockStore:
         lba, n_blocks, nbytes = self.directory[key]
         out = np.empty(n_blocks * self.block_size, dtype=np.uint8)
         if self._aio:
-            # overlapped restore: fan the block reads out across the
-            # engine workers (a sliding window honoring the in-flight
-            # bound), then gather in order
+            # overlapped ZERO-COPY restore: fan the block reads out
+            # across the engine workers (a sliding window honoring the
+            # in-flight bound), each landing directly in its slice of
+            # the destination array (``out=`` — no post-poll copy out
+            # of the completion ring), then settle in order
             self._settle_pending()   # reads must see completed puts
+            bs = self.block_size
             tickets: dict[int, object] = {}
             next_sub = 0
 
             def pump(need: int = -1) -> None:
                 nonlocal next_sub
                 while next_sub < n_blocks:
+                    dst = out[next_sub * bs:(next_sub + 1) * bs]
                     if next_sub <= need:
                         t = self.dev.submit("read", lba + next_sub,
-                                            block=True)
+                                            out=dst, block=True)
                     else:
                         # probe, don't count refusals as failures
-                        t = self.dev.try_submit("read", lba + next_sub)
+                        t = self.dev.try_submit("read", lba + next_sub,
+                                                out=dst)
                         if t is None:
                             return       # window full: gather first
                     tickets[next_sub] = t
@@ -193,9 +222,7 @@ class BlockStore:
                 if t.error is not None:
                     err = err or t.error
                     continue
-                out[i * self.block_size:(i + 1) * self.block_size] = \
-                    t.value
-                if err is None:
+                if err is None:          # data already landed in out=
                     pump()
             if err is not None:
                 raise err
@@ -241,6 +268,52 @@ class BlockStore:
         # 1. settle in-flight async puts, then drain the transit cache +
         #    BTT (all data durable first)
         self._settle_pending()
+        if self._aio and chained:
+            # linked-SQE commit: the whole fsync -> publish -> fsync
+            # protocol is ONE ticket chain, waited once on the tail —
+            # the dependencies execute in-engine instead of costing a
+            # poll round trip per hop, and a failed stage CANCELS the
+            # stages behind it (a failed data barrier can never be
+            # followed by the atomic publish)
+            t1 = self.dev.submit("fsync", block=True)
+            t2 = self.dev.submit("write_multi", 0, blocks=[root] + chunks,
+                                 link_to=t1, block=True)
+            t3 = self.dev.submit("fsync", link_to=t2, block=True)
+            self.dev.wait(t3)
+            for t in (t1, t2, t3):       # settle + surface the ROOT cause
+                self.dev.wait(t)
+                if t.error is not None:
+                    raise t.error
+            self.generation = gen
+            self._active_mlba = mlba
+            return gen
+        if self._aio:
+            # ping-pong commit over the async frontend: data barrier ->
+            # parallel manifest writes (linked to the barrier, so a
+            # failed barrier cancels them) -> one settle point -> linked
+            # root-flip chain.  Two waits total; the settle before the
+            # flip mirrors the sync path's abort-before-root guarantee
+            # (a torn manifest must never be published).
+            head = self.dev.submit("fsync", block=True)
+            writes = [self.dev.submit("write", mlba + i, data=chunk,
+                                      link_to=head, block=True)
+                      for i, chunk in enumerate(chunks)]
+            barrier = self.dev.submit("fsync", block=True)  # IO_DRAIN
+            self.dev.wait(barrier)
+            for t in (head, *writes, barrier):
+                self.dev.wait(t)
+                if t.error is not None:
+                    raise t.error
+            troot = self.dev.submit("write", 0, data=root, block=True)
+            tfin = self.dev.submit("fsync", link_to=troot, block=True)
+            self.dev.wait(tfin)
+            for t in (troot, tfin):
+                self.dev.wait(t)
+                if t.error is not None:
+                    raise t.error
+            self.generation = gen
+            self._active_mlba = mlba
+            return gen
         self.dev.fsync()
         if chained:
             # 2. ONE whole-object-atomic logical write: root + manifest.

@@ -295,15 +295,25 @@ class ClusterVolume:
         return self._aio
 
     def submit(self, op: str, lba: int = 0, data=None, blocks=None,
-               tenant: str | None = None, block: bool = False):
+               tenant: str | None = None, block: bool = False,
+               link_to=None, out=None):
         return self.aio_engine().submit(op, lba=lba, data=data,
                                         blocks=blocks, tenant=tenant,
-                                        block=block)
+                                        block=block, link_to=link_to,
+                                        out=out)
 
     def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
-                   tenant: str | None = None):
+                   tenant: str | None = None, link_to=None, out=None):
         return self.aio_engine().try_submit(op, lba=lba, data=data,
-                                            blocks=blocks, tenant=tenant)
+                                            blocks=blocks, tenant=tenant,
+                                            link_to=link_to, out=out)
+
+    def register_buffers(self, n_buffers: int,
+                         buf_bytes: int | None = None):
+        """Registered zero-copy buffer pool on the cluster's engine
+        (same contract as ``StripedVolume.register_buffers``)."""
+        return self.aio_engine().register_buffers(
+            n_buffers, self.block_size if buf_bytes is None else buf_bytes)
 
     def poll(self, max_ops: int | None = None) -> list:
         if self._aio is None:

@@ -95,6 +95,36 @@ COMMIT_COUNTERS = (
     "log_batch_coalesced",
 )
 
+# Zero-copy data plane counters (PR 7) — bumped by the async engine's
+# registered-buffer pool / linked-SQE machinery and by the fused transit
+# kernel's callers; ``zerocopy_path()`` summarizes them:
+#   copies_avoided       — submits that pinned a registered buffer (or
+#                          landed a read directly in one) instead of
+#                          taking a staging snapshot
+#   bytes_pinned         — payload bytes that crossed the engine pinned
+#   staging_copies       — defensive snapshots (unregistered mutable
+#                          payloads + copy-on-evict steals)
+#   staging_copy_bytes   — bytes those snapshots copied
+#   links_submitted      — linked-SQE tickets (chained to a parent)
+#   link_cancelled       — dependents failed with ECANCELED by a parent
+#   link_depth_max       — deepest chain seen
+#   fused_kernel_passes  — fused transit-kernel launches (one VMEM pass
+#                          doing gather/scatter + int8 codec + checksum)
+#   fused_kernel_bytes   — packed payload bytes those passes moved
+#   transit_crc_errors   — restore checksums that failed verification
+ZEROCOPY_COUNTERS = (
+    "copies_avoided",
+    "bytes_pinned",
+    "staging_copies",
+    "staging_copy_bytes",
+    "links_submitted",
+    "link_cancelled",
+    "link_depth_max",
+    "fused_kernel_passes",
+    "fused_kernel_bytes",
+    "transit_crc_errors",
+)
+
 
 #: EWMA smoothing for :meth:`Metrics.observe` — ~the last 10-ish
 #: observations dominate, so a shard/node turning slow moves its average
@@ -193,6 +223,16 @@ class Metrics:
         chains = out["log_batches"] + out["log_batch_coalesced"]
         out["log_coalesce_rate"] = (out["log_batch_coalesced"] / chains
                                     if chains else 0.0)
+        return out
+
+    def zerocopy_path(self) -> dict[str, float]:
+        """Zero-copy data-plane summary: pin/snapshot/link/fused-kernel
+        counters plus ``pin_rate`` — the fraction of payload-carrying
+        submits that crossed the engine without a copy."""
+        with self._lock:
+            out = {c: self.count.get(c, 0) for c in ZEROCOPY_COUNTERS}
+        moved = out["copies_avoided"] + out["staging_copies"]
+        out["pin_rate"] = out["copies_avoided"] / moved if moved else 0.0
         return out
 
     def per_tenant(self, prefix: str) -> dict[str, int]:

@@ -1201,6 +1201,7 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
                          stripe_blocks: int = 64, op: str = "write",
                          log_blocks: int = 4, read_frac: float = 0.0,
                          watermark: float = 1.0, seed: int = 0,
+                         copy_mode: str | None = None,
                          cost: CostModel | None = None) -> dict:
     """Closed-loop async-frontend workload against a striped volume:
     the queue-depth contrast for ``benchmarks/volume_bench.py --table
@@ -1225,6 +1226,21 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
     submits ``log_blocks``-block chained-tx logged writes (journal pass
     + staging); ``read_frac`` mixes in reads.  Deterministic in virtual
     time, same cost model as every other table.
+
+    ``copy_mode`` (PR 7, the zero-copy contrast; ``None`` keeps the
+    legacy neutral submission cost so earlier tables are unchanged):
+
+      * ``'copy'`` — every payload-carrying submit pays the defensive
+        staging snapshot (``dram_copy_4k + meta`` per block: allocate +
+        memcpy) UNDER THE ENGINE LOCK, exactly where
+        ``AsyncIOEngine._snapshot_locked`` runs it.  The ring lock is a
+        single serial server, so at high queue depth the snapshots
+        serialize across every tenant and become the frontend
+        bottleneck — the copy tax submission batching cannot amortize;
+      * ``'zerocopy'`` — registered-buffer pinning: the submit pays one
+        ``meta`` slot-bookkeeping charge under the same lock (pin the
+        buffer to the ticket) and the payload crosses the engine by
+        reference.
     """
     cost = cost or CostModel()
     nt = len(tenants)
@@ -1243,6 +1259,16 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
                for n, rf in zip(n_ops, rfracs)]
     bs = 4096.0
     stack = cost.bio_stack / max(1, min(qdepth, 16))
+    assert copy_mode in (None, "copy", "zerocopy"), copy_mode
+    blocks_per = log_blocks if op == "log" else 1
+    if copy_mode == "copy":
+        # allocate + memcpy per block, under the engine lock
+        xfer = (cost.dram_copy_4k + cost.meta) * blocks_per
+    elif copy_mode == "zerocopy":
+        xfer = cost.meta                           # pin bookkeeping only
+    else:
+        xfer = 0.0
+    ring_lock = Bank()               # the engine lock: one serial server
 
     heads = [0] * nt
     core_free = [0.0] * nt           # submitting core (busy per submit)
@@ -1267,6 +1293,8 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         heads[j] += 1
         arrive = inflight[j][k - qdepth] if k >= qdepth else 0.0
         t_sub = best_start + stack   # submission cost on the core
+        if xfer:                     # snapshot/pin under the engine lock
+            t_sub = ring_lock.serve(t_sub, xfer)
         core_free[j] = t_sub         # ... and the core is free again
         lba = int(lbas[j][k])
         if is_read[j] is not None and is_read[j][k]:
@@ -1283,6 +1311,10 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
     t_done = max(t_done, vol.flush(t_done, sync=True))   # exit fsync
     counts = vol.counts()
     counts["makespan_us"] = int(t_done)
+    if copy_mode == "copy":
+        counts["staging_copies"] = sum(n_ops)
+    elif copy_mode == "zerocopy":
+        counts["copies_avoided"] = sum(n_ops)
     total_ops = sum(n_ops)
     blocks_per_op = log_blocks if op == "log" else 1
     per_tenant = {}
@@ -1303,6 +1335,55 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         "agg_mb_s": total_ops * blocks_per_op * bs / max(t_done, 1e-9),
         "counts": counts,
         "per_tenant": per_tenant,
+    }
+
+
+def run_transit_sim_workload(*, n_pages: int, page_kb: int = 16,
+                             fused: bool = True, n_cores: int = 2,
+                             cost: CostModel | None = None) -> dict:
+    """Virtual-time model of the KV spill codec (the fused-transit
+    contrast for ``benchmarks/volume_bench.py --table zerocopy``).
+
+    Each page transits HBM -> host tier.  The THREE-PASS baseline walks
+    the page once per stage, exactly like the pre-fusion code path:
+
+      1. gather+quantize kernel pass   (``dram_copy_4k`` per 4 KB),
+      2. host checksum walk over the packed bytes (1/4 size, int8),
+      3. copy-out pass staging the payload for the eviction DMA.
+
+    The FUSED path (``gather_quantize_crc``) does pack + checksum +
+    copy-out in ONE traversal while the page is in VMEM.  Both variants
+    then pay the same eviction-pool DMA (``pmem_write_4k`` on the
+    interleaved banks, 1/4 size — int8) — fusion removes memory passes,
+    not media time.  Codec passes run on ``n_cores`` eviction cores
+    (earliest-free dispatch, same as the aio frontend)."""
+    cost = cost or CostModel()
+    media = Media(cost)
+    cores = [Bank() for _ in range(max(1, n_cores))]
+    per4k = page_kb / 4.0
+    pass_us = cost.dram_copy_4k * per4k          # one full-page traversal
+    packed4k = per4k / 4.0                       # int8 payload, 1/4 size
+    if fused:
+        codec_us = pass_us + cost.meta           # one pass + crc fold
+        passes = 1
+    else:
+        # pack pass + checksum walk (packed size) + copy-out pass
+        codec_us = pass_us + cost.dram_copy_4k * packed4k + pass_us
+        passes = 3
+    t_done = 0.0
+    for _ in range(n_pages):
+        core = min(cores, key=lambda b: b.free_at)
+        t_codec = core.serve(core.free_at, codec_us)
+        t_done = max(t_done, media.write(t_codec,
+                                         cost.pmem_write_4k * packed4k))
+    return {
+        "fused": fused,
+        "n_pages": n_pages,
+        "page_kb": page_kb,
+        "passes_per_page": passes,
+        "makespan_us": t_done,
+        "pages_s": n_pages / max(t_done / 1e6, 1e-9),
+        "mb_s": n_pages * page_kb / 1024.0 / max(t_done / 1e6, 1e-9),
     }
 
 

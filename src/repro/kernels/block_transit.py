@@ -14,6 +14,17 @@ Both resolve the page indirection *inside* the kernel (BTT-style mapping
 walk) so no (n, page, ...) intermediate ever exists in HBM at full
 precision.  Grid = one program per transited page; the pool argument stays
 in ANY/HBM; only the active page flows through VMEM.
+
+The ``*_crc`` variants FUSE the transit checksum into the same VMEM
+traversal as the int8 pack: the spill/restore paths previously made
+three passes per page (quantize kernel, host checksum over the packed
+bytes, scatter kernel) — the fused pass computes the page checksum over
+the exact wire payload (the int8 bytes, row-major) while it is already
+resident in VMEM, so the data is touched ONCE per direction.  The
+checksum is Adler-32 (zlib's second checksum): unlike CRC32's bitwise
+recurrence it reduces to two modular sums, which vectorize on the VPU
+in one pass, and ``zlib.adler32`` is the host-side oracle
+(``ref.transit_crc_ref`` — bit-identical, property-tested).
 """
 from __future__ import annotations
 
@@ -61,6 +72,79 @@ def gather_quantize_pallas(pool, page_ids, *, interpret: bool = False,
     )(page_ids, pool)
 
 
+_ADLER_MOD = 65521
+
+
+def _page_adler32(q):
+    """Adler-32 of one page's int8 payload, inside the kernel: q is
+    (page_sz, F) int8, already in VMEM from the pack/unpack — the
+    checksum rides the same traversal.  Bit-identical to
+    ``zlib.adler32(q.tobytes())`` (row-major two's-complement bytes).
+
+    The bitwise-sequential CRC recurrence does not vectorize; Adler-32
+    is two modular sums, so it reduces on the VPU: S1 = 1 + sum(d),
+    S2 = n + sum((n - i) * d_i), checksum = S2 << 16 | S1.  int32 is
+    safe up to page_sz, F <= 32767: per-term (n - i) % M * d <= 65520 *
+    255 < 2^31, per-row sums of mod-reduced terms <= F * 65520, and the
+    cross-row sum of mod-reduced rows <= page_sz * 65520."""
+    d = jax.lax.bitcast_convert_type(q, jnp.uint8).astype(jnp.int32)
+    page_sz, F = d.shape
+    n = page_sz * F
+    r = jax.lax.broadcasted_iota(jnp.int32, (page_sz, F), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (page_sz, F), 1)
+    w = (n - (r * F + c)) % _ADLER_MOD
+    t = (w * d) % _ADLER_MOD
+    s2 = (jnp.sum(jnp.sum(t, axis=1) % _ADLER_MOD) + n) % _ADLER_MOD
+    s1 = (1 + jnp.sum(jnp.sum(d, axis=1) % _ADLER_MOD)) % _ADLER_MOD
+    return (s2.astype(jnp.uint32) << 16) | s1.astype(jnp.uint32)
+
+
+def _gather_q_crc_kernel(idx_ref, pool_ref, out_ref, scale_ref, crc_ref,
+                         *, eps: float):
+    """Fused spill pass: gather + int8 pack + wire checksum, one VMEM
+    traversal per page (vs the three-pass quantize / host-checksum /
+    copy-out composition)."""
+    page = idx_ref[0]
+    x = pl.load(pool_ref, (page, slice(None), slice(None))
+                ).astype(jnp.float32)                       # (page_sz, F)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)      # (page_sz, 1)
+    scale = amax / 127.0 + eps
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    out_ref[...] = q
+    scale_ref[...] = scale[:, 0].astype(jnp.float32)
+    crc_ref[...] = _page_adler32(q).reshape((1,))
+
+
+def gather_quantize_crc_pallas(pool, page_ids, *, interpret: bool = False,
+                               eps: float = 1e-12):
+    """Fused gather+quantize+checksum: pool (P, page_sz, F); page_ids
+    (n,) int32 -> (q (n, page_sz, F) int8, scales (n, page_sz) f32,
+    crcs (n,) uint32) — crcs are Adler-32 of each page's packed int8
+    bytes (the DMA wire payload), checked on page-in/restore."""
+    P, page_sz, F = pool.shape
+    n = page_ids.shape[0]
+    q, scales, crcs = pl.pallas_call(
+        functools.partial(_gather_q_crc_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),              # pool in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((None, page_sz, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, page_sz), lambda i: (i, 0)),
+            pl.BlockSpec((None, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, page_sz, F), jnp.int8),
+            jax.ShapeDtypeStruct((n, page_sz), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(page_ids, pool)
+    return q, scales, crcs[:, 0]
+
+
 def _scatter_dq_kernel(idx_ref, q_ref, scale_ref, pool_in_ref, pool_out_ref,
                        *, dtype):
     # pool_in is aliased to pool_out (same HBM buffer): untouched pages keep
@@ -92,3 +176,46 @@ def scatter_dequantize_pallas(pool, page_ids, q, scales, *,
         input_output_aliases={3: 0},
         interpret=interpret,
     )(page_ids, q, scales, pool)
+
+
+def _scatter_dq_crc_kernel(idx_ref, q_ref, scale_ref, pool_in_ref,
+                           pool_out_ref, crc_ref, *, dtype):
+    # restore pass: the incoming int8 payload is checksummed WHILE it is
+    # in VMEM for the dequantize — the caller compares against the crc
+    # stored at spill time (a mismatch means the page tore in transit)
+    page = idx_ref[0]
+    q = q_ref[...]
+    x = q.astype(jnp.float32) * scale_ref[...][:, None]
+    pl.store(pool_out_ref, (page, slice(None), slice(None)), x.astype(dtype))
+    crc_ref[...] = _page_adler32(q).reshape((1,))
+
+
+def scatter_dequantize_crc_pallas(pool, page_ids, q, scales, *,
+                                  interpret: bool = False):
+    """Fused scatter+dequantize+checksum: the inverse transit pass.
+    Returns ``(pool, crcs)`` — crcs are Adler-32 of the int8 payload as
+    RECEIVED; the caller verifies them against the spill-time values
+    (one pass over the data, no separate host checksum walk)."""
+    P, page_sz, F = pool.shape
+    n = page_ids.shape[0]
+    new_pool, crcs = pl.pallas_call(
+        functools.partial(_scatter_dq_crc_kernel, dtype=pool.dtype),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((None, page_sz, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, page_sz), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),      # aliased pool in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((None, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, page_sz, F), pool.dtype),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+        ],
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(page_ids, q, scales, pool)
+    return new_pool, crcs[:, 0]

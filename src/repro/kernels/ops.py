@@ -13,7 +13,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .block_transit import gather_quantize_pallas, scatter_dequantize_pallas
+from .block_transit import (gather_quantize_crc_pallas,
+                            gather_quantize_pallas,
+                            scatter_dequantize_crc_pallas,
+                            scatter_dequantize_pallas)
 from .flash_attention import flash_attention_pallas
 from .paged_attention import paged_attention_pallas
 
@@ -68,3 +71,20 @@ def gather_quantize(pool, page_ids):
 def scatter_dequantize(pool, page_ids, q, scales):
     return scatter_dequantize_pallas(pool, page_ids, q, scales,
                                      interpret=not _on_tpu())
+
+
+@jax.jit
+def gather_quantize_crc(pool, page_ids):
+    """Fused spill codec: one VMEM pass per page producing the int8
+    payload, the f32 scales, AND the Adler-32 wire checksum (vs the
+    three-pass quantize / host-checksum / copy composition)."""
+    return gather_quantize_crc_pallas(pool, page_ids,
+                                      interpret=not _on_tpu())
+
+
+@jax.jit
+def scatter_dequantize_crc(pool, page_ids, q, scales):
+    """Fused restore codec: dequantize+scatter plus the checksum of the
+    payload as received, for the caller to verify against spill time."""
+    return scatter_dequantize_crc_pallas(pool, page_ids, q, scales,
+                                         interpret=not _on_tpu())

@@ -66,3 +66,21 @@ def gather_quantize_ref(pool, page_ids, eps: float = 1e-12):
 def scatter_dequantize_ref(pool, page_ids, q, scales):
     x = q.astype(jnp.float32) * scales[..., None]
     return pool.at[page_ids].set(x.astype(pool.dtype))
+
+
+def transit_crc_ref(q):
+    """Host oracle for the fused transit checksum: per-page Adler-32 of
+    the packed int8 payload (row-major two's-complement bytes).  Exact
+    int64 numpy math — bit-identical to ``zlib.adler32(page.tobytes())``
+    and to the in-kernel ``_page_adler32``.  q: (n, page, F) int8 ->
+    (n,) uint32."""
+    import numpy as np
+    mod = 65521
+    qn = np.asarray(q, dtype=np.int8)
+    n_pages = qn.shape[0]
+    d = qn.view(np.uint8).astype(np.int64).reshape(n_pages, -1)
+    n = d.shape[1]
+    w = np.arange(n, 0, -1, dtype=np.int64)          # weight n - i
+    s2 = (d @ w + n) % mod
+    s1 = (1 + d.sum(axis=1)) % mod
+    return ((s2 << 16) | s1).astype(np.uint32)

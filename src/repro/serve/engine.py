@@ -251,17 +251,23 @@ class AsyncRequestLog:
         self.logged += 1
 
     def drain(self) -> int:
-        """Settle in-flight appends + one async fsync barrier; returns
-        how many records have failed since the previous drain (all
-        failures stay collected in ``errors``)."""
+        """One async fsync barrier + post-barrier error collection;
+        returns how many records have failed since the previous drain
+        (all failures stay collected in ``errors``).
+
+        The barrier is submitted FIRST: IO_DRAIN gates it on every
+        in-flight append in-engine, so the drain pays ONE wait round
+        trip instead of one per record — by the time the barrier
+        completes, every append ticket is already settled and error
+        collection is a ring sweep, not a sequence of waits."""
         reported = len(self.errors)
+        sync = self.vol.submit("fsync", block=True)
+        self.vol.wait(sync)
         tickets, self._tickets = self._tickets, []
-        for lba, t in tickets:
+        for lba, t in tickets:           # already DONE: consume + collect
             self.vol.wait(t)
             if t.error is not None:
                 self.errors.append((lba, t.error))
-        sync = self.vol.submit("fsync", block=True)
-        self.vol.wait(sync)
         if sync.error is not None:
             raise sync.error
         return len(self.errors) - reported

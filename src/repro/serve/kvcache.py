@@ -31,6 +31,7 @@ the interpret-mode kernel (or the jnp ref) does the same resolution.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 
 import jax
@@ -39,8 +40,8 @@ import numpy as np
 
 from repro.core.metrics import Metrics
 from repro.kernels import ref as kref
-from repro.kernels.ops import gather_quantize, paged_attention, \
-    scatter_dequantize
+from repro.kernels.ops import (gather_quantize_crc, paged_attention,
+                               scatter_dequantize_crc)
 from repro.volume.read_tier import ReadTier
 
 
@@ -60,16 +61,19 @@ class PagedCacheConfig:
 
 
 class HostTier:
-    """The slow tier: int8-packed pages + scales, keyed (layer, handle)."""
+    """The slow tier: int8-packed pages + scales + the wire checksum the
+    fused transit kernel computed at spill time, keyed (layer, handle)."""
 
     def __init__(self) -> None:
-        self.pages: dict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = {}
+        self.pages: dict[tuple[int, int],
+                         tuple[np.ndarray, np.ndarray, int]] = {}
         self._next = 0
 
-    def put(self, layer: int, q: np.ndarray, scale: np.ndarray) -> int:
+    def put(self, layer: int, q: np.ndarray, scale: np.ndarray,
+            crc: int = 0) -> int:
         h = self._next
         self._next += 1
-        self.pages[(layer, h)] = (q, scale)
+        self.pages[(layer, h)] = (q, scale, crc)
         return h
 
     def get(self, layer: int, handle: int):
@@ -95,9 +99,21 @@ class PagedKVCache:
     """Host-side manager + on-device pools for one model's KV state."""
 
     def __init__(self, cfg: PagedCacheConfig,
-                 metrics: Metrics | None = None) -> None:
+                 metrics: Metrics | None = None,
+                 evict_pool=None) -> None:
         self.cfg = cfg
         self.metrics = metrics or Metrics()
+        # optional SharedEvictionPool: eager page-out DMA runs on the
+        # volume's eviction cores instead of the decode thread (the
+        # paper's per-device eviction threads, shared).  jnp pools are
+        # immutable so workers gather from a consistent snapshot; table /
+        # free-list / host-tier mutations serialize on _tlock.
+        self._tlock = threading.Lock()
+        self._evict_cv = threading.Condition(self._tlock)
+        self._evict_pool = evict_pool
+        self._inflight_evictions = 0
+        if evict_pool is not None:
+            evict_pool.register(self)
         L, P, pg, H, hd = (cfg.n_layers, cfg.n_pages, cfg.page_size,
                           cfg.n_kv_heads, cfg.head_dim)
         self.k_pool = [jnp.zeros((P, pg, H, hd), cfg.dtype) for _ in range(L)]
@@ -185,7 +201,10 @@ class PagedKVCache:
 
     # ----------------------------------------------------------- transit ops
     def _page_out(self, seq: Sequence, logical: int) -> None:
-        """Transit one HBM page to the host tier (int8-packed)."""
+        """Transit one HBM page to the host tier via the FUSED kernel:
+        gather + int8 pack + wire checksum in one VMEM pass (the old
+        path quantized, then walked the packed bytes again on the host
+        for the checksum)."""
         kind, page = seq.table[logical]
         assert kind == "hbm"
         handles = []
@@ -195,10 +214,14 @@ class PagedKVCache:
                                              self.cfg.page_size, -1)
             pool_v = self.v_pool[li].reshape(self.cfg.n_pages,
                                              self.cfg.page_size, -1)
-            qk, sk = gather_quantize(pool_k, ids)
-            qv, sv = gather_quantize(pool_v, ids)
-            hk = self.host.put(li, np.asarray(qk[0]), np.asarray(sk[0]))
-            hv = self.host.put(li, np.asarray(qv[0]), np.asarray(sv[0]))
+            qk, sk, ck = gather_quantize_crc(pool_k, ids)
+            qv, sv, cv = gather_quantize_crc(pool_v, ids)
+            hk = self.host.put(li, np.asarray(qk[0]), np.asarray(sk[0]),
+                               int(ck[0]))
+            hv = self.host.put(li, np.asarray(qv[0]), np.asarray(sv[0]),
+                               int(cv[0]))
+            self.metrics.bump("fused_kernel_passes", 2)
+            self.metrics.bump("fused_kernel_bytes", qk.nbytes + qv.nbytes)
             handles.append((hk, hv))
         seq.table[logical] = ("host", handles)
         self._free.append(page)
@@ -216,14 +239,24 @@ class PagedKVCache:
             for li, (hk, hv) in enumerate(payload):
                 if self.read_tier is not None:
                     self.read_tier.invalidate(("page", li, hk, hv))
-                qk, sk = self.host.pop(li, hk)
-                qv, sv = self.host.pop(li, hv)
+                qk, sk, ck = self.host.pop(li, hk)
+                qv, sv, cv = self.host.pop(li, hv)
                 pool_k = self.k_pool[li].reshape(self.cfg.n_pages, pg, -1)
                 pool_v = self.v_pool[li].reshape(self.cfg.n_pages, pg, -1)
-                pool_k = scatter_dequantize(pool_k, ids, jnp.asarray(qk)[None],
-                                            jnp.asarray(sk)[None])
-                pool_v = scatter_dequantize(pool_v, ids, jnp.asarray(qv)[None],
-                                            jnp.asarray(sv)[None])
+                # fused restore: dequantize+scatter AND checksum the int8
+                # payload as received, in the same pass — verified against
+                # the spill-time value before the page goes live
+                pool_k, rck = scatter_dequantize_crc(
+                    pool_k, ids, jnp.asarray(qk)[None], jnp.asarray(sk)[None])
+                pool_v, rcv = scatter_dequantize_crc(
+                    pool_v, ids, jnp.asarray(qv)[None], jnp.asarray(sv)[None])
+                self.metrics.bump("fused_kernel_passes", 2)
+                self.metrics.bump("fused_kernel_bytes", qk.nbytes + qv.nbytes)
+                if int(rck[0]) != ck or int(rcv[0]) != cv:
+                    self.metrics.bump("transit_crc_errors")
+                    raise IOError(
+                        f"KV transit checksum mismatch: layer {li} page "
+                        f"{logical} of seq {seq.seq_id} tore in transit")
                 self.k_pool[li] = pool_k.reshape(self.cfg.n_pages, pg, H, hd)
                 self.v_pool[li] = pool_v.reshape(self.cfg.n_pages, pg, H, hd)
         else:                                            # host-fresh (raw f32)
@@ -237,18 +270,69 @@ class PagedKVCache:
         return True
 
     def deactivate(self, sid: int) -> None:
-        """Sequence paused/finished: eagerly transit its pages out."""
+        """Sequence paused/finished: eagerly transit its pages out.
+
+        With an eviction pool attached, the page-out DMA (fused
+        gather+quantize+checksum) is submitted to the volume's shared
+        eviction cores instead of running on the decode thread."""
         seq = self.seqs[sid]
         seq.active = False
-        if self.cfg.eager_eviction:
-            for li, entry in enumerate(seq.table):
-                if entry[0] == "hbm":
-                    self._page_out(seq, li)
+        if not self.cfg.eager_eviction:
+            return
+        if self._evict_pool is not None:
+            items = []
+            with self._evict_cv:
+                for li, entry in enumerate(seq.table):
+                    if entry[0] == "hbm":
+                        self._inflight_evictions += 1
+                        items.append((seq, li))
+            for it in items:
+                self._evict_pool.submit(self, it)
+            return
+        for li, entry in enumerate(seq.table):
+            if entry[0] == "hbm":
+                self._page_out(seq, li)
+
+    # eviction-pool participant hooks (same contract as CaitiCache)
+    def _evict_slot(self, item) -> None:
+        seq, li = item
+        with self._tlock:
+            # a re-activated sequence cancels its pending page-outs
+            if seq.active or seq.table[li][0] != "hbm":
+                self.metrics.bump("evict_skipped")
+                return
+            self._page_out(seq, li)
+
+    def _evict_slots(self, items) -> None:
+        """Batch drain hook: the pool hands several queued page-outs at
+        once; one lock acquisition covers the whole batch."""
+        self.metrics.bump("evict_batches")
+        with self._tlock:
+            for seq, li in items:
+                if seq.active or seq.table[li][0] != "hbm":
+                    self.metrics.bump("evict_skipped")
+                    continue
+                self._page_out(seq, li)
+
+    def _complete_eviction(self) -> None:
+        with self._evict_cv:
+            self._inflight_evictions -= 1
+            self._evict_cv.notify_all()
+
+    def drain_evictions(self, timeout: float = 10.0) -> None:
+        """Barrier: wait until every submitted page-out has run (the
+        pool-side analogue of ``barrier()``/PREFLUSH)."""
+        with self._evict_cv:
+            self._evict_cv.wait_for(
+                lambda: self._inflight_evictions == 0, timeout=timeout)
 
     def activate(self, sid: int) -> None:
         """Resume a sequence: page everything back in (may bypass)."""
+        if self._evict_pool is not None:
+            self.drain_evictions()
         seq = self.seqs[sid]
-        seq.active = True
+        with self._tlock:
+            seq.active = True
         for li, entry in enumerate(seq.table):
             if entry[0] in ("host", "host-fresh"):
                 if not self._page_in(seq, li):
@@ -295,8 +379,8 @@ class PagedKVCache:
                 cached = self.read_tier.lookup(("page", layer, hk, hv))
                 if cached is not None:
                     return cached
-            qk, sk = self.host.get(layer, hk)
-            qv, sv = self.host.get(layer, hv)
+            qk, sk, _ck = self.host.get(layer, hk)
+            qv, sv, _cv = self.host.get(layer, hv)
             k = (qk.astype(np.float32) * sk[:, None]).reshape(pg, H, hd)
             v = (qv.astype(np.float32) * sv[:, None]).reshape(pg, H, hd)
             if self.read_tier is not None:

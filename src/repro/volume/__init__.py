@@ -27,7 +27,10 @@ Generalizes the paper's single-device Caiti mechanism to a logical volume:
                              frontend (``StripedVolume.submit/poll``):
                              per-tenant SQs, shared completion ring,
                              bounded in-flight backpressure, per-ticket
-                             failure isolation
+                             failure isolation, IO_LINK ticket chains
+    BufferRegistry         — registered zero-copy buffer pool: pinned
+                             payloads instead of staging copies, with
+                             copy-on-evict when a slot is reused early
 
 The read path (layered, new in PR 2)
 ------------------------------------
@@ -53,7 +56,8 @@ conditional bypass under pressure); they only *invalidate* tier entries,
 so crash atomicity (redo journal + BTT Flog) is untouched by the tier.
 """
 from .admission import AdmissionPolicy, ScanDetector
-from .aio import (AsyncIOEngine, BackpressureError, CancelledError,
+from .aio import (AsyncIOEngine, BackpressureError, BufferRegistry,
+                  CancelledError, LinkCancelledError, RegisteredBuf,
                   SubmitError, Ticket, TicketError)
 from .evict_pool import SharedEvictionPool
 from .journal import GroupCommitter, LogBatcher, LogEntry, VolumeJournal
@@ -67,5 +71,6 @@ __all__ = [
     "StripedVolume", "VolumeConfig", "make_volume", "ReadTier",
     "ReplicaResyncer", "AdmissionPolicy", "ScanDetector",
     "AsyncIOEngine", "Ticket", "TicketError", "SubmitError",
-    "BackpressureError", "CancelledError",
+    "BackpressureError", "CancelledError", "LinkCancelledError",
+    "BufferRegistry", "RegisteredBuf",
 ]

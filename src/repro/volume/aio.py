@@ -43,7 +43,33 @@ front end that decouples submission from completion:
     down the ring.  Only :class:`~repro.core.SimulatedCrash` is fatal:
     it models power loss, so the engine marks itself dead, fails every
     queued ticket, and (in deterministic mode) re-raises so crash
-    harnesses observe the loss exactly like the synchronous sweeps do.
+    harnesses observe the loss exactly like the synchronous sweeps do;
+  * **registered buffer pools** (io_uring ``register_buffers``) — a
+    :class:`BufferRegistry` of pre-pinned arrays.  A write whose payload
+    is a :class:`RegisteredBuf` is PINNED, not snapshotted: the engine
+    holds the caller's array until the op completes and releases it back
+    to the pool from the completion (or cancel — see below) path.  An
+    UNREGISTERED mutable payload (ndarray / bytearray / memoryview) gets
+    a defensive staging copy at submit — the caller may reuse it
+    immediately, which is exactly the copy tax registration removes
+    (``bytes`` payloads are immutable and ride for free either way).  A
+    caller that re-``acquire()``\\ s from an exhausted pool steals the
+    oldest still-QUEUED pinned buffer: the engine snapshots it at THAT
+    moment (copy-on-evict — the only copy left, and only when the
+    caller reuses a slot before durability).  Reads accept ``out=`` and
+    land directly in the caller's (registered) array — the completion
+    hands back the caller's own buffer, no post-poll copy;
+  * **linked SQEs** (io_uring ``IO_LINK``) — ``submit(...,
+    link_to=parent)`` makes a ticket chain: the dependent dispatches
+    only after its parent completes OK, IN-ENGINE, so write→fsync,
+    write→read-back-verify and restore read→scatter sequences need one
+    ``wait`` on the chain tail instead of one poll round trip per hop.
+    A failed (or cancelled) link fails every transitive dependent with
+    :class:`LinkCancelledError` ("ECANCELED") on the completion ring —
+    dependents are cancelled, never silently dropped, and unrelated
+    tickets are untouched (per-ticket isolation).  Cancelling a
+    mid-chain ticket likewise cancels its dependents AND releases every
+    registered buffer the chain had pinned back to the pool.
 
 Two execution modes share all of the above:
 
@@ -61,6 +87,8 @@ import itertools
 import threading
 import time
 from collections import deque
+
+import numpy as np
 
 from repro.core.pmem import SimulatedCrash
 
@@ -89,6 +117,141 @@ class CancelledError(TicketError):
     """The ticket was cancelled before dispatch."""
 
 
+class LinkCancelledError(CancelledError):
+    """ECANCELED: an earlier ticket in this SQE chain failed (or was
+    cancelled), so this dependent never dispatched.  The chain's root
+    cause rides on the PARENT ticket's ``error``."""
+
+
+class RegisteredBuf:
+    """One buffer of a :class:`BufferRegistry` pool.  ``data`` is the
+    caller-visible uint8 array; fill it and pass the handle as a write's
+    ``data=`` (or a read's ``out=``) to pin it instead of copying."""
+
+    __slots__ = ("idx", "data", "_registry")
+
+    def __init__(self, idx: int, data, registry) -> None:
+        self.idx = idx
+        self.data = data
+        self._registry = registry
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"RegisteredBuf({self.idx}, {self.data.nbytes}B)"
+
+
+class BufferRegistry:
+    """Registered buffer pool (io_uring ``register_buffers``): a fixed
+    set of pre-allocated arrays the engine pins instead of copying.
+
+    Lifecycle: ``acquire()`` hands out a free buffer; submitting it pins
+    it to that ticket; the ticket's completion (success, failure, cancel
+    — including an ECANCELED chain cascade) releases it back to the
+    free list.  ``acquire()`` on an exhausted pool performs
+    **copy-on-evict**: the oldest pinned buffer whose ticket is still
+    QUEUED is snapshotted into the ticket (the payload stays correct)
+    and the slot is reused — the only remaining copy, paid only when
+    the caller reuses a slot before durability.  If nothing is
+    stealable (every pinned ticket already dispatched), a transient
+    unpooled buffer is handed out instead of blocking the caller."""
+
+    def __init__(self, engine: "AsyncIOEngine", n_buffers: int,
+                 buf_bytes: int) -> None:
+        assert n_buffers >= 1 and buf_bytes >= 1
+        self._engine = engine
+        self.buf_bytes = buf_bytes
+        self._bufs = [RegisteredBuf(i, np.zeros(buf_bytes, np.uint8), self)
+                      for i in range(n_buffers)]
+        self._free = list(range(n_buffers - 1, -1, -1))
+        self._pins: dict[int, Ticket] = {}      # buf idx -> pinning ticket
+        self.copy_on_evict = 0
+        self.overflow_allocs = 0
+
+    def __len__(self) -> int:
+        return len(self._bufs)
+
+    def free_count(self) -> int:
+        with self._engine._cond:
+            return len(self._free)
+
+    def acquire(self) -> RegisteredBuf:
+        eng = self._engine
+        with eng._cond:
+            if self._free:
+                return self._bufs[self._free.pop()]
+            # copy-on-evict: steal the oldest pinned buffer whose ticket
+            # has not dispatched yet (its payload snapshots into the
+            # ticket, so the in-flight write stays correct)
+            for idx in sorted(self._pins,
+                              key=lambda i: self._pins[i].seq):
+                if self._steal_locked(idx):
+                    return self._bufs[idx]
+            self.overflow_allocs += 1
+            return RegisteredBuf(-1, np.zeros(self.buf_bytes, np.uint8),
+                                 self)
+
+    def release(self, buf: RegisteredBuf) -> None:
+        """Return an acquired-but-never-submitted buffer to the pool."""
+        with self._engine._cond:
+            if buf.idx >= 0 and buf.idx not in self._pins \
+                    and buf.idx not in self._free:
+                self._free.append(buf.idx)
+
+    # engine-internal (all called under the engine lock) ------------------
+    def _steal_locked(self, idx: int) -> bool:
+        t = self._pins[idx]
+        if t.state != QUEUED:
+            return False                   # already on its way to media
+        buf = self._bufs[idx]
+        if t.out is buf:
+            return False                   # a read landing target cannot
+        data, blocks = t.value \
+            if isinstance(t.value, tuple) else (None, None)
+        snap = bytes(memoryview(buf.data))
+        if data is buf:
+            t.value = (snap, blocks)
+        elif isinstance(blocks, (list, tuple)) and \
+                any(b is buf for b in blocks):
+            t.value = (data, [snap if b is buf else b for b in blocks])
+        else:                              # pragma: no cover - defensive
+            return False
+        t._bufs.remove(buf)
+        del self._pins[idx]
+        self.copy_on_evict += 1
+        eng = self._engine
+        eng.staging_copies += 1
+        eng.staging_copy_bytes += len(snap)
+        eng._bump("staging_copies")
+        eng._bump("staging_copy_bytes", len(snap))
+        return True
+
+    def _pin_locked(self, buf: RegisteredBuf, t: "Ticket") -> None:
+        if buf.idx >= 0:
+            self._pins[buf.idx] = t
+        t._bufs.append(buf)
+
+    def _release_ticket_locked(self, t: "Ticket") -> None:
+        for buf in t._bufs:
+            if buf.idx >= 0 and self._pins.get(buf.idx) is t:
+                del self._pins[buf.idx]
+                self._free.append(buf.idx)
+        t._bufs = []
+
+    def stats(self) -> dict:
+        with self._engine._cond:
+            return {
+                "n_buffers": len(self._bufs),
+                "buf_bytes": self.buf_bytes,
+                "free": len(self._free),
+                "pinned": len(self._pins),
+                "copy_on_evict": self.copy_on_evict,
+                "overflow_allocs": self.overflow_allocs,
+            }
+
+
 class Ticket:
     """One asynchronous I/O: handle returned by ``submit``, delivered on
     the completion ring.  ``value`` holds a read's data; ``error`` holds
@@ -96,7 +259,8 @@ class Ticket:
     refused submit)."""
 
     __slots__ = ("tid", "seq", "op", "lba", "tenant", "state", "value",
-                 "error", "_engine")
+                 "error", "link_to", "link_depth", "out", "_bufs",
+                 "_engine")
 
     def __init__(self, tid: int, seq: int, op: str, lba: int,
                  tenant, engine) -> None:
@@ -108,6 +272,10 @@ class Ticket:
         self.state = QUEUED
         self.value = None
         self.error: BaseException | None = None
+        self.link_to: "Ticket | None" = None   # SQE chain parent
+        self.link_depth = 0                    # hops from the chain head
+        self.out = None                        # read landing buffer
+        self._bufs: list = []                  # pinned registered buffers
         self._engine = engine
 
     @property
@@ -154,14 +322,24 @@ class AsyncIOEngine:
         self._cq: deque[Ticket] = deque()             # shared completion ring
         self._open: dict[int, Ticket] = {}            # seq -> live ticket
         self._inflight: dict[object, int] = {}        # per-tenant live count
+        self._deps: dict[int, list[Ticket]] = {}      # parent seq -> linked
         self._tids = itertools.count(1)
         self._seqs = itertools.count(1)
         self._closed = False
         self._dead: BaseException | None = None
+        self.registry: BufferRegistry | None = None
         self.submitted = 0
         self.completed = 0
         self.failed = 0
         self.cancelled = 0
+        # zero-copy data plane accounting
+        self.copies_avoided = 0       # pinned writes + out= read landings
+        self.bytes_pinned = 0         # cumulative payload bytes pinned
+        self.staging_copies = 0       # defensive snapshots (+ steals)
+        self.staging_copy_bytes = 0
+        self.links_submitted = 0      # tickets carrying link_to
+        self.link_cancelled = 0       # dependents failed with ECANCELED
+        self.link_depth_max = 0       # deepest chain seen
         self._workers = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"aio-{i}")
@@ -174,9 +352,25 @@ class AsyncIOEngine:
     def inline(self) -> bool:
         return not self._workers
 
+    # ------------------------------------------------------- registered bufs
+    def register_buffers(self, n_buffers: int,
+                         buf_bytes: int) -> BufferRegistry:
+        """Create (once) the engine's registered buffer pool.  Payloads
+        submitted as :class:`RegisteredBuf` handles are pinned, not
+        copied; reads with a registered ``out=`` land in place."""
+        with self._cond:
+            if self.registry is None:
+                self.registry = BufferRegistry(self, n_buffers, buf_bytes)
+            else:
+                assert len(self.registry) == n_buffers \
+                    and self.registry.buf_bytes == buf_bytes, \
+                    "buffer pool already registered with a different shape"
+            return self.registry
+
     # ------------------------------------------------------------ submission
     def submit(self, op: str, lba: int = 0, data=None, blocks=None,
-               tenant=None, block: bool = False) -> Ticket:
+               tenant=None, block: bool = False, link_to: Ticket | None = None,
+               out=None) -> Ticket:
         """Queue one op; returns its ticket immediately.  NEVER raises
         for per-op conditions: a refused submit (closed engine, tenant
         over its in-flight bound, unknown op) comes back as an
@@ -187,10 +381,17 @@ class AsyncIOEngine:
         BLOCKING backpressure: the submit waits for the tenant's window
         (executing queued ops itself in deterministic mode) instead of
         failing the ticket — what batch producers (blockstore puts, the
-        request log) want.  Other refusals still fail the ticket."""
+        request log) want.  Other refusals still fail the ticket.
+
+        ``link_to=parent`` chains this ticket behind ``parent``
+        (IO_LINK): it dispatches only after the parent completes OK and
+        fails with :class:`LinkCancelledError` if the parent fails.
+        ``out=`` (reads) lands the data directly in the caller's array /
+        :class:`RegisteredBuf` — the completion value IS that buffer."""
         while True:
             t = self._submit_once(op, lba, data, blocks, tenant,
-                                  count_refusal=not block)
+                                  count_refusal=not block,
+                                  link_to=link_to, out=out)
             if not (block and t.state == DONE
                     and isinstance(t.error, BackpressureError)):
                 return t
@@ -204,19 +405,58 @@ class AsyncIOEngine:
                         self._cond.wait(timeout=0.05)
 
     def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
-                   tenant=None) -> Ticket | None:
+                   tenant=None, link_to: Ticket | None = None,
+                   out=None) -> Ticket | None:
         """Non-blocking window probe: returns None — without counting a
         failure — when the tenant is at its in-flight bound, the ticket
         otherwise.  Flow-control probes (the blockstore's restore pump)
         must not pollute the per-ticket failure stats."""
         t = self._submit_once(op, lba, data, blocks, tenant,
-                              count_refusal=False)
+                              count_refusal=False, link_to=link_to, out=out)
         if t.state == DONE and isinstance(t.error, BackpressureError):
             return None
         return t
 
+    def _bump(self, event: str, n: int = 1) -> None:
+        """Mirror a zero-copy counter onto the volume's Metrics (leaf
+        lock — safe under the engine lock) so ``Metrics.zerocopy_path()``
+        and ``scrub`` see the same numbers as ``stats()``."""
+        m = getattr(self.vol, "metrics", None)
+        if m is not None:
+            m.bump(event, n)
+
+    def _snapshot_locked(self, payload):
+        """Defensive staging copy of an UNREGISTERED mutable payload:
+        the caller may reuse its buffer the moment submit returns, so a
+        mutable array must not ride the ticket by reference.  This is
+        the per-op copy tax that :class:`BufferRegistry` pinning
+        removes.  ``bytes`` (immutable) payloads pass through."""
+        if isinstance(payload, (bytearray, memoryview, np.ndarray)):
+            snap = bytes(memoryview(np.ascontiguousarray(payload)
+                                    if isinstance(payload, np.ndarray)
+                                    else payload))
+            self.staging_copies += 1
+            self.staging_copy_bytes += len(snap)
+            self._bump("staging_copies")
+            self._bump("staging_copy_bytes", len(snap))
+            return snap
+        return payload
+
+    def _pin_or_snapshot_locked(self, payload, t: Ticket):
+        if isinstance(payload, RegisteredBuf):
+            assert payload._registry is self.registry, \
+                "buffer registered with a different engine"
+            self.registry._pin_locked(payload, t)
+            self.copies_avoided += 1
+            self.bytes_pinned += payload.nbytes
+            self._bump("copies_avoided")
+            self._bump("bytes_pinned", payload.nbytes)
+            return payload
+        return self._snapshot_locked(payload)
+
     def _submit_once(self, op, lba, data, blocks, tenant,
-                     count_refusal: bool = True) -> Ticket:
+                     count_refusal: bool = True, link_to=None,
+                     out=None) -> Ticket:
         with self._cond:
             t = Ticket(next(self._tids), next(self._seqs), op, lba,
                        tenant, self)
@@ -243,7 +483,53 @@ class AsyncIOEngine:
                     self.submitted += 1
                     self.failed += 1
                 return t
+            if link_to is not None:
+                assert link_to._engine is self, \
+                    "link parent belongs to a different engine"
+                self.links_submitted += 1
+                self._bump("links_submitted")
+                t.link_depth = link_to.link_depth + 1
+                if t.link_depth > self.link_depth_max:
+                    # Metrics only counts up: keep its link_depth_max
+                    # equal to the high-water mark by bumping the delta
+                    self._bump("link_depth_max",
+                               t.link_depth - self.link_depth_max)
+                    self.link_depth_max = t.link_depth
+                if link_to.state == DONE and link_to.error is not None:
+                    # chained behind an already-failed parent: the
+                    # dependent lands on the RING as ECANCELED (a real
+                    # CQE, unlike a refused submit — the chain is
+                    # cancelled, never silently dropped)
+                    t.link_to = link_to     # root cause stays reachable
+                    t.state = DONE
+                    t.error = LinkCancelledError(
+                        f"ECANCELED: link parent ticket {link_to.tid} "
+                        f"failed: {link_to.error!r}")
+                    self.submitted += 1
+                    self.cancelled += 1
+                    self.link_cancelled += 1
+                    self._bump("link_cancelled")
+                    self._cq.append(t)
+                    self._cond.notify_all()
+                    return t
+                if link_to.state != DONE:   # parent done-OK needs no gate
+                    t.link_to = link_to
+                    self._deps.setdefault(link_to.seq, []).append(t)
             self.submitted += 1
+            if data is not None:
+                data = self._pin_or_snapshot_locked(data, t)
+            if blocks is not None:
+                blocks = [self._pin_or_snapshot_locked(b, t)
+                          for b in blocks]
+            if out is not None:
+                assert op == "read", "out= is only meaningful for reads"
+                t.out = out
+                if isinstance(out, RegisteredBuf):
+                    self.registry._pin_locked(out, t)
+                    self.bytes_pinned += out.nbytes
+                    self._bump("bytes_pinned", out.nbytes)
+                self.copies_avoided += 1    # no post-poll landing copy
+                self._bump("copies_avoided")
             t.value = (data, blocks)          # op args ride the ticket
             self._sqs.setdefault(tenant, deque()).append(t)
             self._open[t.seq] = t
@@ -254,7 +540,13 @@ class AsyncIOEngine:
     def cancel(self, ticket: Ticket) -> bool:
         """Cancel a still-queued ticket: it completes on the ring with
         :class:`CancelledError`.  Returns False once dispatched (an op
-        already on its way to the media cannot be recalled)."""
+        already on its way to the media cannot be recalled).
+
+        A cancelled mid-chain ticket cascades: every linked dependent
+        completes with :class:`LinkCancelledError`, and ALL registered
+        buffers the ticket (and its dependents) had pinned go back to
+        the pool from the same completion path — a cancel landing
+        between submit and poll can never leak a pinned buffer."""
         with self._cond:
             if ticket.state != QUEUED or ticket.seq not in self._open:
                 return False
@@ -334,18 +626,24 @@ class AsyncIOEngine:
 
     # -------------------------------------------------------------- dispatch
     def _pick_locked(self):
-        """(ticket, barrier_blocked): the queued ticket with the oldest
-        seq across every SQ; barriers are not ready while any earlier
-        ticket is still open."""
-        best = None
-        for sq in self._sqs.values():
-            if sq and (best is None or sq[0].seq < best.seq):
-                best = sq[0]
-        if best is None:
+        """(ticket, blocked): the eligible queued ticket with the oldest
+        seq across every SQ.  Barriers are not ready while any earlier
+        ticket is still open (IO_DRAIN: nothing later than a pending
+        barrier dispatches either).  A link-gated head (parent still in
+        flight) blocks only ITS chain: younger heads of other SQs run —
+        per-tenant FIFO holds, cross-tenant overlap survives."""
+        heads = sorted((sq[0] for sq in self._sqs.values() if sq),
+                       key=lambda t: t.seq)
+        if not heads:
             return None, False
-        if best.op in _BARRIER_OPS and min(self._open) < best.seq:
-            return best, True
-        return best, False
+        for t in heads:
+            if t.op in _BARRIER_OPS and min(self._open) < t.seq:
+                return t, True
+            p = t.link_to
+            if p is not None and p.state != DONE:
+                continue             # parent in flight: try another SQ
+            return t, False
+        return heads[0], True        # every head link-gated: wait
 
     def _pop_locked(self, ticket: Ticket) -> None:
         self._sqs[ticket.tenant].popleft()
@@ -409,14 +707,42 @@ class AsyncIOEngine:
         if m is not None:
             m.observe(f"svc::aio::{t.op}", time.perf_counter_ns() - t0)
 
+    @staticmethod
+    def _payload(data):
+        """A pinned RegisteredBuf rides the ticket as the handle; the
+        device stack consumes the underlying array via the buffer
+        protocol (``np.frombuffer`` — no intermediate copy)."""
+        return data.data if isinstance(data, RegisteredBuf) else data
+
     def _run_op(self, t: Ticket, data, blocks):
         vol = self.vol
         if t.op == "write":
-            return vol.write(t.lba, data, tenant=t.tenant)
+            return vol.write(t.lba, self._payload(data), tenant=t.tenant)
         if t.op == "write_multi":
-            return vol.write_multi(t.lba, blocks, tenant=t.tenant)
+            return vol.write_multi(t.lba, [self._payload(b) for b in blocks],
+                                   tenant=t.tenant)
         if t.op == "read":
-            return vol.read(t.lba, tenant=t.tenant)
+            if t.out is None:
+                return vol.read(t.lba, tenant=t.tenant)
+            # zero-copy landing: the data arrives in the CALLER's array
+            # (the device stack fills ``out`` in place all the way down)
+            # and the completion value is the caller's own buffer — no
+            # post-poll copy out of the ring
+            arr = self._payload(t.out)
+            bs = getattr(vol, "block_size", None)
+            if isinstance(arr, np.ndarray) and arr.size == bs:
+                try:
+                    vol.read(t.lba, out=arr, tenant=t.tenant)
+                    return t.out
+                except TypeError:    # volume without out= plumbing
+                    pass
+            val = vol.read(t.lba, tenant=t.tenant)
+            src = val.view(np.uint8).reshape(-1) \
+                if isinstance(val, np.ndarray) \
+                else np.frombuffer(memoryview(val), dtype=np.uint8)
+            n = min(arr.size, src.size)
+            arr[:n] = src[:n]
+            return t.out
         if t.op == "fsync":
             return vol.fsync()       # rides the GroupCommitter leader
         assert t.op == "flush"
@@ -467,8 +793,32 @@ class AsyncIOEngine:
             self.cancelled += 1          # cancels are not failures
         else:
             self.failed += 1
+        # EVERY completion path — success, device error, cancel, chain
+        # cascade, engine death — releases the ticket's pinned buffers;
+        # this is the one place, so no path can leak a registered buffer
+        if t._bufs and self.registry is not None:
+            self.registry._release_ticket_locked(t)
         self._cq.append(t)
         self._cond.notify_all()
+        # linked-SQE cascade: a failed/cancelled parent fails every
+        # still-queued transitive dependent with ECANCELED ON THE RING
+        # (cancelled, never silently dropped); a successful parent just
+        # ungates them (``_pick_locked`` reads parent.state)
+        deps = self._deps.pop(t.seq, None)
+        if deps and error is not None:
+            for d in deps:
+                if d.state != QUEUED or d.seq not in self._open:
+                    continue
+                sq = self._sqs.get(d.tenant)
+                try:
+                    sq.remove(d)
+                except (ValueError, AttributeError):
+                    continue             # pragma: no cover - defensive
+                self.link_cancelled += 1
+                self._bump("link_cancelled")
+                self._finish_locked(d, error=LinkCancelledError(
+                    f"ECANCELED: link parent ticket {t.tid} failed: "
+                    f"{error!r}"))
 
     def _complete(self, t: Ticket, value=None, error=None) -> None:
         with self._cond:
@@ -490,7 +840,7 @@ class AsyncIOEngine:
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,
@@ -499,7 +849,17 @@ class AsyncIOEngine:
                 "cq_depth": len(self._cq),
                 "inflight": {k: v for k, v in self._inflight.items() if v},
                 "workers": len(self._workers),
+                "copies_avoided": self.copies_avoided,
+                "bytes_pinned": self.bytes_pinned,
+                "staging_copies": self.staging_copies,
+                "staging_copy_bytes": self.staging_copy_bytes,
+                "links_submitted": self.links_submitted,
+                "link_cancelled": self.link_cancelled,
+                "link_depth_max": self.link_depth_max,
             }
+        if self.registry is not None:
+            out["registry"] = self.registry.stats()
+        return out
 
     def close(self, drain: bool = True) -> None:
         if drain and self._dead is None:

@@ -21,8 +21,16 @@ on a quiet socket can never wedge that shard's flush).
 **Participants.**  Anything exposing the two drain hooks —
 ``_evict_slot(item)`` / ``_complete_eviction()`` — can register, not
 just ``CaitiCache``: the volume's :class:`ReplicaResyncer` drains its
-repair queue through the same cores, so background resync traffic is
+repair queue through the same cores, and ``PagedKVCache`` offloads its
+eager page-out DMA here, so background resync and KV-spill traffic are
 scheduled (and NUMA-placed) exactly like eviction writebacks.
+
+**Batch draining.**  A worker's pick takes up to ``batch_max`` queued
+items from the chosen participant in one go; a participant exposing the
+optional ``_evict_slots(items)`` hook gets the whole batch in one call
+(one lock acquisition / one fused transit-kernel launch for a burst),
+otherwise the worker loops ``_evict_slot`` per item.  Completion
+accounting is unchanged: ``_complete_eviction()`` fires once per item.
 """
 from __future__ import annotations
 
@@ -42,10 +50,12 @@ class SharedEvictionPool:
     """
 
     def __init__(self, n_workers: int = 4, name: str = "vol",
-                 n_sockets: int = 1) -> None:
+                 n_sockets: int = 1, batch_max: int = 8) -> None:
         assert n_sockets >= 1
+        assert batch_max >= 1
         self.n_workers = n_workers
         self.n_sockets = min(n_sockets, max(1, n_workers))
+        self.batch_max = batch_max
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         # (participant, backlog, socket)
@@ -56,6 +66,8 @@ class SharedEvictionPool:
         self._pending = 0
         self.drained_by_socket = [0] * self.n_sockets
         self.stolen_picks = 0
+        self.batched_drains = 0          # picks that drained > 1 item
+        self.batched_items = 0           # items drained via batch picks
         self._workers = [
             threading.Thread(target=self._run, args=(i % self.n_sockets,),
                              daemon=True, name=f"{name}-evict-{i}")
@@ -134,11 +146,21 @@ class SharedEvictionPool:
             if best is not None:
                 self._rr = (best + 1) % n
                 cache, q, s = self._queues[best]
-                self._pending -= 1
-                self.drained_by_socket[socket] += 1
+                # batch drain: one pick takes up to batch_max items from
+                # the SAME participant's backlog — one wakeup (and, for
+                # participants with the ``_evict_slots`` hook, one lock
+                # acquisition / fused DMA) amortized over the burst
+                batch = [q.popleft()]
+                while q and len(batch) < self.batch_max:
+                    batch.append(q.popleft())
+                self._pending -= len(batch)
+                self.drained_by_socket[socket] += len(batch)
                 if not local_only:
                     self.stolen_picks += 1
-                return cache, q.popleft()
+                if len(batch) > 1:
+                    self.batched_drains += 1
+                    self.batched_items += len(batch)
+                return cache, batch
             if local_only and self.n_sockets == 1:
                 break                               # nothing anywhere
         return None
@@ -153,11 +175,17 @@ class SharedEvictionPool:
                 picked = self._pick(socket)
             if picked is None:
                 continue
-            cache, slot = picked
+            cache, batch = picked
+            bulk = getattr(cache, "_evict_slots", None)
             try:
-                cache._evict_slot(slot)
+                if bulk is not None and len(batch) > 1:
+                    bulk(batch)
+                else:
+                    for slot in batch:
+                        cache._evict_slot(slot)
             finally:
-                cache._complete_eviction()
+                for _ in batch:
+                    cache._complete_eviction()
 
     def close(self) -> None:
         with self._cond:

@@ -590,24 +590,38 @@ class StripedVolume:
         return self._aio
 
     def submit(self, op: str, lba: int = 0, data=None, blocks=None,
-               tenant: str | None = None, block: bool = False):
+               tenant: str | None = None, block: bool = False,
+               link_to=None, out=None):
         """Asynchronous submission: queue ``op`` ('write' | 'write_multi'
         | 'read' | 'fsync' | 'flush') and return its ticket immediately.
         Completions surface on :meth:`poll`; per-op failures (injected
         device errors, journal-ring overflow, a tenant over its
         in-flight bound) fail the TICKET, never the stack.
         ``block=True`` waits out the in-flight window instead of failing
-        the ticket (blocking backpressure for batch producers)."""
+        the ticket (blocking backpressure for batch producers).
+        ``link_to=`` chains the ticket behind a parent (IO_LINK: failed
+        parent cancels the chain with ECANCELED); ``out=`` lands a read
+        directly in the caller's (registered) array."""
         return self.aio_engine().submit(op, lba=lba, data=data,
                                         blocks=blocks, tenant=tenant,
-                                        block=block)
+                                        block=block, link_to=link_to,
+                                        out=out)
 
     def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
-                   tenant: str | None = None):
+                   tenant: str | None = None, link_to=None, out=None):
         """Non-blocking window probe: None when the tenant is at its
         in-flight bound (not counted as a failure), a ticket otherwise."""
         return self.aio_engine().try_submit(op, lba=lba, data=data,
-                                            blocks=blocks, tenant=tenant)
+                                            blocks=blocks, tenant=tenant,
+                                            link_to=link_to, out=out)
+
+    def register_buffers(self, n_buffers: int,
+                         buf_bytes: int | None = None):
+        """Register a zero-copy buffer pool on the volume's async engine
+        (``buf_bytes`` defaults to the block size).  Returns the
+        :class:`~repro.volume.aio.BufferRegistry`."""
+        return self.aio_engine().register_buffers(
+            n_buffers, self.block_size if buf_bytes is None else buf_bytes)
 
     def poll(self, max_ops: int | None = None) -> list:
         """Drain the shared completion ring (empty when nothing was ever
@@ -796,9 +810,18 @@ class StripedVolume:
         fail-slow signal a limping DIMM set shows long before it fails
         outright (one shard's EWMA drifting off its peers)."""
         detail = self.scrub_replicas_detail(sample_every)
-        return {"divergent": len(detail),
-                "divergent_detail": detail,
-                "per_shard_svc": self.metrics.per_node()}
+        out = {"divergent": len(detail),
+               "divergent_detail": detail,
+               "per_shard_svc": self.metrics.per_node()}
+        if self._aio is not None:
+            s = self._aio.stats()
+            out["zerocopy"] = {k: s[k] for k in (
+                "copies_avoided", "bytes_pinned", "staging_copies",
+                "staging_copy_bytes", "links_submitted", "link_cancelled",
+                "link_depth_max")}
+            if "registry" in s:
+                out["zerocopy"]["registry"] = s["registry"]
+        return out
 
     # ---------------------------------------------------------------- stats
     def occupancy(self) -> float:

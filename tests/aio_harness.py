@@ -5,8 +5,12 @@ The engine's deterministic mode (``n_workers=0``: nothing executes until
 every interleaving of submit / poll / crash a *replayable schedule*:
 
   * :class:`AsyncRun` — drives one volume through an explicit schedule of
-    sync calls, async submissions and polls, recording execution order
-    and per-ticket outcomes;
+    sync calls, async submissions, IO_LINK chained submissions and
+    polls, recording completion order and per-ticket outcomes;
+  * :func:`check_chain_invariants` — the linked-SQE contract as a swept
+    property: dependents never complete before their parent, a failed
+    link cancels (never silently drops) the rest of its chain, tickets
+    before the failed link keep their own outcome;
   * :func:`crash_on_nth_btt_write` — global (cross-shard) crash injection
     at BTT-write granularity, the same counter the PR 3/4 sweeps align
     with the ``chain_commit_steps`` protocol model;
@@ -103,15 +107,25 @@ class AsyncRun:
       ("submit_write", name, lba, data)     async single-block write
       ("submit_read",  name, lba)           async read
       ("submit_fsync", name)                async barrier + group commit
+      ("link_write", name, parent, lba, data)   write linked behind parent
+      ("link_multi", name, parent, lba, blocks) chained write, linked
+      ("link_read",  name, parent, lba)         read linked behind parent
+      ("link_fsync", name, parent)              fsync linked behind parent
       ("poll", max_ops | None)              execute queued ops inline
       ("sync_multi", lba, blocks)           blocking write_multi
       ("sync_write", lba, data)             blocking write
       ("fsync",)                            blocking fsync
 
     ``tickets`` maps names to tickets; ``executed_sync`` counts blocking
-    steps that ran to completion.  A ``SimulatedCrash`` aborts the run
+    steps that ran to completion; ``completion_order`` records ticket
+    names in the order the completion ring surfaced them (the IO_LINK
+    ordering invariants read this).  A ``SimulatedCrash`` aborts the run
     exactly where power was lost — tickets completed before that point
     keep ``ok == True``, everything queued is failed by the dying ring.
+
+    The ``link_*`` steps build IO_LINK chains: ``parent`` names an
+    earlier ticket; the engine holds the child until the parent
+    completes OK and cancels it (ECANCELED) when the parent fails.
     """
 
     def __init__(self, vol) -> None:
@@ -119,23 +133,51 @@ class AsyncRun:
         self.eng = vol.aio_engine(n_workers=0)
         self.tickets: dict[str, object] = {}
         self.executed_sync: list[tuple] = []
+        self.completion_order: list[str] = []
+        self._names: dict[int, str] = {}       # id(ticket) -> name
+
+    def _track(self, name: str, ticket) -> None:
+        self.tickets[name] = ticket
+        self._names[id(ticket)] = name
+
+    def _drain(self, max_ops=None) -> None:
+        for t in self.eng.poll(max_ops):
+            self.completion_order.append(
+                self._names.get(id(t), f"tid{t.tid}"))
 
     def step(self, s: tuple) -> None:
         kind = s[0]
         if kind == "submit_multi":
             _, name, lba, blocks = s
-            self.tickets[name] = self.eng.submit("write_multi", lba,
-                                                 blocks=blocks)
+            self._track(name, self.eng.submit("write_multi", lba,
+                                              blocks=blocks))
         elif kind == "submit_write":
             _, name, lba, data = s
-            self.tickets[name] = self.eng.submit("write", lba, data=data)
+            self._track(name, self.eng.submit("write", lba, data=data))
         elif kind == "submit_read":
             _, name, lba = s
-            self.tickets[name] = self.eng.submit("read", lba)
+            self._track(name, self.eng.submit("read", lba))
         elif kind == "submit_fsync":
-            self.tickets[s[1]] = self.eng.submit("fsync")
+            self._track(s[1], self.eng.submit("fsync"))
+        elif kind == "link_write":
+            _, name, parent, lba, data = s
+            self._track(name, self.eng.submit(
+                "write", lba, data=data, link_to=self.tickets[parent]))
+        elif kind == "link_multi":
+            _, name, parent, lba, blocks = s
+            self._track(name, self.eng.submit(
+                "write_multi", lba, blocks=blocks,
+                link_to=self.tickets[parent]))
+        elif kind == "link_read":
+            _, name, parent, lba = s
+            self._track(name, self.eng.submit(
+                "read", lba, link_to=self.tickets[parent]))
+        elif kind == "link_fsync":
+            _, name, parent = s
+            self._track(name, self.eng.submit(
+                "fsync", link_to=self.tickets[parent]))
         elif kind == "poll":
-            self.eng.poll(s[1])
+            self._drain(s[1])
         elif kind == "sync_multi":
             _, lba, blocks = s
             self.vol.write_multi(lba, blocks)
@@ -153,13 +195,57 @@ class AsyncRun:
     def run(self, schedule) -> "AsyncRun":
         for s in schedule:
             self.step(s)
-        self.eng.poll(None)          # settle any stragglers
+        self._drain(None)            # settle any stragglers
         return self
 
     def ok_tickets(self) -> set[str]:
         """Names of tickets that completed successfully (before a crash,
         if one fired)."""
         return {name for name, t in self.tickets.items() if t.ok}
+
+
+def check_chain_invariants(run: AsyncRun, chains) -> None:
+    """IO_LINK invariants over named ticket chains (each chain a list of
+    ticket names in link order), valid after a clean run, an injected
+    device error, or a crash:
+
+      * **in-order completion**: a dependent never surfaces on the
+        completion ring before its parent — ``completion_order``
+        respects chain order for every pair that was recorded;
+      * **fail-stop cascade, never a silent drop**: once a link fails,
+        every LATER submitted ticket in the chain resolves with an
+        error (ECANCELED from the cascade, or the dying ring's
+        SubmitError after a crash) — it never completes ok, and it
+        never ends in limbo with neither a success nor an error;
+      * **isolation**: tickets BEFORE the failed link keep their own
+        outcome (a dependent's cancellation never reaches back up).
+
+    Only tickets the schedule actually submitted are checked — a crash
+    that aborts the run mid-chain leaves the tail unsubmitted, which is
+    the caller's power-loss semantics, not a harness failure.
+    """
+    pos = {name: i for i, name in enumerate(run.completion_order)}
+    for chain in chains:
+        live = [n for n in chain if n in run.tickets]
+        for parent, child in zip(live, live[1:]):
+            if parent in pos and child in pos:
+                assert pos[parent] < pos[child], \
+                    (f"dependent {child!r} completed before its link "
+                     f"parent {parent!r}: {run.completion_order}")
+        failed_at = next((i for i, n in enumerate(live)
+                          if run.tickets[n].error is not None), None)
+        if failed_at is None:
+            continue
+        for n in live[:failed_at]:
+            assert run.tickets[n].ok, \
+                f"{n!r} precedes the failed link but is not ok"
+        for n in live[failed_at + 1:]:
+            t = run.tickets[n]
+            assert not t.ok, \
+                f"{n!r} completed OK after its link parent failed"
+            assert t.error is not None, \
+                (f"{n!r} was silently dropped: chain parent failed but "
+                 f"the dependent has neither a result nor an error")
 
 
 # ----------------------------------------------------------- crash sweep

@@ -43,14 +43,27 @@ def test_floor_gate_references_registered_tables():
     registered = _registry_tables()
     assert set(mod.FLOORS) <= registered, \
         sorted(set(mod.FLOORS) - registered)
+    # a scalar floor bounds entry["speedup"]; a dict floor bounds each
+    # of its keys — normalize both shapes the way check() does
+    keyed = {t: (f if isinstance(f, dict) else {"speedup": f})
+             for t, f in mod.FLOORS.items()}
+    n_bars = sum(len(k) for k in keyed.values())
     # the gate fails (not passes) when a floored table goes missing
     problems = mod.check({}, allow_missing=False)
     assert len(problems) == len(mod.FLOORS)
     assert mod.check({}, allow_missing=True) == []
-    assert mod.check({t: {"speedup": 2.0} for t in mod.FLOORS}) == []
-    bad = mod.check({t: {"speedup": f * 0.5}
-                     for t, f in mod.FLOORS.items()})
-    assert len(bad) == len(mod.FLOORS)
+    assert mod.check({t: {k: 2.0 for k in ks}
+                      for t, ks in keyed.items()}) == []
+    bad = mod.check({t: {k: bar * 0.5 for k, bar in ks.items()}
+                     for t, ks in keyed.items()})
+    assert len(bad) == n_bars
+    # a dict-floored table missing ONE of its keys is a loud failure
+    dict_tables = [t for t, f in mod.FLOORS.items() if isinstance(f, dict)]
+    assert dict_tables, "expected at least one multi-key floor"
+    t0 = dict_tables[0]
+    partial = {t: {k: 2.0 for k in ks} for t, ks in keyed.items()}
+    partial[t0] = dict(list(partial[t0].items())[:-1])
+    assert len(mod.check(partial)) == 1
 
 
 def test_artifact_meta_gate():

@@ -8,9 +8,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import (flash_attention, gather_quantize, paged_attention,
-                           scatter_dequantize)
+from repro.kernels import (flash_attention, gather_quantize,
+                           gather_quantize_crc, paged_attention,
+                           scatter_dequantize, scatter_dequantize_crc)
 from repro.kernels import ref
+from repro.kernels.block_transit import (gather_quantize_crc_pallas,
+                                         scatter_dequantize_crc_pallas)
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -126,6 +129,68 @@ def test_transit_codec_roundtrip(P, page, F):
     got = np.asarray(restored)[np.asarray(ids)]
     step = np.abs(orig).max(axis=-1, keepdims=True) / 127.0
     assert (np.abs(got - orig) <= step * 0.75 + 1e-7).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=st.sampled_from([(6, 8, 64), (8, 16, 128), (4, 32, 96),
+                              (12, 8, 256)]),
+       seed=st.integers(0, 2**31 - 1),
+       n_ids=st.integers(1, 4))
+def test_fused_transit_crc_matches_three_pass_property(shape, seed, n_ids):
+    """Property (satellite): the FUSED crc+quantize+gather kernel is
+    bit-identical (q, crc) and allclose (scales, dequant) to the
+    three-pass composition gather_quantize_ref -> transit_crc_ref ->
+    scatter_dequantize_ref — in direct interpret=True mode AND through
+    the jit-compiled public wrappers.  The crc oracle itself is pinned
+    to ``zlib.adler32`` of the packed page bytes."""
+    import zlib
+    P, page, F = shape
+    rng = np.random.default_rng(seed)
+    pool = jnp.asarray(rng.standard_normal((P, page, F)), jnp.float32)
+    ids = jnp.asarray(rng.permutation(P)[:min(n_ids, P)], jnp.int32)
+
+    qr, sr = ref.gather_quantize_ref(pool, ids)          # pass 1+2
+    crc_r = ref.transit_crc_ref(qr)                      # pass 3 (walk)
+    for pi, crc in zip(np.asarray(qr), crc_r):           # oracle's oracle
+        assert int(crc) == zlib.adler32(pi.tobytes())
+
+    for q, sc, crc in (
+            gather_quantize_crc_pallas(pool, ids, interpret=True),
+            gather_quantize_crc(pool, ids)):             # jit-compiled
+        assert np.array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sr),
+                                   rtol=1e-6)
+        assert np.array_equal(np.asarray(crc), crc_r)    # bit-identical
+
+    exp_pool = ref.scatter_dequantize_ref(jnp.zeros_like(pool), ids, qr, sr)
+    for new_pool, crc in (
+            scatter_dequantize_crc_pallas(jnp.zeros_like(pool), ids,
+                                          qr, sr, interpret=True),
+            scatter_dequantize_crc(jnp.zeros_like(pool), ids, qr, sr)):
+        assert np.array_equal(np.asarray(crc), crc_r)    # verify-on-land
+        np.testing.assert_allclose(np.asarray(new_pool),
+                                   np.asarray(exp_pool),
+                                   atol=1e-6, rtol=1e-6)
+    # end-to-end roundtrip error bounded by one quantization step
+    got = np.asarray(new_pool)[np.asarray(ids)]
+    orig = np.asarray(pool)[np.asarray(ids)]
+    step = np.abs(orig).max(axis=-1, keepdims=True) / 127.0
+    assert (np.abs(got - orig) <= step * 0.75 + 1e-7).all()
+
+
+def test_fused_crc_detects_payload_corruption():
+    """Flipping ONE byte of a quantized page moves its crc — the
+    property the kvcache restore path relies on to detect torn transit."""
+    pool = jax.random.normal(jax.random.PRNGKey(9), (4, 16, 64),
+                             jnp.float32)
+    ids = jnp.asarray([1, 3], jnp.int32)
+    q, sc, crc = gather_quantize_crc(pool, ids)
+    qc = np.asarray(q).copy()
+    qc[0, 3, 7] = qc[0, 3, 7] ^ 1
+    _, crc2 = scatter_dequantize_crc(jnp.zeros_like(pool), ids,
+                                     jnp.asarray(qc), sc)
+    assert int(crc2[0]) != int(crc[0])        # corrupted page flagged
+    assert int(crc2[1]) == int(crc[1])        # untouched page unchanged
 
 
 def test_scatter_preserves_other_pages():

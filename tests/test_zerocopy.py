@@ -1,0 +1,377 @@
+"""Zero-copy data plane: registered buffer pools (pin instead of copy,
+copy-on-evict, cancel-releases-buffers), IO_LINK ticket chains (in-order
+completion, ECANCELED cascade, crash sweep at every link boundary), the
+linked blockstore commit, and the sim-backed acceptance floors
+(zerocopy >= 1.2x copying at qd=8, fused transit >= 1.3x three-pass)."""
+import numpy as np
+import pytest
+
+from aio_harness import (AsyncRun, blk, check_chain_invariants,
+                         crash_sweep, fail_shard_writes,
+                         volume_lba_on_shard)
+from repro.volume import (CancelledError, LinkCancelledError, make_volume)
+from repro.core.sim import run_aio_sim_workload, run_transit_sim_workload
+
+
+# ------------------------------------------------- registered buffer pool
+def test_registered_write_pins_instead_of_copying():
+    """A registered buffer rides to the media without a staging copy;
+    completion releases it back to the pool, and the engine counters
+    (mirrored into the volume's Metrics) record the avoided copy."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        reg = vol.register_buffers(4)
+        buf = reg.acquire()
+        buf.data[:] = 7
+        assert reg.free_count() == 3
+        t = eng.submit("write", 9, data=buf)
+        assert reg.stats()["pinned"] == 1      # pinned, not copied
+        eng.poll()
+        assert t.ok
+        assert bytes(vol.read(9)) == blk(7)
+        assert reg.free_count() == 4           # completion released it
+        st = eng.stats()
+        assert st["copies_avoided"] == 1 and st["staging_copies"] == 0
+        assert st["bytes_pinned"] == vol.block_size
+        zc = vol.scrub()["zerocopy"]
+        assert zc["copies_avoided"] == 1
+        assert zc["registry"]["copy_on_evict"] == 0
+        assert vol.metrics.zerocopy_path()["pin_rate"] == 1.0
+    finally:
+        vol.close()
+
+
+def test_unregistered_mutable_payload_snapshots_at_submit():
+    """An unregistered numpy payload is snapshotted under the engine
+    lock — the caller scribbling on it after submit must not tear the
+    write (and the copy is counted as a staging copy)."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        arr = np.full(vol.block_size, 5, np.uint8)
+        t = eng.submit("write", 3, data=arr)
+        arr[:] = 99                            # after submit, before poll
+        eng.poll()
+        assert t.ok
+        assert bytes(vol.read(3)) == blk(5)    # the SNAPSHOT landed
+        st = eng.stats()
+        assert st["staging_copies"] == 1 and st["copies_avoided"] == 0
+    finally:
+        vol.close()
+
+
+def test_copy_on_evict_when_caller_reuses_slot_before_durability():
+    """Exhausting the pool steals the oldest still-QUEUED pinned buffer:
+    its payload snapshots into the ticket (the write stays correct) and
+    the slot is reused — the only copy on the zero-copy path, paid only
+    for early slot reuse."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        reg = vol.register_buffers(2)
+        tickets = []
+        for i in range(4):                     # 4 writes through 2 buffers
+            buf = reg.acquire()
+            buf.data[:] = 10 + i
+            tickets.append(eng.submit("write", i, data=buf))
+        assert reg.stats()["copy_on_evict"] == 2
+        eng.poll()
+        for i, t in enumerate(tickets):
+            assert t.ok
+            assert bytes(vol.read(i)) == blk(10 + i)   # steals didn't tear
+        assert reg.free_count() == 2
+        st = eng.stats()
+        assert st["copies_avoided"] == 4 and st["staging_copies"] == 2
+    finally:
+        vol.close()
+
+
+def test_read_lands_directly_in_registered_out_buffer():
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        vol.write(17, blk(42))
+        reg = vol.register_buffers(2)
+        buf = reg.acquire()
+        t = eng.submit("read", 17, out=buf)
+        eng.poll()
+        assert t.ok
+        assert bytes(buf.data) == blk(42)      # landed in the caller's array
+        assert reg.free_count() == 2           # released after completion
+        # plain caller-owned arrays work as landing targets too
+        out = np.zeros(vol.block_size, np.uint8)
+        t2 = eng.submit("read", 17, out=out)
+        eng.poll()
+        assert t2.ok and bytes(out) == blk(42)
+    finally:
+        vol.close()
+
+
+def test_cancel_mid_chain_releases_buffers_and_cascades():
+    """Satellite 3: cancelling a still-queued pinned write returns its
+    registered buffer to the pool from the completion path and fails
+    every linked dependent with ECANCELED — no leaked pins, no silently
+    dropped dependents."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        reg = vol.register_buffers(2)
+        buf = reg.acquire()
+        buf.data[:] = 1
+        w = eng.submit("write", 0, data=buf)
+        f = eng.submit("fsync", link_to=w)
+        r = eng.submit("read", 0, link_to=f)
+        assert reg.free_count() == 1
+        assert eng.cancel(w) is True
+        assert isinstance(w.error, CancelledError)
+        assert isinstance(f.error, LinkCancelledError)
+        assert isinstance(r.error, LinkCancelledError)
+        assert reg.free_count() == 2           # pin released by the cancel
+        eng.poll()
+        assert bytes(vol.read(0)) != blk(1)    # cancelled write never ran
+        assert eng.stats()["link_cancelled"] == 2
+    finally:
+        vol.close()
+
+
+# ----------------------------------------------------- linked SQE chains
+def test_linked_chain_executes_in_order_without_poll_roundtrips():
+    """write -> fsync -> read-back submitted as ONE chain: the engine
+    sequences them internally (no poll round-trip between links) and the
+    read observes the linked write."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        run = AsyncRun(vol)
+        run.run([
+            ("submit_write", "w", 8, blk(11)),
+            ("link_fsync", "f", "w"),
+            ("link_read", "r", "f", 8),
+            ("poll", None),
+        ])
+        assert run.ok_tickets() == {"w", "f", "r"}
+        assert bytes(run.tickets["r"].value) == blk(11)
+        assert run.completion_order.index("w") \
+            < run.completion_order.index("f") \
+            < run.completion_order.index("r")
+        st = run.eng.stats()
+        assert st["links_submitted"] == 2
+        assert st["link_depth_max"] == 2
+    finally:
+        vol.close()
+
+
+def test_failed_link_cancels_chain_never_silently_drops():
+    """A device error on the chain head fails the head with the REAL
+    error and every dependent with ECANCELED — all of them surface on
+    the completion ring; an unrelated ticket is untouched."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        bad = volume_lba_on_shard(vol, 0)
+        good = volume_lba_on_shard(vol, 1)
+        inj = fail_shard_writes(vol, 0)
+        w = eng.submit("write", bad, data=blk(1))
+        f = eng.submit("fsync", link_to=w)
+        r = eng.submit("read", bad, link_to=f)
+        other = eng.submit("write", good, data=blk(2))
+        done = eng.poll()
+        assert {t.tid for t in done} \
+            == {w.tid, f.tid, r.tid, other.tid}    # real CQEs, none dropped
+        assert isinstance(w.error, IOError)
+        assert isinstance(f.error, LinkCancelledError)
+        assert isinstance(r.error, LinkCancelledError)
+        assert other.ok
+        assert eng.stats()["link_cancelled"] == 2
+        inj["restore"]()
+        # the ring is still alive: a fresh chain on the same lba works
+        w2 = eng.submit("write", bad, data=blk(3))
+        r2 = eng.submit("read", bad, link_to=w2)
+        eng.poll()
+        assert w2.ok and r2.ok and bytes(r2.value) == blk(3)
+    finally:
+        vol.close()
+
+
+def test_link_to_already_completed_parent():
+    """Linking to a parent that already finished is legal: an OK parent
+    gates nothing, a FAILED parent cancels the child at submit — but
+    still as a ring completion, never an exception from submit()."""
+    vol = make_volume("btt", n_lbas=256, n_shards=2, stripe_blocks=1)
+    try:
+        eng = vol.aio_engine(n_workers=0)
+        ok_parent = eng.submit("write", 1, data=blk(4))
+        eng.poll()
+        assert ok_parent.ok
+        child = eng.submit("read", 1, link_to=ok_parent)
+        eng.poll()
+        assert child.ok and bytes(child.value) == blk(4)
+
+        inj = fail_shard_writes(vol, 0)
+        bad = volume_lba_on_shard(vol, 0)
+        failed_parent = eng.submit("write", bad, data=blk(5))
+        eng.poll()
+        assert isinstance(failed_parent.error, IOError)
+        orphan = eng.submit("read", bad, link_to=failed_parent)
+        assert isinstance(orphan.error, LinkCancelledError)
+        assert orphan.tid in {t.tid for t in eng.poll()}   # real CQE
+        inj["restore"]()
+    finally:
+        vol.close()
+
+
+def test_linked_chain_crash_sweep(tmp_path):
+    """Satellite 1: crash at EVERY BTT write point under two interleaved
+    write -> fsync -> read-verify chains.  At every crash point:
+    dependents never complete before their parent, a failed link
+    cancels (never silently drops) its chain, and a chain whose linked
+    fsync completed OK is durable across recovery."""
+    kw = dict(policy="btt", n_lbas=256, n_shards=2, stripe_blocks=1,
+              journal_slots=16, journal_span=2, backend="file")
+    chains = [["w1", "f1", "r1"], ["w2", "f2", "r2"]]
+
+    def sched():
+        return [
+            ("submit_write", "w1", 8, blk(11)),
+            ("link_fsync", "f1", "w1"),
+            ("link_read", "r1", "f1", 8),
+            ("submit_multi", "w2", 32, [blk(21 + i) for i in range(3)]),
+            ("link_fsync", "f2", "w2"),
+            ("link_read", "r2", "f2", 32),
+            ("poll", None),
+        ]
+
+    def check(n, done, crashed, run, vol2):
+        check_chain_invariants(run, chains)
+        t = run.tickets
+        if "r1" in run.ok_tickets():
+            assert bytes(t["r1"].value) == blk(11)
+        if "r2" in run.ok_tickets():
+            assert bytes(t["r2"].value) == blk(21)
+        # linked-fsync durability: an OK barrier pins its chain's write
+        if "f1" in run.ok_tickets():
+            assert bytes(vol2.read(8)) == blk(11)
+        if "f2" in run.ok_tickets():
+            for i in range(3):
+                assert bytes(vol2.read(32 + i)) == blk(21 + i)
+
+    points = crash_sweep(tmp_path, sched, check, vol_kw=kw)
+    assert points > 3          # the sweep really visited link boundaries
+
+
+def test_blockstore_linked_commit_roundtrip(tmp_path):
+    """The aio blockstore commit rides IO_LINK chains (write -> fsync
+    barriers sequenced in-engine): a reopened store sees the committed
+    generation, and the zero-copy counters show the linked chain +
+    pinned put payloads."""
+    from repro.ckpt.blockstore import make_blockstore
+    path = str(tmp_path / "store")
+    kw = dict(policy="caiti", capacity_bytes=16 << 20,
+              cache_bytes=4 << 20, n_shards=2, aio=True)
+    st = make_blockstore(path, **kw)
+    payload = np.random.default_rng(7).integers(
+        0, 256, size=150_000, dtype=np.uint8).tobytes()
+    st.put("a", payload)
+    st.put("b", b"small")
+    gen = st.commit()
+    zc = st.dev.scrub()["zerocopy"]
+    assert zc["links_submitted"] >= 1          # commit chained in-engine
+    assert zc["copies_avoided"] >= 1           # puts pinned, not staged
+    st.close()
+    st2 = make_blockstore(path, **kw)
+    assert st2.generation == gen
+    assert st2.get("a") == payload
+    assert st2.get("b") == b"small"
+    st2.close()
+
+
+# ------------------------------------------------- fused transit kernel
+# Deterministic twin of the hypothesis property in test_kernels.py (that
+# module skips wholesale when hypothesis is absent — this sweep keeps
+# the fused-kernel equivalence in tier-1 either way).
+@pytest.mark.parametrize("P,page,F,seed", [
+    (6, 8, 64, 0), (8, 16, 128, 1), (4, 32, 96, 2),
+])
+def test_fused_transit_kernel_matches_three_pass(P, page, F, seed):
+    """Fused crc+quantize+gather (one Pallas pass) vs the three-pass
+    composition: q and crc bit-identical, scales/dequant allclose, crc
+    pinned to zlib.adler32 — interpret=True AND the jitted wrappers."""
+    import zlib
+    import jax.numpy as jnp
+    from repro.kernels import (gather_quantize_crc, scatter_dequantize_crc)
+    from repro.kernels import ref
+    from repro.kernels.block_transit import (
+        gather_quantize_crc_pallas, scatter_dequantize_crc_pallas)
+
+    rng = np.random.default_rng(seed)
+    pool = jnp.asarray(rng.standard_normal((P, page, F)), jnp.float32)
+    ids = jnp.asarray(rng.permutation(P)[:3], jnp.int32)
+
+    qr, sr = ref.gather_quantize_ref(pool, ids)
+    crc_r = ref.transit_crc_ref(qr)
+    for pi, crc in zip(np.asarray(qr), crc_r):
+        assert int(crc) == zlib.adler32(pi.tobytes())
+
+    for q, sc, crc in (
+            gather_quantize_crc_pallas(pool, ids, interpret=True),
+            gather_quantize_crc(pool, ids)):
+        assert np.array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sr),
+                                   rtol=1e-6)
+        assert np.array_equal(np.asarray(crc), crc_r)
+
+    exp = ref.scatter_dequantize_ref(jnp.zeros_like(pool), ids, qr, sr)
+    for new_pool, crc in (
+            scatter_dequantize_crc_pallas(jnp.zeros_like(pool), ids,
+                                          qr, sr, interpret=True),
+            scatter_dequantize_crc(jnp.zeros_like(pool), ids, qr, sr)):
+        assert np.array_equal(np.asarray(crc), crc_r)
+        np.testing.assert_allclose(np.asarray(new_pool), np.asarray(exp),
+                                   atol=1e-6, rtol=1e-6)
+
+
+# -------------------------------------------------- sim acceptance floors
+def test_sim_zerocopy_qd8_acceptance():
+    """Registered-buffer pinning vs copy-at-submit through the virtual-
+    time engine: at qd=8 with 4 tenants the zero-copy plane must clear
+    the 1.2x CI floor (the staging memcpy serializes under the engine
+    lock; pinning removes it)."""
+    tenants = [{"name": f"t{j}", "n_ops": 400} for j in range(4)]
+    kw = dict(n_shards=4, n_lbas=65536, cache_slots=2048, n_workers=8,
+              qdepth=8)
+    copy = run_aio_sim_workload("caiti", copy_mode="copy",
+                                tenants=tenants, **kw)
+    zero = run_aio_sim_workload("caiti", copy_mode="zerocopy",
+                                tenants=tenants, **kw)
+    assert copy["counts"]["staging_copies"] == 1600
+    assert zero["counts"]["copies_avoided"] == 1600
+    assert zero["ops_s"] / copy["ops_s"] >= 1.2
+
+
+def test_sim_zerocopy_contrast_grows_with_queue_depth():
+    """The staging copy is a lock-held serial cost, so its tax grows
+    with concurrency: the zerocopy/copy ratio at qd=8 must exceed the
+    qd=1 ratio (at qd=1 there is nothing to serialize against)."""
+    tenants = [{"name": f"t{j}", "n_ops": 300} for j in range(4)]
+    kw = dict(n_shards=4, n_lbas=65536, cache_slots=2048, n_workers=8)
+    ratios = {}
+    for qd in (1, 8):
+        copy = run_aio_sim_workload("caiti", copy_mode="copy", qdepth=qd,
+                                    tenants=tenants, **kw)
+        zero = run_aio_sim_workload("caiti", copy_mode="zerocopy",
+                                    qdepth=qd, tenants=tenants, **kw)
+        ratios[qd] = zero["ops_s"] / copy["ops_s"]
+    assert ratios[8] > ratios[1] >= 1.0
+
+
+def test_sim_fused_transit_acceptance():
+    """One fused pass (crc + quantize + gather) vs the three-pass
+    composition over the same pages: >= 1.3x pages/s (CI floor), with
+    the identical PMem DMA cost on both sides — the win is pure pass
+    elimination."""
+    three = run_transit_sim_workload(n_pages=2000, fused=False)
+    fused = run_transit_sim_workload(n_pages=2000, fused=True)
+    assert three["passes_per_page"] == 3
+    assert fused["passes_per_page"] == 1
+    assert fused["pages_s"] / three["pages_s"] >= 1.3
+    assert fused["mb_s"] > three["mb_s"]
