@@ -21,7 +21,11 @@ import json
 import sys
 
 # table name in the results JSON -> minimum acceptable "speedup" value;
-# a dict value floors several keys of the same table at once
+# a dict value floors several keys of the same table at once.  A per-key
+# spec may itself be a dict to pick the direction: {"min": x} is the
+# default lower bound (throughput-style, higher is better); {"max": x}
+# is a CEILING for latency-style ratios where lower is better — e.g.
+# hedged-p99 / unhedged-p99 must stay at or below the bar
 FLOORS = {
     "volume_logbatch": 1.0,
     "volume_groupcommit": 1.0,
@@ -33,6 +37,10 @@ FLOORS = {
     # the three-pass composition — both contrasts are the tentpole's
     # reason to exist, so losing either outright fails the gate
     "volume_zerocopy": {"speedup": 1.2, "fused_speedup": 1.3},
+    # tail-latency data plane: with ONE 25x limping shard, hedged p99
+    # must be >= 2x better than unhedged (p99_frac is hedged/unhedged,
+    # lower is better) without giving up throughput
+    "volume_hedge": {"p99_frac": {"max": 0.5}, "ops_ratio": 1.0},
     # cluster replication tax: pipelined K=2 at 4 nodes must keep
     # >= 0.6x of the single-node unreplicated ops/s (the acceptance bar
     # — pipelined >= 1.5x serial fanout — lives in the sim tests)
@@ -93,18 +101,26 @@ def check(results: dict, allow_missing: bool = False) -> list[str]:
             continue
         entry = results[table]
         keyed = floor if isinstance(floor, dict) else {"speedup": floor}
-        for key, bar in keyed.items():
+        for key, spec in keyed.items():
             val = entry.get(key) if isinstance(entry, dict) else None
             if val is None:
                 problems.append(f"{table}: no {key!r} key in results")
                 continue
+            if isinstance(spec, dict):
+                ceiling = "max" in spec
+                bar = float(spec["max"] if ceiling else spec["min"])
+            else:
+                ceiling, bar = False, float(spec)
             val = float(val)
-            status = "OK" if val >= bar else "FAIL"
+            ok = val <= bar if ceiling else val >= bar
+            kind = "ceiling" if ceiling else "floor"
+            status = "OK" if ok else "FAIL"
             print(f"[check_floors] {table}: {key} {val:.2f}x "
-                  f"(floor {bar:.1f}x) {status}")
-            if val < bar:
-                problems.append(f"{table}: {key} {val:.2f}x is below the "
-                                f"{bar:.1f}x floor")
+                  f"({kind} {bar:.1f}x) {status}")
+            if not ok:
+                side = "above" if ceiling else "below"
+                problems.append(f"{table}: {key} {val:.2f}x is {side} the "
+                                f"{bar:.1f}x {kind}")
     return problems
 
 

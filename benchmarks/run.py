@@ -111,6 +111,9 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
         "volume_zerocopy": ("zero-copy data plane: pinned vs copy-at-"
                             "submit, fused vs three-pass transit (sim)",
                             lambda: volume_bench.zerocopy(n_ops=ops // 10)),
+        "volume_hedge": ("tail-latency data plane: hedged replica reads "
+                         "vs unhedged under one limping shard (sim)",
+                         lambda: volume_bench.hedge(n_ops=max(1000, ops))),
         "cluster": ("distributed cluster volume: pipelined chain "
                     "replication, placement, kill storm (sim)",
                     lambda: cluster_bench.run(n_ops=max(200, ops // 10))),

@@ -30,6 +30,11 @@ Extends the paper's single-device tables to the volume manager:
                      transit codec and a real-engine registered-pool row
                      (acceptance: >= 1.2x zerocopy at qd=8, >= 1.3x
                      fused transit)
+  --table hedge      tail-latency data plane: hedged replica reads vs
+                     unhedged with ONE 25x limping shard (fail-slow) —
+                     hedged p99 must be >= 2x better at equal or better
+                     throughput; a healthy-volume row shows the hedge
+                     is nearly free when nothing limps
 
 Primary engine: ``repro.core.sim.run_volume_sim_workload`` (deterministic
 virtual time; same cost model as fio_like.py, printed with every table).
@@ -51,6 +56,7 @@ except ImportError:                                     # direct script run
     from common import fmt_row, fmt_volume_row, run_random_writes
 
 from repro.core.sim import (CostModel, run_aio_sim_workload,  # noqa: E402
+                            run_hedge_sim_workload,
                             run_volume_sim_workload)
 
 N_LBAS = 524_288
@@ -408,6 +414,88 @@ def zerocopy(n_ops: int = OPS) -> dict:
     return out
 
 
+def hedge(n_ops: int = 4000) -> dict:
+    """ACCEPTANCE (PR 8): the tail-latency data plane.
+
+    With ONE shard limping at 25x (fail-slow: it never errors, mean
+    throughput looks healthy because only 1/n_shards of uniform reads
+    land there), hedged replica reads must bring p99 read latency to
+    <= 0.5x the unhedged p99 — i.e. >= 2x better — at equal or better
+    throughput.  ``p99_frac`` is LOWER-IS-BETTER (the first latency-
+    style ceiling in ``check_floors.py``); ``ops_ratio`` (hedged /
+    unhedged ops/s, >= 1.0) guards the equal-throughput clause.
+
+    A healthy-volume hedged row shows the hedge is nearly free when
+    nothing limps (almost no hedges fire: the delay is above healthy
+    service time).  A real-engine row runs a small threaded replicated
+    volume with one delayed shard and reports the live
+    ``Metrics.tail_path()`` counters — the fired == won + cancelled
+    balance and the scorer's limping verdict — for ``_meta``; wall time
+    on the 1-core container is informational, the virtual-time contrast
+    is what the floors gate."""
+    print("# hedged-read sweep: 4 shards, 4 clients, uniform reads, "
+          "shard 0 limping 25x (CI: p99 hedged/unhedged <= 0.5x ceiling, "
+          "ops ratio >= 1.0x floor)")
+    out = {}
+    rows = (("unhedged limping", False, 0),
+            ("hedged limping", True, 0),
+            ("hedged healthy", True, None))
+    for label, hedged, slow in rows:
+        r = run_hedge_sim_workload(n_lbas=N_LBAS, n_ops=n_ops,
+                                   hedge=hedged, slow_shard=slow)
+        c = r["counts"]
+        out[label] = {"p50_us": r["p50_us"], "p99_us": r["p99_us"],
+                      "p999_us": r["p999_us"], "ops_s": r["ops_s"],
+                      "hedges_fired": c.get("hedges_fired", 0),
+                      "hedges_won": c.get("hedges_won", 0),
+                      "hedges_cancelled": c.get("hedges_cancelled", 0)}
+        print(f"{label:18s} p50={r['p50_us']:7.2f}us p99={r['p99_us']:7.2f}us "
+              f"p99.9={r['p999_us']:7.2f}us ops/s={r['ops_s']:10.0f} "
+              f"fired={c.get('hedges_fired', 0):5d} "
+              f"won={c.get('hedges_won', 0):5d}")
+    out["p99_frac"] = (out["hedged limping"]["p99_us"]
+                       / max(out["unhedged limping"]["p99_us"], 1e-9))
+    out["ops_ratio"] = (out["hedged limping"]["ops_s"]
+                        / max(out["unhedged limping"]["ops_s"], 1e-9))
+
+    # real engine: replicated threaded volume, one shard delayed —
+    # live tail_path counters + scorer verdict (informational)
+    from repro.volume import make_volume
+    vol = make_volume("caiti", n_lbas=256, n_shards=2, replicas=2,
+                      cache_bytes=1 << 20, aio_workers=2)
+    try:
+        for i in range(16):
+            vol.write(i, bytes([i]) * vol.block_size)
+        vol.flush()
+        slow = vol.shards[0].impl           # lbas 0..15 all stripe to it
+        orig = slow.read_ex
+        def _slow_read_ex(local, out=None, **kw):
+            import time as _t
+            _t.sleep(0.002)
+            return orig(local, out=out, **kw)
+        slow.read_ex = _slow_read_ex
+        try:
+            for i in range(0, 16, 2):       # primaries on the slow shard
+                vol.hedged_read(i, delay_s=0.0005)
+        finally:
+            slow.read_ex = orig
+        tail = vol.scrub()["tail"]
+        out["engine"] = {k: tail[k] for k in
+                         ("hedges_fired", "hedges_won", "hedges_cancelled",
+                          "primaries_cancelled", "hedges_unaccounted")}
+        out["engine"]["states"] = tail["states"]
+        print(f"{'real engine':18s} fired={tail['hedges_fired']} "
+              f"won={tail['hedges_won']} "
+              f"cancelled={tail['hedges_cancelled']} "
+              f"states={tail['states']}")
+    finally:
+        vol.close()
+    print(f"-> hedged/unhedged p99 under one limping shard: "
+          f"{out['p99_frac']:.2f}x (ceiling <= 0.5x); "
+          f"throughput ratio {out['ops_ratio']:.2f}x (floor >= 1.0x)")
+    return out
+
+
 def real(n_ops: int = 2000) -> dict:
     """Threaded volume on the container (functional validation only)."""
     from repro.volume import make_volume
@@ -429,7 +517,8 @@ def real(n_ops: int = 2000) -> dict:
 TABLES = {"shards": shards, "tenants": tenants, "watermark": watermark,
           "qos": qos, "policies": policies, "readmix": readmix,
           "groupcommit": groupcommit, "logbatch": logbatch,
-          "fairness": fairness, "aio": aio, "zerocopy": zerocopy}
+          "fairness": fairness, "aio": aio, "zerocopy": zerocopy,
+          "hedge": hedge}
 
 
 def main() -> None:

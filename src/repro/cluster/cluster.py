@@ -47,9 +47,10 @@ import zlib
 
 import numpy as np
 
-from repro.core.metrics import Metrics
+from repro.core.metrics import Metrics, ShardScorer
 from repro.volume import TenantSpec, make_volume
-from repro.volume.aio import AsyncIOEngine
+from repro.volume.aio import (AsyncIOEngine, RegisteredBuf,
+                              hedged_read as _hedged_read)
 
 from .node import (ClusterError, ClusterNode, ClusterUnavailableError,
                    HeartbeatMonitor, NetLink, NodeDownError)
@@ -63,7 +64,8 @@ class ClusterConfig:
     def __init__(self, *, n_lbas: int, replication_k: int = 2,
                  chunk_blocks: int = 64, block_size: int = 4096,
                  heartbeat_timeout: float = 5.0,
-                 max_inflight: int = 16, aio_workers: int = 2) -> None:
+                 max_inflight: int = 16, aio_workers: int = 2,
+                 hedge_delay_us: float = 0.0) -> None:
         assert n_lbas >= 1 and chunk_blocks >= 1 and replication_k >= 1
         self.n_lbas = n_lbas
         self.replication_k = replication_k
@@ -72,6 +74,9 @@ class ClusterConfig:
         self.heartbeat_timeout = heartbeat_timeout
         self.max_inflight = max_inflight
         self.aio_workers = aio_workers
+        # hedged chain reads: wait this long on the primary before the
+        # next chain member (0 = auto: healthy-cohort median p99)
+        self.hedge_delay_us = hedge_delay_us
 
     @property
     def n_chunks(self) -> int:
@@ -96,6 +101,9 @@ class ClusterVolume:
         self.n_lbas = cfg.n_lbas
         self._now = now_fn or time.monotonic
         self.metrics = Metrics()
+        # fail-slow scoring: per-node p50/p99 digests over svc::node{i}
+        # (hedged chain reads + placement steering consume the verdicts)
+        self.scorer = ShardScorer(self.metrics, family="node")
         # cluster write-crc ledger — updated at ACK only (see module doc)
         self._crcs: dict[int, int] = {}
         self._chains: dict[int, list[int]] = {}
@@ -152,8 +160,11 @@ class ClusterVolume:
         it through its chained-tx journal; the ack — and the cluster
         ledger update — happen only after all K durable tails).  A write
         spanning chunks commits chunk group by chunk group, each group
-        atomic on its own chain."""
-        blocks = list(blocks)
+        atomic on its own chain.  :class:`RegisteredBuf` handles are
+        accepted anywhere a block is (the same zero-copy surface the
+        async engine pins — one code path for pooled callers)."""
+        blocks = [b.data if isinstance(b, RegisteredBuf) else b
+                  for b in blocks]
         assert blocks, "empty write"
         assert 0 <= lba and lba + len(blocks) <= self.n_lbas, \
             f"write [{lba}, {lba + len(blocks)}) out of volume range"
@@ -197,15 +208,21 @@ class ClusterVolume:
         self.metrics.bump("acked_blocks", len(blocks))
 
     def read(self, lba: int, out: np.ndarray | None = None,
-             tenant: str | None = None) -> np.ndarray:
+             tenant: str | None = None, replica: int = 0) -> np.ndarray:
         """Verified chain read with failover: walk the chain from the
         primary; a dead/partitioned member or a copy failing the cluster
         ledger crc fails over to the next.  Arbitration when nothing
         verifies mirrors ``StripedVolume._read_verified``: all live
         copies agreeing means a mid-flight write (serve quietly);
-        otherwise surface the primary-most copy and count it."""
+        otherwise surface the primary-most copy and count it.
+        ``replica=`` rotates the walk to start at that chain position —
+        the hedge path's backup leg reads the NEXT member first (the
+        full failover ladder is preserved)."""
         assert 0 <= lba < self.n_lbas
         chain = self._chain_for(lba // self.cfg.chunk_blocks)
+        if replica:
+            r = replica % len(chain)
+            chain = chain[r:] + chain[:r]
         want = self._crcs.get(lba)
         candidates: list[bytes] = []
         for pos, ni in enumerate(chain):
@@ -241,6 +258,54 @@ class ClusterVolume:
             out[:] = data
             return out
         return data
+
+    # ----------------------------------------------------------- tail latency
+    def refresh_tail_state(self) -> dict:
+        """Recompute the per-node healthy/limping/dead verdicts (dead
+        nodes are marked by the failure detector) and push the penalties
+        into placement scoring, so new chains route around a limping
+        node before it ever misses a heartbeat.  Returns the state
+        map."""
+        for n in self.nodes:
+            if not n.alive:
+                self.scorer.mark_dead(f"node{n.idx}")
+        states = self.scorer.states()
+        pens: dict[int, float] = {}
+        for member in states:
+            if member.startswith("node"):
+                try:
+                    idx = int(member[4:])
+                except ValueError:
+                    continue
+                pens[idx] = self.scorer.penalty(member)
+        before = self.placement.steered_placements
+        self.placement.set_penalties(pens)
+        delta = self.placement.steered_placements - before
+        if delta:
+            self.metrics.bump("steered_placements", delta)
+        return states
+
+    def hedge_delay(self) -> float:
+        """Seconds to wait on the chain primary before hedging to the
+        next member (``hedge_delay_us`` or auto from the scorer)."""
+        us = self.cfg.hedge_delay_us
+        if us <= 0:
+            us = self.scorer.hedge_delay_us(default_us=1000.0)
+        return max(us, 1.0) / 1e6
+
+    def hedged_read(self, lba: int, out=None, tenant: str | None = None,
+                    delay_s: float | None = None):
+        """Tail-tolerant chain read: primary first; after one hedge
+        delay the NEXT chain member races it, first completion wins and
+        the loser is cancelled (same contract as
+        ``StripedVolume.hedged_read`` — counters balance in
+        ``Metrics.tail_path()``).  Single-copy chains fall back to a
+        plain :meth:`read`."""
+        if min(self.cfg.replication_k, len(self.nodes)) < 2:
+            return self.read(lba, out=out, tenant=tenant)
+        delay = self.hedge_delay() if delay_s is None else delay_s
+        return _hedged_read(self, lba, delay_s=delay, out=out,
+                            tenant=tenant)
 
     def flush(self) -> int:
         for n in self.nodes:
@@ -296,17 +361,19 @@ class ClusterVolume:
 
     def submit(self, op: str, lba: int = 0, data=None, blocks=None,
                tenant: str | None = None, block: bool = False,
-               link_to=None, out=None):
+               link_to=None, out=None, replica: int = 0):
         return self.aio_engine().submit(op, lba=lba, data=data,
                                         blocks=blocks, tenant=tenant,
                                         block=block, link_to=link_to,
-                                        out=out)
+                                        out=out, replica=replica)
 
     def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
-                   tenant: str | None = None, link_to=None, out=None):
+                   tenant: str | None = None, link_to=None, out=None,
+                   replica: int = 0):
         return self.aio_engine().try_submit(op, lba=lba, data=data,
                                             blocks=blocks, tenant=tenant,
-                                            link_to=link_to, out=out)
+                                            link_to=link_to, out=out,
+                                            replica=replica)
 
     def register_buffers(self, n_buffers: int,
                          buf_bytes: int | None = None):
@@ -369,11 +436,16 @@ class ClusterVolume:
                         continue
                     if self._crc(node.volume.read(lba)) != want:
                         divergent += 1
+        states = self.refresh_tail_state()
         return {
             "chunks": len(chains),
             "under_replicated": under,
             "divergent_blocks": divergent,
             "per_node": self.metrics.per_node(),
+            "tail": {"states": states,
+                     "nodes": self.scorer.table(),
+                     "hedge_delay_us": round(self.hedge_delay() * 1e6, 3),
+                     **self.metrics.tail_path()},
             "placement": self.placement.stats(),
             "nodes": [{"name": n.name, "rack": n.rack, "alive": n.alive,
                        "partitioned": n.partitioned,
@@ -383,6 +455,8 @@ class ClusterVolume:
     def metrics_snapshot(self) -> dict:
         out = dict(self.metrics.snapshot()["count"])
         out["per_node_svc"] = self.metrics.per_node()
+        out["tail"] = {"states": self.scorer.states(),
+                       **self.metrics.tail_path()}
         out["chunks_mapped"] = len(self._chains)
         if self._aio is not None:
             out["aio"] = self._aio.stats()
@@ -443,6 +517,10 @@ class ReReplicator:
                 self.declared_dead.append(ni)
                 newly.append(ni)
                 cl.metrics.bump("dead_nodes_declared")
+                # fail-stop is the terminal fail-slow state: the scorer
+                # pins the node 'dead' so steering penalties survive
+                # even after its service samples age out
+                cl.scorer.mark_dead(f"node{ni}")
         return newly
 
     # --------------------------------------------------------------- repair
@@ -597,6 +675,7 @@ def make_cluster(policy: str = "caiti", *, n_lbas: int, n_nodes: int = 3,
                  heartbeat_timeout: float = 5.0, now_fn=None,
                  max_inflight: int = 16, aio_workers: int = 2,
                  read_tier_bytes: int = 0,
+                 hedge_delay_us: float = 0.0,
                  tenants: list[TenantSpec] | None = None) -> ClusterVolume:
     """Build a cluster volume: ``n_nodes`` member ``StripedVolume``s
     (each unreplicated internally — the CLUSTER provides redundancy; its
@@ -607,7 +686,8 @@ def make_cluster(policy: str = "caiti", *, n_lbas: int, n_nodes: int = 3,
     cfg = ClusterConfig(n_lbas=n_lbas, replication_k=replication_k,
                         chunk_blocks=chunk_blocks, block_size=block_size,
                         heartbeat_timeout=heartbeat_timeout,
-                        max_inflight=max_inflight, aio_workers=aio_workers)
+                        max_inflight=max_inflight, aio_workers=aio_workers,
+                        hedge_delay_us=hedge_delay_us)
     infos = [NodeInfo(f"node{i}", rack=i % max(1, racks))
              for i in range(n_nodes)]
     place = PlacementPolicy(infos, k=replication_k, policy=placement)

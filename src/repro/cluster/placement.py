@@ -68,6 +68,11 @@ class PlacementPolicy:
         self.load_weight = load_weight
         self.placed = [0] * len(self.nodes)      # blocks placed per node
         self.load = [0.0] * len(self.nodes)      # svc-ewma us per node
+        # fail-slow steering: node -> score multiplier (>= 1.0) pushed
+        # from the cluster's ShardScorer — a limping node's candidacy
+        # costs more under EVERY policy, not just 'balanced'
+        self.penalty = [1.0] * len(self.nodes)
+        self.steered_placements = 0
 
     # ------------------------------------------------------------- feedback
     def observe_load(self, node: int, svc_us: float) -> None:
@@ -75,12 +80,25 @@ class PlacementPolicy:
         as ``Metrics.observe`` so the two views agree)."""
         self.load[node] += EWMA_ALPHA * (svc_us - self.load[node])
 
+    def set_penalties(self, penalties: dict[int, float]) -> None:
+        """Install the scorer's per-node multipliers (healthy 1x,
+        limping/dead higher); missing nodes reset to 1.0."""
+        changed = 0
+        for i in range(len(self.nodes)):
+            p = max(1.0, float(penalties.get(i, 1.0)))
+            if p > 1.0 and self.penalty[i] <= 1.0:
+                changed += 1
+            self.penalty[i] = p
+        self.steered_placements += changed
+
     def _score(self, i: int) -> float:
-        """Lower is better: capacity first, load-shaded for 'balanced'."""
+        """Lower is better: capacity first, load-shaded for 'balanced',
+        limping-penalized always (a 25x-slow node should not win a chain
+        just because it is empty — it is empty BECAUSE it is slow)."""
         s = float(self.placed[i])
         if self.policy == "balanced":
             s += self.load_weight * self.load[i]
-        return s
+        return (s + 1.0) * self.penalty[i] - 1.0
 
     # ------------------------------------------------------------ assignment
     def assign(self, chunk_id: int, n_blocks: int = 0,
@@ -150,4 +168,6 @@ class PlacementPolicy:
         return {"policy": self.policy, "k": self.k,
                 "placed": list(self.placed),
                 "load_ewma_us": [round(x, 3) for x in self.load],
+                "penalty": list(self.penalty),
+                "steered_placements": self.steered_placements,
                 "balance": self.balance()}

@@ -12,7 +12,7 @@ from .bio import Bio, BioFlags, BioOp, SUCCESS, EIO, fsync_bio, preflush_bio
 from .btt import BTT
 from .cache import CaitiCache, CaitiConfig, FREE, PENDING, VALID, EVICTING
 from .device import BlockDevice, make_device, POLICIES
-from .metrics import Metrics, CATEGORIES
+from .metrics import Metrics, ShardScorer, CATEGORIES
 from .pmem import PMemSpace, LatencyModel, NO_LATENCY, SimulatedCrash
 from .policies import CoActiveCache, LRUCache, PMBD70Cache, PMBDCache
 from .transit import TransitBuffer
@@ -20,7 +20,8 @@ from .transit import TransitBuffer
 __all__ = [
     "Bio", "BioFlags", "BioOp", "SUCCESS", "EIO", "fsync_bio", "preflush_bio",
     "BTT", "CaitiCache", "CaitiConfig", "FREE", "PENDING", "VALID", "EVICTING",
-    "BlockDevice", "make_device", "POLICIES", "Metrics", "CATEGORIES",
+    "BlockDevice", "make_device", "POLICIES", "Metrics", "ShardScorer",
+    "CATEGORIES",
     "PMemSpace", "LatencyModel", "NO_LATENCY", "SimulatedCrash",
     "CoActiveCache", "LRUCache", "PMBD70Cache", "PMBDCache", "TransitBuffer",
 ]

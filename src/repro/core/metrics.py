@@ -55,6 +55,16 @@ striped volume observes ``svc::shard<i>``, the async engine
 ``scrub`` outputs surface the table: a limping shard/node (fail-slow,
 not fail-stop) shows up as one EWMA drifting away from its peers long
 before any heartbeat trips.
+
+Tail-latency layer (PR 8): :meth:`observe` additionally keeps a bounded
+ring of recent raw samples per key, so :meth:`digest` can report real
+p50/p99 latency percentiles (an EWMA hides a bimodal limping device —
+the tail is the signal).  :class:`ShardScorer` turns a digest family
+(``svc::shard*`` or ``svc::node*``) into a ``healthy``/``limping``/
+``dead`` state per member, a p99-based hedge delay, and a steering
+penalty multiplier; ``tail_path()`` summarizes the hedged-read counters
+(``hedges_fired`` must equal ``hedges_won + hedges_cancelled`` — a
+hedge loser is cancelled, never abandoned).
 """
 from __future__ import annotations
 
@@ -126,10 +136,36 @@ ZEROCOPY_COUNTERS = (
 )
 
 
+# Tail-latency path counters (PR 8) — bumped by the hedged-read and
+# slow-path-steering machinery; ``tail_path()`` summarizes them:
+#   hedges_fired         — backup reads launched after the hedge delay
+#   hedges_won           — hedges that completed before the primary
+#   hedges_cancelled     — hedge losers cancelled (primary won first)
+#   primaries_cancelled  — primary losers cancelled because the hedge won
+#   hedged_reads         — reads that armed a hedge timer (fired or not)
+#   steered_evictions    — eviction-pool drains deferred off a limping shard
+#   steered_charges      — WFQ admissions priced up on a limping shard
+#   steered_placements   — chain placements that skipped a limping node
+TAIL_COUNTERS = (
+    "hedges_fired",
+    "hedges_won",
+    "hedges_cancelled",
+    "primaries_cancelled",
+    "hedged_reads",
+    "steered_evictions",
+    "steered_charges",
+    "steered_placements",
+)
+
+
 #: EWMA smoothing for :meth:`Metrics.observe` — ~the last 10-ish
 #: observations dominate, so a shard/node turning slow moves its average
 #: within tens of ops instead of being diluted by history
 EWMA_ALPHA = 0.2
+
+#: raw samples kept per observe() key for the percentile digests — big
+#: enough for stable p99s, small enough to bound hot-path memory
+SVC_RING = 512
 
 
 class Metrics:
@@ -143,6 +179,8 @@ class Metrics:
         self.record_latencies = False
         # key -> [ewma_ns, n, max_ns] service-time summaries (observe())
         self._svc: dict[str, list] = {}
+        # key -> bounded ring of recent raw samples (ns) for percentiles
+        self._svc_ring: dict[str, list] = {}
 
     @contextmanager
     def timer(self, category: str):
@@ -183,6 +221,15 @@ class Metrics:
                 st[1] += 1
                 if ns > st[2]:
                     st[2] = ns
+            ring = self._svc_ring.get(key)
+            if ring is None:
+                self._svc_ring[key] = [ns]
+            elif len(ring) < SVC_RING:
+                ring.append(ns)
+            else:
+                # overwrite round-robin: slot by total count keeps the
+                # ring a uniform window over the most recent SVC_RING
+                ring[self._svc[key][1] % SVC_RING] = ns
 
     def per_node(self, prefix: str = "svc") -> dict[str, dict]:
         """Service-time summaries observed under ``f"{prefix}::..."``:
@@ -193,6 +240,28 @@ class Metrics:
             return {k[len(pre):]: {"ewma_us": st[0] / 1e3, "n": st[1],
                                    "max_us": st[2] / 1e3}
                     for k, st in self._svc.items() if k.startswith(pre)}
+
+    def digest(self, prefix: str = "svc") -> dict[str, dict]:
+        """Latency digests for a key family: suffix -> ``{"ewma_us",
+        "n", "max_us", "p50_us", "p99_us"}``.  Percentiles come from the
+        bounded raw-sample ring (an EWMA averages a bimodal limping
+        device into invisibility; the p99 is the fail-slow signal)."""
+        pre = prefix + "::"
+        with self._lock:
+            rows = {k[len(pre):]: (list(st), sorted(self._svc_ring.get(k, ())))
+                    for k, st in self._svc.items() if k.startswith(pre)}
+        out = {}
+        for suffix, (st, xs) in rows.items():
+            row = {"ewma_us": st[0] / 1e3, "n": st[1], "max_us": st[2] / 1e3}
+            for name, p in (("p50_us", 50.0), ("p99_us", 99.0)):
+                if xs:
+                    idx = min(len(xs) - 1,
+                              int(round(p / 100.0 * (len(xs) - 1))))
+                    row[name] = xs[idx] / 1e3
+                else:
+                    row[name] = 0.0
+            out[suffix] = row
+        return out
 
     # -- report helpers -----------------------------------------------------
     def breakdown(self) -> dict[str, float]:
@@ -235,6 +304,19 @@ class Metrics:
         out["pin_rate"] = out["copies_avoided"] / moved if moved else 0.0
         return out
 
+    def tail_path(self) -> dict[str, float]:
+        """Tail-latency summary: hedged-read + steering counters, the
+        hedge win rate, and ``hedges_unaccounted`` — every fired hedge
+        must end won or cancelled (0 when losers are cleaned up, the
+        acceptance invariant for the hedged read path)."""
+        with self._lock:
+            out = {c: self.count.get(c, 0) for c in TAIL_COUNTERS}
+        out["hedge_win_rate"] = (out["hedges_won"] / out["hedges_fired"]
+                                 if out["hedges_fired"] else 0.0)
+        out["hedges_unaccounted"] = (out["hedges_fired"] - out["hedges_won"]
+                                     - out["hedges_cancelled"])
+        return out
+
     def per_tenant(self, prefix: str) -> dict[str, int]:
         """Collect per-tenant counters bumped as ``f"{prefix}::{t}"``
         (e.g. ``per_tenant('wfq_vbytes')`` -> tenant -> priced bytes)."""
@@ -269,3 +351,115 @@ class Metrics:
             self.count.clear()
             self.latencies_ns.clear()
             self._svc.clear()
+            self._svc_ring.clear()
+
+
+class ShardScorer:
+    """Fail-slow detector over one :meth:`Metrics.digest` family.
+
+    Classifies every member of a service-time key family
+    (``svc::shard*`` / ``svc::node*``) against its PEERS — the fail-slow
+    literature's "limplock" signature is one device drifting 10–100x off
+    the cohort while still completing everything, so absolute thresholds
+    lose the moment the workload shifts but a peer-relative ratio does
+    not:
+
+      ``healthy``   p99 < ``limping_ratio`` x the peer-median p50
+      ``limping``   p99 >= that bar but below ``dead_ratio`` x
+      ``dead``      p99 >= ``dead_ratio`` x the peer-median p50, or the
+                    member was explicitly marked (heartbeat integration)
+
+    The scorer also derives the two control outputs the data plane
+    steers by: :meth:`hedge_delay_us` — the healthy-cohort p99, the
+    classic hedged-request trigger (fire the backup only after the
+    request has outlived what a healthy replica would take) — and
+    :meth:`penalty` — a charge/placement multiplier (1.0 healthy,
+    ``limping_penalty`` limping, ``dead_penalty`` dead) consumed by the
+    WFQ pricing, the eviction pool and the placement policy.
+    """
+
+    def __init__(self, metrics: "Metrics", family: str = "shard", *,
+                 prefix: str = "svc", limping_ratio: float = 4.0,
+                 dead_ratio: float = 200.0, min_samples: int = 8,
+                 limping_penalty: float = 4.0,
+                 dead_penalty: float = 64.0) -> None:
+        self.metrics = metrics
+        self.family = family
+        self.prefix = prefix
+        self.limping_ratio = limping_ratio
+        self.dead_ratio = dead_ratio
+        self.min_samples = min_samples
+        self.limping_penalty = limping_penalty
+        self.dead_penalty = dead_penalty
+        self._marked_dead: set[str] = set()
+
+    def _rows(self) -> dict[str, dict]:
+        dig = self.metrics.digest(self.prefix)
+        return {k: v for k, v in dig.items() if k.startswith(self.family)}
+
+    def mark_dead(self, member: str) -> None:
+        """Heartbeat/fail-stop override: force ``member`` to ``dead``."""
+        self._marked_dead.add(member)
+
+    def clear_dead(self, member: str) -> None:
+        self._marked_dead.discard(member)
+
+    def table(self) -> dict[str, dict]:
+        """Digest rows + a ``state`` per member (the scrub surface)."""
+        rows = self._rows()
+        ref = self._peer_median_p50(rows)
+        out = {}
+        for k, row in sorted(rows.items()):
+            row = dict(row)
+            row["state"] = self._state(k, row, ref)
+            out[k] = row
+        return out
+
+    def states(self) -> dict[str, str]:
+        return {k: row["state"] for k, row in self.table().items()}
+
+    def limping(self) -> set[str]:
+        """Members to steer around (limping OR dead)."""
+        return {k for k, s in self.states().items() if s != "healthy"}
+
+    def penalty(self, member: str) -> float:
+        state = self.states().get(member, "healthy")
+        if state == "dead":
+            return self.dead_penalty
+        if state == "limping":
+            return self.limping_penalty
+        return 1.0
+
+    def hedge_delay_us(self, default_us: float = 0.0) -> float:
+        """p99 of the healthy cohort — hedge a replicated read only once
+        it has outlived what a healthy member would take."""
+        rows = self._rows()
+        ref = self._peer_median_p50(rows)
+        healthy = sorted(row["p99_us"] for k, row in rows.items()
+                        if self._state(k, row, ref) == "healthy"
+                        and row["n"] >= self.min_samples)
+        if not healthy:
+            return default_us
+        return healthy[len(healthy) // 2]
+
+    def _peer_median_p50(self, rows: dict[str, dict]) -> float:
+        xs = sorted(row["p50_us"] for row in rows.values()
+                    if row["n"] >= self.min_samples and row["p50_us"] > 0)
+        if not xs:
+            return 0.0
+        # LOWER median: with an even cohort (2 replicas is the common
+        # case) the upper median would let a slow member become its own
+        # reference and classify itself healthy
+        return xs[(len(xs) - 1) // 2]
+
+    def _state(self, member: str, row: dict, ref: float) -> str:
+        if member in self._marked_dead:
+            return "dead"
+        if ref <= 0 or row["n"] < self.min_samples:
+            return "healthy"          # not enough evidence to steer yet
+        ratio = row["p99_us"] / ref
+        if ratio >= self.dead_ratio:
+            return "dead"
+        if ratio >= self.limping_ratio:
+            return "limping"
+        return "healthy"

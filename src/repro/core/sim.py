@@ -82,16 +82,23 @@ class Bank:
 
 
 class Media:
-    """The interleaved PMem DIMM set — the shared bandwidth bottleneck."""
+    """The interleaved PMem DIMM set — the shared bandwidth bottleneck.
+
+    ``scale`` is the fail-slow injection knob: a limping device serves
+    every request ``scale`` times slower (media-level limplock — the
+    DIMM set still completes everything, it just takes 10-100x longer),
+    which is exactly the failure mode hedged reads exist for.
+    """
 
     def __init__(self, cost: CostModel) -> None:
         self.banks = [Bank() for _ in range(cost.n_banks)]
         self._rr = 0
+        self.scale = 1.0               # fail-slow multiplier (1.0 = healthy)
 
     def write(self, t: float, dur: float) -> float:
         """Serve one block write; returns completion time."""
         self._rr = (self._rr + 1) % len(self.banks)
-        return self.banks[self._rr].serve(t, dur)
+        return self.banks[self._rr].serve(t, dur * self.scale)
 
     def earliest_free(self) -> float:
         return min(b.free_at for b in self.banks)
@@ -696,12 +703,20 @@ class SimVolume:
                  commit_window_us: float = 0.0,
                  log_window_us: float = 0.0,
                  journal_span: int = 8,
-                 aio_workers: int = 0) -> None:
+                 aio_workers: int = 0,
+                 slow_shard: int | None = None,
+                 slow_factor: float = 25.0) -> None:
         self.policy = policy
         self.cost = cost
         self.n_shards = n_shards
         self.stripe_blocks = stripe_blocks
         self.medias = [Media(cost) for _ in range(n_shards)]
+        # fail-slow injection: one shard's whole DIMM set limps at
+        # slow_factor x service time (it never fails — the throughput
+        # counters look healthy, only the tail collapses)
+        self.slow_shard = slow_shard
+        if slow_shard is not None:
+            self.medias[slow_shard].scale = slow_factor
         self.read_tier = SimReadTier(tier_slots) if tier_slots > 0 else None
         self.degraded_every = degraded_every
         self._backend_reads = 0
@@ -797,6 +812,41 @@ class SimVolume:
             end = self.medias[replica_shard].write(
                 end + self.cost.meta, self.cost.btt_read())
         return end, "backend"
+
+    # ------------------------------------------------------ hedged reads
+    def read_replica(self, t: float, lba: int, replica: int = 1) -> float:
+        """Backend read of ``lba``'s replica copy on the rotated shard —
+        the hedge leg.  No tier interaction: the hedge goes straight to
+        the replica's media banks (the threaded engine submits the hedge
+        ticket without ``out=`` for the same reason)."""
+        shard, _local = self._map(lba)
+        rshard = (shard + replica) % self.n_shards
+        self.vcounts["replica_reads"] += 1
+        return self.medias[rshard].write(t, self.cost.btt_read())
+
+    def hedged_read(self, t: float, lba: int,
+                    delay_us: float) -> tuple[float, str]:
+        """Virtual-time hedged read, mirroring the threaded
+        ``StripedVolume.hedged_read`` counter semantics exactly: the
+        primary leg is issued at ``t``; if it has not completed within
+        ``delay_us`` the replica leg fires at ``t + delay_us`` and the
+        FIRST completion is served.  A hedge retires as ``hedges_won``
+        iff its result is served, else ``hedges_cancelled`` — so
+        ``hedges_fired == hedges_won + hedges_cancelled`` holds here the
+        same way ``Metrics.tail_path()`` asserts it.  The loser's media
+        time is NOT clawed back: cancellation frees the caller, not bank
+        time already scheduled (matching the engine, where a discarded
+        in-flight read still drains on its worker)."""
+        end_p, _src = self.read_ex(t, lba)
+        if end_p - t <= delay_us:
+            return end_p, "primary"          # fast path: no hedge fired
+        self.vcounts["hedges_fired"] += 1
+        end_h = self.read_replica(t + delay_us, lba)
+        if end_h < end_p:
+            self.vcounts["hedges_won"] += 1
+            return end_h, "hedge"
+        self.vcounts["hedges_cancelled"] += 1
+        return end_p, "primary"
 
     # ------------------------------------------------------ batched log
     def _issue_log_writes(self, start: float, n_writes: int) -> float:
@@ -1335,6 +1385,84 @@ def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         "agg_mb_s": total_ops * blocks_per_op * bs / max(t_done, 1e-9),
         "counts": counts,
         "per_tenant": per_tenant,
+    }
+
+
+def run_hedge_sim_workload(policy: str = "btt", *, n_shards: int = 4,
+                           n_lbas: int, n_clients: int = 4,
+                           n_ops: int = 4000, hedge: bool = True,
+                           hedge_delay_us: float | None = None,
+                           slow_shard: int | None = 0,
+                           slow_factor: float = 25.0,
+                           stripe_blocks: int = 64,
+                           cache_slots: int = 64, seed: int = 0,
+                           cost: CostModel | None = None) -> dict:
+    """Closed-loop read workload against a volume with ONE limping shard
+    — the tail-latency contrast for ``benchmarks/volume_bench.py --table
+    hedge``.
+
+    ``slow_shard``'s media serves every request ``slow_factor`` x slower
+    (fail-slow: nothing errors, nothing times out — mean throughput
+    looks fine because only ``1/n_shards`` of uniform reads land there,
+    but p99 collapses to the limping device's service time).  Each
+    client is one serial core issuing uniform-random reads back to back;
+    with ``hedge=True`` every read goes through
+    :meth:`SimVolume.hedged_read` — the replica leg fires after
+    ``hedge_delay_us`` of virtual time and the first completion wins.
+
+    The default hedge delay is ``3 x btt_read()`` — a stand-in for the
+    threaded scorer's healthy-cohort-median-p99 delay: comfortably above
+    an unqueued healthy read, far below the limping shard's service
+    time, so healthy-shard reads almost never hedge and limping-shard
+    reads always escape.  Deterministic in virtual time; the hedged
+    variant's p99 vs the unhedged one is the acceptance contrast (>= 2x
+    at 25x limping, gated by ``check_floors.py``)."""
+    cost = cost or CostModel()
+    vol = SimVolume(policy, cost, n_shards=n_shards,
+                    cache_slots=cache_slots, stripe_blocks=stripe_blocks,
+                    slow_shard=slow_shard, slow_factor=slow_factor)
+    delay = (3.0 * cost.btt_read() if hedge_delay_us is None
+             else float(hedge_delay_us))
+    rng = np.random.default_rng(seed)
+    lbas = rng.integers(0, n_lbas, size=n_ops)
+    t_free = [0.0] * max(1, n_clients)
+    m = SimMetrics()
+    slow_reads = 0
+    stack = cost.bio_stack               # qdepth=1: full per-op stack cost
+    for k in range(n_ops):
+        j = min(range(len(t_free)), key=lambda i: t_free[i])
+        arrive = t_free[j]
+        lba = int(lbas[k])
+        if slow_shard is not None and vol._map(lba)[0] == slow_shard:
+            slow_reads += 1
+        if hedge:
+            done, _src = vol.hedged_read(arrive + stack, lba, delay)
+        else:
+            done = vol.read(arrive + stack, lba)
+        m.lat(arrive, done)
+        t_free[j] = done
+    t_done = max(t_free)
+    counts = vol.counts()
+    counts["slow_shard_reads"] = slow_reads
+    fired = counts.get("hedges_fired", 0)
+    won = counts.get("hedges_won", 0)
+    cancelled = counts.get("hedges_cancelled", 0)
+    assert fired == won + cancelled, (fired, won, cancelled)
+    return {
+        "policy": policy,
+        "n_shards": n_shards,
+        "hedge": hedge,
+        "hedge_delay_us": round(delay, 3),
+        "slow_shard": slow_shard,
+        "slow_factor": slow_factor if slow_shard is not None else 1.0,
+        "n_ops": n_ops,
+        "makespan_us": t_done,
+        "ops_s": n_ops / max(t_done / 1e6, 1e-9),
+        "mean_us": m.mean(),
+        "p50_us": m.pct(50),
+        "p99_us": m.pct(99),
+        "p999_us": m.pct(99.9),
+        "counts": counts,
     }
 
 

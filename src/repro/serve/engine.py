@@ -194,14 +194,27 @@ class AsyncRequestLog:
     capped at the device's ``max_atomic_write_blocks()`` so a
     multi-block append stays whole-record atomic everywhere (on a
     cluster that bound is one placement chunk — a record spanning
-    chunks would commit chain by chain)."""
+    chunks would commit chain by chain).
+
+    ``registered_buffers > 0`` acquires a :class:`BufferRegistry` pool
+    on the volume's engine and appends through it: each record's blocks
+    are filled into pinned pool buffers and the HANDLES ride the ticket
+    — the engine never snapshots the payload under its lock, and the
+    buffers release back to the pool at completion (success, failure or
+    cancel).  This is the same zero-copy discipline the checkpoint
+    blockstore's commit path uses, extended to the serving plane's
+    ``write_multi`` block lists."""
 
     def __init__(self, volume, *, base_lba: int = 0,
                  capacity_blocks: int | None = None,
-                 tenant: str | None = None) -> None:
+                 tenant: str | None = None,
+                 registered_buffers: int = 0) -> None:
         self.vol = volume
         self.tenant = tenant
         self.block_size = volume.block_size
+        self._reg = (volume.register_buffers(registered_buffers)
+                     if registered_buffers > 0
+                     and hasattr(volume, "register_buffers") else None)
         self._max_rec = (volume.max_atomic_write_blocks()
                          if hasattr(volume, "max_atomic_write_blocks")
                          else None)
@@ -237,6 +250,15 @@ class AsyncRequestLog:
         payload = len(raw).to_bytes(4, "little") + raw
         blocks = [payload[i:i + bs].ljust(bs, b"\x00")
                   for i in range(0, len(payload), bs)]
+        if self._reg is not None:
+            # zero-copy: fill pool buffers OUTSIDE the engine lock and
+            # submit the pinned handles; completion releases them
+            regs = []
+            for chunk in blocks:
+                buf = self._reg.acquire()
+                buf.data[:len(chunk)] = np.frombuffer(chunk, np.uint8)
+                regs.append(buf)
+            blocks = regs
         # block=True: a retirement burst deeper than the engine's
         # in-flight window waits its turn (the one stall this log
         # accepts) — a record is never silently dropped

@@ -28,7 +28,14 @@ all three behind one object that ``CaitiCache``, ``StripedVolume``,
     cache or read-tier hit is a DRAM copy, not a PMem round trip, so it
     is charged ``tier_hit_cost_frac`` of its size (default 1/8); only
     backend reads pay full price.  A tier-hot tenant therefore is not
-    throttled like a PMem-bound one (ROADMAP follow-on).
+    throttled like a PMem-bound one (ROADMAP follow-on);
+  * **limping-shard steering** — ``set_shard_penalties`` installs the
+    :class:`~repro.core.metrics.ShardScorer`'s per-shard price
+    multipliers (healthy 1x, limping/dead higher), and ``op_charge``
+    applies them when the caller tags the op with its target ``shard=``:
+    work headed for a fail-slow device costs MORE virtual time, so the
+    WFQ gate naturally schedules around the limper instead of feeding
+    the queue that is already 25x slow.
 
 The object is deliberately dumb and lock-cheap: every hook is O(1) under
 one small lock, safe to call from foreground read/write paths and from
@@ -117,6 +124,23 @@ class AdmissionPolicy:
         self._detector = ScanDetector(max_streams=max_streams)
         self._lock = threading.Lock()
         self.scan_fill_denials = 0
+        # limping-shard steering: shard -> price multiplier (>= 1.0),
+        # refreshed from the ShardScorer by the volume's tail-state pass
+        self._shard_penalty: dict[int, float] = {}
+        self.steered_charges = 0
+
+    # -------------------------------------------------- fail-slow steering
+    def set_shard_penalties(self, penalties: dict[int, float]) -> None:
+        """Install the scorer's per-shard price multipliers (1.0 =
+        healthy; entries at 1.0 are dropped so the hot path dict stays
+        tiny)."""
+        with self._lock:
+            self._shard_penalty = {s: p for s, p in penalties.items()
+                                   if p > 1.0}
+
+    def shard_penalty(self, shard) -> float:
+        with self._lock:
+            return self._shard_penalty.get(shard, 1.0)
 
     # ------------------------------------------------------- write bypass
     def should_bypass_write(self) -> bool:
@@ -181,7 +205,8 @@ class AdmissionPolicy:
     def write_charge(self, nbytes: int) -> int:
         return nbytes
 
-    def op_charge(self, nbytes: int, op: str, tier: str | None = None) -> int:
+    def op_charge(self, nbytes: int, op: str, tier: str | None = None,
+                  shard=None) -> int:
         """Virtual-time price of one op for the tier-aware WFQ gate.
 
         Reads are priced like :meth:`read_charge` by their PROBED tier
@@ -193,14 +218,28 @@ class AdmissionPolicy:
         read that cost MORE than its tag charges the remainder via
         ``WFQGate.charge``; the rare cheaper-than-tagged read (a fill
         landed mid-flight) keeps its conservative price.  Writes
-        (including batched ``log`` flushes) pay full byte price."""
+        (including batched ``log`` flushes) pay full byte price.
+
+        ``shard=`` tags the op with its target device: an op headed for
+        a limping shard is priced UP by the installed penalty
+        multiplier (fail-slow steering — see module docstring)."""
         if op == "read":
-            return self.read_charge(nbytes, tier or "backend")
-        return self.write_charge(nbytes)
+            cost = self.read_charge(nbytes, tier or "backend")
+        else:
+            cost = self.write_charge(nbytes)
+        if shard is not None and self._shard_penalty:
+            with self._lock:
+                pen = self._shard_penalty.get(shard, 1.0)
+            if pen > 1.0:
+                self.steered_charges += 1
+                cost = int(cost * pen)
+        return cost
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
         return {"scan_fill_denials": self.scan_fill_denials,
                 "scan_threshold": self.scan_threshold,
                 "watermark_slots": self.watermark_slots,
-                "tier_hit_cost_frac": self.tier_hit_cost_frac}
+                "tier_hit_cost_frac": self.tier_hit_cost_frac,
+                "shard_penalties": dict(self._shard_penalty),
+                "steered_charges": self.steered_charges}

@@ -259,8 +259,8 @@ class Ticket:
     refused submit)."""
 
     __slots__ = ("tid", "seq", "op", "lba", "tenant", "state", "value",
-                 "error", "link_to", "link_depth", "out", "_bufs",
-                 "_engine")
+                 "error", "link_to", "link_depth", "out", "replica",
+                 "_bufs", "_discard", "_engine")
 
     def __init__(self, tid: int, seq: int, op: str, lba: int,
                  tenant, engine) -> None:
@@ -275,7 +275,9 @@ class Ticket:
         self.link_to: "Ticket | None" = None   # SQE chain parent
         self.link_depth = 0                    # hops from the chain head
         self.out = None                        # read landing buffer
+        self.replica = 0                       # hedge: which copy to read
         self._bufs: list = []                  # pinned registered buffers
+        self._discard = False                  # cancelled while RUNNING
         self._engine = engine
 
     @property
@@ -370,7 +372,7 @@ class AsyncIOEngine:
     # ------------------------------------------------------------ submission
     def submit(self, op: str, lba: int = 0, data=None, blocks=None,
                tenant=None, block: bool = False, link_to: Ticket | None = None,
-               out=None) -> Ticket:
+               out=None, replica: int = 0) -> Ticket:
         """Queue one op; returns its ticket immediately.  NEVER raises
         for per-op conditions: a refused submit (closed engine, tenant
         over its in-flight bound, unknown op) comes back as an
@@ -387,11 +389,14 @@ class AsyncIOEngine:
         (IO_LINK): it dispatches only after the parent completes OK and
         fails with :class:`LinkCancelledError` if the parent fails.
         ``out=`` (reads) lands the data directly in the caller's array /
-        :class:`RegisteredBuf` — the completion value IS that buffer."""
+        :class:`RegisteredBuf` — the completion value IS that buffer.
+        ``replica=`` (reads) routes the op to that copy of the block —
+        the hedge path reads the replica while the primary is in
+        flight."""
         while True:
             t = self._submit_once(op, lba, data, blocks, tenant,
                                   count_refusal=not block,
-                                  link_to=link_to, out=out)
+                                  link_to=link_to, out=out, replica=replica)
             if not (block and t.state == DONE
                     and isinstance(t.error, BackpressureError)):
                 return t
@@ -406,13 +411,14 @@ class AsyncIOEngine:
 
     def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
                    tenant=None, link_to: Ticket | None = None,
-                   out=None) -> Ticket | None:
+                   out=None, replica: int = 0) -> Ticket | None:
         """Non-blocking window probe: returns None — without counting a
         failure — when the tenant is at its in-flight bound, the ticket
         otherwise.  Flow-control probes (the blockstore's restore pump)
         must not pollute the per-ticket failure stats."""
         t = self._submit_once(op, lba, data, blocks, tenant,
-                              count_refusal=False, link_to=link_to, out=out)
+                              count_refusal=False, link_to=link_to, out=out,
+                              replica=replica)
         if t.state == DONE and isinstance(t.error, BackpressureError):
             return None
         return t
@@ -456,10 +462,11 @@ class AsyncIOEngine:
 
     def _submit_once(self, op, lba, data, blocks, tenant,
                      count_refusal: bool = True, link_to=None,
-                     out=None) -> Ticket:
+                     out=None, replica: int = 0) -> Ticket:
         with self._cond:
             t = Ticket(next(self._tids), next(self._seqs), op, lba,
                        tenant, self)
+            t.replica = replica
             err = None
             if op not in _OPS:
                 err = SubmitError(f"unknown op {op!r}")
@@ -540,7 +547,16 @@ class AsyncIOEngine:
     def cancel(self, ticket: Ticket) -> bool:
         """Cancel a still-queued ticket: it completes on the ring with
         :class:`CancelledError`.  Returns False once dispatched (an op
-        already on its way to the media cannot be recalled).
+        already on its way to the media cannot be recalled) — EXCEPT a
+        dispatched READ, which is side-effect-free: cancelling a RUNNING
+        read marks it discarded, its result is dropped (an ``out=``
+        landing target is never written — the landing copy happens under
+        the engine lock at completion and checks the discard flag, so a
+        cancelled read can never leave partial data in the caller's
+        array), and it still completes on the ring exactly once, with
+        :class:`CancelledError`.  This is the hedge-loser path: the
+        slow replica's read is recalled whether or not it has already
+        reached the media.
 
         A cancelled mid-chain ticket cascades: every linked dependent
         completes with :class:`LinkCancelledError`, and ALL registered
@@ -548,6 +564,10 @@ class AsyncIOEngine:
         the pool from the same completion path — a cancel landing
         between submit and poll can never leak a pinned buffer."""
         with self._cond:
+            if ticket.state == RUNNING and ticket.op == "read" \
+                    and ticket.seq in self._open:
+                ticket._discard = True      # _finish_locked converts the
+                return True                 # completion to CancelledError
             if ticket.state != QUEUED or ticket.seq not in self._open:
                 return False
             sq = self._sqs.get(ticket.tenant)
@@ -588,15 +608,19 @@ class AsyncIOEngine:
                     except ValueError:
                         pass             # already polled
                     return ticket
+            # never oversleep the caller's deadline: a hedge delay is
+            # routinely far below the 50 ms poll granularity
+            step = 0.05 if deadline is None \
+                else max(1e-4, min(0.05, deadline - time.monotonic()))
             if self.inline:
                 if self._run_inline(1) == 0:
                     with self._cond:     # head blocked on a drain
                         if ticket.state != DONE:    # callback: let the
-                            self._cond.wait(timeout=0.05)   # pool run
+                            self._cond.wait(timeout=step)   # pool run
             else:
                 with self._cond:
                     if ticket.state != DONE:
-                        self._cond.wait(timeout=0.05)
+                        self._cond.wait(timeout=step)
             if deadline is not None and time.monotonic() >= deadline:
                 with self._cond:
                     if ticket.state == DONE:     # completed AT the
@@ -608,6 +632,53 @@ class AsyncIOEngine:
                     raise TimeoutError(
                         f"ticket {ticket.tid} still "
                         f"{('queued', 'running', 'done')[ticket.state]}")
+
+    def wait_any(self, tickets, timeout: float | None = None) -> Ticket:
+        """Block until ANY of ``tickets`` completes; returns the first
+        one found DONE (consuming its CQE, like ``wait``).  This is the
+        hedged-read race: wait on {primary, hedge}, take the winner,
+        cancel the loser.  In deterministic mode queued ops execute one
+        at a time in submission order, so the primary (older seq) always
+        races first — replayable like every other inline schedule."""
+        tickets = list(tickets)
+        assert tickets, "wait_any needs at least one ticket"
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def first_done_locked():
+            for t in tickets:
+                if t.state == DONE:
+                    try:
+                        self._cq.remove(t)
+                    except ValueError:
+                        pass         # already polled
+                    return t
+            return None
+
+        while True:
+            with self._cond:
+                t = first_done_locked()
+                if t is not None:
+                    return t
+            step = 0.05 if deadline is None \
+                else max(1e-4, min(0.05, deadline - time.monotonic()))
+            if self.inline:
+                if self._run_inline(1) == 0:
+                    with self._cond:
+                        t = first_done_locked()
+                        if t is not None:
+                            return t
+                        self._cond.wait(timeout=step)
+            else:
+                with self._cond:
+                    if all(t.state != DONE for t in tickets):
+                        self._cond.wait(timeout=step)
+            if deadline is not None and time.monotonic() >= deadline:
+                with self._cond:
+                    t = first_done_locked()
+                    if t is not None:
+                        return t
+                    raise TimeoutError(
+                        f"none of {len(tickets)} tickets completed")
 
     def drain(self, timeout: float | None = None) -> None:
         """Wait for every submitted ticket to complete."""
@@ -722,31 +793,50 @@ class AsyncIOEngine:
             return vol.write_multi(t.lba, [self._payload(b) for b in blocks],
                                    tenant=t.tenant)
         if t.op == "read":
+            # hedge routing: replica=N reads the Nth copy (striped
+            # volume) / starts the chain walk at position N (cluster)
+            kw = {"tenant": t.tenant}
+            if t.replica:
+                kw["replica"] = t.replica
             if t.out is None:
-                return vol.read(t.lba, tenant=t.tenant)
-            # zero-copy landing: the data arrives in the CALLER's array
-            # (the device stack fills ``out`` in place all the way down)
-            # and the completion value is the caller's own buffer — no
-            # post-poll copy out of the ring
+                return vol.read(t.lba, **kw)
+            # zero-copy landing: the device stack fills an engine-held
+            # scratch in place, then ONE landing memcpy into the
+            # CALLER's array happens under the engine lock at the end of
+            # the op and checks the discard flag first — a read
+            # cancelled in flight (a hedge loser) can never leave
+            # partial data in the caller's buffer, and the completion
+            # value is still the caller's own buffer (no post-poll copy)
             arr = self._payload(t.out)
             bs = getattr(vol, "block_size", None)
             if isinstance(arr, np.ndarray) and arr.size == bs:
+                scratch = np.empty_like(arr)
                 try:
-                    vol.read(t.lba, out=arr, tenant=t.tenant)
-                    return t.out
+                    vol.read(t.lba, out=scratch, **kw)
+                    return self._land_out_locked_copy(t, arr, scratch)
                 except TypeError:    # volume without out= plumbing
                     pass
-            val = vol.read(t.lba, tenant=t.tenant)
+            val = vol.read(t.lba, **kw)
             src = val.view(np.uint8).reshape(-1) \
                 if isinstance(val, np.ndarray) \
                 else np.frombuffer(memoryview(val), dtype=np.uint8)
-            n = min(arr.size, src.size)
-            arr[:n] = src[:n]
-            return t.out
+            return self._land_out_locked_copy(t, arr, src)
         if t.op == "fsync":
             return vol.fsync()       # rides the GroupCommitter leader
         assert t.op == "flush"
         return self._flush_async(t)
+
+    def _land_out_locked_copy(self, t: Ticket, arr, src):
+        """Atomic ``out=`` landing: the caller's array is written in one
+        memcpy under the engine lock, and ONLY if the ticket has not
+        been discarded — cancel() takes the same lock, so the caller
+        observes either the full block or an untouched buffer, never a
+        torn landing."""
+        with self._cond:
+            if not t._discard:
+                n = min(arr.size, src.size)
+                arr[:n] = src[:n]
+        return t.out
 
     def _flush_async(self, t: Ticket):
         """WBQ-drain barrier without parking a worker: register one-shot
@@ -780,6 +870,11 @@ class AsyncIOEngine:
 
     # ------------------------------------------------------------ accounting
     def _finish_locked(self, t: Ticket, value=None, error=None) -> None:
+        if t._discard and not isinstance(error, CancelledError):
+            # cancelled while RUNNING (hedge loser): the result — value
+            # OR device error — is dropped and the one CQE says cancelled
+            value, error = None, CancelledError(
+                "cancelled in flight (discarded result)")
         t.value = value
         t.error = error
         t.state = DONE
@@ -872,3 +967,71 @@ class AsyncIOEngine:
             self._cond.notify_all()
         for w in self._workers:
             w.join(timeout=5.0)
+
+
+def hedged_read(vol, lba: int, *, delay_s: float, out=None, tenant=None,
+                replica: int = 1):
+    """Tail-tolerant replicated read over ``vol``'s async engine (shared
+    by ``StripedVolume.hedged_read`` and ``ClusterVolume.hedged_read``):
+    submit the primary read, wait ``delay_s``; if it has not completed,
+    fire the SAME read against copy ``replica`` and take the first
+    completion.  The loser is cancelled through the per-ticket cancel
+    path — a QUEUED loser never dispatches, a RUNNING loser is
+    discarded (its ``out=`` landing suppressed), and either way its
+    pinned registered buffers go back to the pool from the completion
+    path.  A winner that FAILED (fail-stop, not fail-slow) settles the
+    other leg and serves it instead, so hedging subsumes failover.
+
+    Counter contract (``Metrics.tail_path()``): every fired hedge
+    retires as exactly ONE of ``hedges_won`` (the hedge's result was
+    served) or ``hedges_cancelled`` (recalled, raced out by the primary,
+    or failed) — ``hedges_fired == hedges_won + hedges_cancelled``."""
+    eng = vol.aio_engine()
+    m = vol.metrics
+    m.bump("hedged_reads")
+    primary = eng.submit("read", lba, tenant=tenant, out=out)
+    try:
+        eng.wait(primary, timeout=delay_s)
+    except TimeoutError:
+        pass
+    if primary.done and primary.error is None:
+        return primary.value          # fast path: no hedge fired
+    hedge = eng.submit("read", lba, tenant=tenant, replica=replica)
+    m.bump("hedges_fired")
+    winner = eng.wait_any([primary, hedge])
+    loser = hedge if winner is primary else primary
+    if winner.error is not None:
+        # the winner leg failed outright — settle the other leg and
+        # serve it (fail-stop failover riding the hedge machinery)
+        eng.wait(loser)
+        winner, loser = loser, winner
+    elif not eng.cancel(loser):
+        # both-complete race: the loser finished before the cancel
+        # reached it — consume its one CQE (never a double completion)
+        eng.wait(loser)
+    else:
+        if loser is primary:
+            m.bump("primaries_cancelled")
+        if loser.done:
+            # QUEUED-cancel completes immediately: consume the CQE so
+            # the shared ring is not littered.  A RUNNING (discarded)
+            # loser completes later — its one CancelledError CQE drains
+            # on a normal poll; we never block on the slow leg
+            eng.wait(loser)
+    m.bump("hedges_won" if winner is hedge else "hedges_cancelled")
+    if winner.error is not None:
+        raise winner.error
+    if winner is hedge and out is not None:
+        # the hedge leg is submitted WITHOUT out= (two tickets must
+        # never land the same caller array); a hedge win copies once
+        # here — the cancelled primary's discard flag guarantees it
+        # cannot touch the buffer afterwards
+        arr = out.data if isinstance(out, RegisteredBuf) else out
+        src = winner.value
+        src = src.view(np.uint8).reshape(-1) \
+            if isinstance(src, np.ndarray) \
+            else np.frombuffer(memoryview(src), dtype=np.uint8)
+        n = min(arr.size, src.size)
+        arr[:n] = src[:n]
+        return out
+    return winner.value

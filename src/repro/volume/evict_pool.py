@@ -31,6 +31,15 @@ optional ``_evict_slots(items)`` hook gets the whole batch in one call
 (one lock acquisition / one fused transit-kernel launch for a burst),
 otherwise the worker loops ``_evict_slot`` per item.  Completion
 accounting is unchanged: ``_complete_eviction()`` fires once per item.
+
+**Limping-shard steering.**  ``set_limping(participants)`` marks a set
+of participants fail-slow (the volume pushes the
+:class:`~repro.core.metrics.ShardScorer`'s verdict here): workers drain
+every healthy backlog first and touch a limping participant's queue
+only when nothing else has work — eviction bandwidth stops feeding the
+device that is already 25x slow, but work conservation holds (a limping
+shard with the only backlog still drains).  Each deferral is counted
+(``steered_picks``) and reported through ``on_steer``.
 """
 from __future__ import annotations
 
@@ -68,6 +77,10 @@ class SharedEvictionPool:
         self.stolen_picks = 0
         self.batched_drains = 0          # picks that drained > 1 item
         self.batched_items = 0           # items drained via batch picks
+        # fail-slow steering: participants whose queues drain LAST
+        self._limping: set[int] = set()  # participant ids (id() keys)
+        self.on_steer = None             # callback per deferred pick
+        self.steered_picks = 0
         self._workers = [
             threading.Thread(target=self._run, args=(i % self.n_sockets,),
                              daemon=True, name=f"{name}-evict-{i}")
@@ -120,30 +133,57 @@ class SharedEvictionPool:
         with self._lock:
             return self._pending
 
+    def set_limping(self, participants, on_steer=None) -> None:
+        """Mark ``participants`` (an iterable of registered caches) as
+        fail-slow: their backlogs drain only when no healthy queue has
+        work.  Idempotent — the volume's tail-state refresh calls this
+        with the scorer's current verdict every pass."""
+        with self._lock:
+            self._limping = {id(p) for p in participants}
+            if on_steer is not None:
+                self.on_steer = on_steer
+
     # ------------------------------------------------------------- workers
     def _pick(self, socket: int):
         """Congestion-aware, starvation-free pick: picks alternate between
         the deepest backlog and plain round-robin over non-empty queues —
         a strictly-deepest rule would let a shard with one queued slot
         wait forever behind busier shards, wedging that shard's flush.
-        Home-socket queues are tried first; an idle bank steals."""
+        Home-socket queues are tried first; an idle bank steals.
+        Limping participants (``set_limping``) are deferred: their
+        queues are eligible only when no healthy queue has work."""
         n = len(self._queues)
         self._picks += 1
+        limping = self._limping
         for local_only in (True, False):
             best = None
             best_depth = 0
-            for off in range(n):
-                i = (self._rr + off) % n
-                _c, q, s = self._queues[i]
-                if local_only and s != socket:
-                    continue
-                depth = len(q)
-                if self._picks % 2 and depth > 0:   # RR turn: first non-empty
-                    best, best_depth = i, depth
-                    break
-                if depth > best_depth:              # congestion turn: deepest
-                    best, best_depth = i, depth
+            deferred = False                        # skipped limping work
+            for avoid in ((True, False) if limping else (False,)):
+                deferred = False
+                for off in range(n):
+                    i = (self._rr + off) % n
+                    c, q, s = self._queues[i]
+                    if local_only and s != socket:
+                        continue
+                    if avoid and id(c) in limping:
+                        if q:
+                            deferred = True
+                        continue
+                    depth = len(q)
+                    if self._picks % 2 and depth > 0:   # RR: first non-empty
+                        best, best_depth = i, depth
+                        break
+                    if depth > best_depth:          # congestion turn: deepest
+                        best, best_depth = i, depth
+                if best is not None:
+                    break                           # healthy work found
             if best is not None:
+                if deferred:
+                    # a limping backlog was passed over for healthy work
+                    self.steered_picks += 1
+                    if self.on_steer is not None:
+                        self.on_steer()
                 self._rr = (best + 1) % n
                 cache, q, s = self._queues[best]
                 # batch drain: one pick takes up to batch_max items from

@@ -148,13 +148,17 @@ class WFQGate:
             self.admitted_bytes.setdefault(name, 0)
             self.vtime_charged.setdefault(name, 0.0)
 
-    def _price(self, nbytes: int, op: str, tier: str | None) -> float:
+    def _price(self, nbytes: int, op: str, tier: str | None,
+               shard=None) -> float:
         """Priced (virtual-time) bytes of one op.  Clamps ``nbytes >= 1``
         — a zero-byte op must still advance the finish tag (heap-order
-        regression) — and never prices below one byte."""
+        regression) — and never prices below one byte.  ``shard=`` tags
+        the op's target device so the policy's limping-shard penalty
+        multiplier applies (fail-slow steering)."""
         nbytes = max(1, int(nbytes))
         if self.policy is not None:
-            return max(1.0, float(self.policy.op_charge(nbytes, op, tier)))
+            return max(1.0, float(self.policy.op_charge(nbytes, op, tier,
+                                                        shard=shard)))
         return float(nbytes)
 
     def _charge_locked(self, tenant: str, cost: float) -> None:
@@ -163,7 +167,8 @@ class WFQGate:
         self.vtime_charged[tenant] += cost
 
     def admit(self, tenant: str, nbytes: int, op: str = "write",
-              tier: str | None = None) -> tuple[float, int]:
+              tier: str | None = None,
+              shard=None) -> tuple[float, int]:
         with self._cond:
             if tenant not in self._weights:
                 raise QoSError(f"unknown tenant {tenant!r}")
@@ -172,7 +177,7 @@ class WFQGate:
                 # charges the real bytes); anything else is the caller
                 # bug the clamp exists for
                 self.zero_byte_admits += 1
-            cost = self._price(nbytes, op, tier)
+            cost = self._price(nbytes, op, tier, shard=shard)
             s_tag = max(self._vtime, self._finish[tenant])
             self._finish[tenant] = s_tag + cost / self._weights[tenant]
             self.vtime_charged[tenant] += cost

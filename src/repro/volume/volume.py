@@ -74,11 +74,18 @@ import zlib
 import numpy as np
 
 from repro.core import make_device
-from repro.core.metrics import Metrics
+from repro.core.metrics import Metrics, ShardScorer
 from repro.core.pmem import LatencyModel
 
 from .admission import AdmissionPolicy
-from .aio import AsyncIOEngine
+from .aio import AsyncIOEngine, RegisteredBuf, hedged_read as _hedged_read
+
+
+def _unwrap(payload):
+    """A :class:`RegisteredBuf` handle's backing array — the sync write
+    surface accepts the same handles the async engine pins, so a caller
+    holding a registered pool never needs two code paths."""
+    return payload.data if isinstance(payload, RegisteredBuf) else payload
 from .evict_pool import SharedEvictionPool
 from .journal import GroupCommitter, LogBatcher, VolumeJournal
 from .qos import TenantSpec, TokenBucket, WFQGate
@@ -106,7 +113,8 @@ class VolumeConfig:
                  scan_threshold: int = 64,
                  tier_hit_cost_frac: float = 0.125,
                  persist_ledger: bool = True,
-                 aio_workers: int = 2) -> None:
+                 aio_workers: int = 2,
+                 hedge_delay_us: float = 0.0) -> None:
         assert n_shards >= 1 and stripe_blocks >= 1
         assert 1 <= replicas <= n_shards
         assert policy not in ("raw", "dax"), \
@@ -132,6 +140,10 @@ class VolumeConfig:
         # async frontend: dispatch threads for the lazily-created
         # AsyncIOEngine (0 = deterministic inline mode)
         self.aio_workers = aio_workers
+        # hedged replicated reads: wait this long on the primary before
+        # firing the replica (0 = auto: the ShardScorer's healthy-cohort
+        # median p99)
+        self.hedge_delay_us = hedge_delay_us
         # reads are verified (and can degrade to a replica) only when a
         # replica exists to fall back to — single-copy volumes pay nothing
         self.verify_reads = (replicas > 1 if verify_reads is None
@@ -204,6 +216,10 @@ class StripedVolume:
         self.n_lbas = cfg.n_lbas
         self.pool = evict_pool
         self.metrics = Metrics()          # volume-level (degraded/resync)
+        # fail-slow scoring: per-shard p50/p99 digests over the
+        # svc::shard{i} sample rings feed the healthy/limping/dead
+        # verdicts that hedging and steering consume
+        self.scorer = ShardScorer(self.metrics, family="shard")
         self.read_tier = read_tier
         # write-time crc ledger: arbitrates primary-vs-replica divergence
         # (in-DRAM only — after reopen unknown lbas are simply not verified)
@@ -284,7 +300,7 @@ class StripedVolume:
                                               burst_bytes=burst_bytes)
 
     def _admit(self, tenant: str | None, nbytes: int, op: str = "write",
-               tier: str | None = None):
+               tier: str | None = None, shard: int | None = None):
         if tenant is None or self._gate is None:
             return None
         if op == "write":
@@ -293,9 +309,14 @@ class StripedVolume:
             bucket = self._buckets.get(tenant)
             if bucket is not None:
                 bucket.acquire(nbytes)
-        cost = self.admission.op_charge(nbytes, op, tier)
+        # shard= tags the op's target device: work headed for a limping
+        # shard is priced UP by the scorer's penalty (fail-slow steering)
+        cost = self.admission.op_charge(nbytes, op, tier, shard=shard)
         self.metrics.bump(f"wfq_vbytes::{tenant}", int(cost))
-        return self._gate.admit(tenant, nbytes, op=op, tier=tier)
+        if shard is not None and self.admission.shard_penalty(shard) > 1.0:
+            self.metrics.bump("steered_charges")
+        return self._gate.admit(tenant, nbytes, op=op, tier=tier,
+                                shard=shard)
 
     def _release(self, ticket) -> None:
         if ticket is not None:
@@ -347,7 +368,9 @@ class StripedVolume:
 
     def write(self, lba: int, data, tenant: str | None = None) -> int:
         """One-block write: atomic per shard BTT, no journaling needed."""
-        ticket = self._admit(tenant, self.block_size)
+        data = _unwrap(data)
+        ticket = self._admit(tenant, self.block_size,
+                             shard=self._map(lba, 0)[0])
         try:
             self._write_block(lba, data)
             return 0
@@ -373,7 +396,7 @@ class StripedVolume:
         per BATCH to the constituent tenants at flush
         (``WFQGate.charge_batch``), so a small-write-heavy tenant no
         longer pays a full gate-pricing pass per ``log()``."""
-        blocks = list(blocks)
+        blocks = [_unwrap(b) for b in blocks]
         if len(blocks) == 1:
             ticket = self._admit(tenant, self.block_size)
             try:
@@ -485,21 +508,24 @@ class StripedVolume:
         return probe(local) if probe is not None else None
 
     def read(self, lba: int, out: np.ndarray | None = None,
-             tenant: str | None = None) -> np.ndarray:
+             tenant: str | None = None, replica: int = 0) -> np.ndarray:
         """Layered read: tier -> primary shard (transit cache -> BTT) ->
         replica (degraded).  The tier probe happens inside the shard's
         cache; this level verifies the result and falls back.  Tenant
         reads pass the WFQ gate tagged ``op='read'`` with the probed
         tier — ``tier_hit_cost_frac`` price when the probe found the
         block DRAM-resident, full PMem price otherwise (ROADMAP: gate
-        tags no longer charge reads nothing)."""
-        shard, local = self._map(lba, 0)
+        tags no longer charge reads nothing).  ``replica=`` serves the
+        read from that copy instead of the primary (the hedge path's
+        backup leg); verification and degraded fallback are unchanged."""
+        replica = replica % self.cfg.replicas if replica else 0
+        shard, local = self._map(lba, replica)
         ticket = None
         pre_tier = None
         if tenant is not None and self._gate is not None:
             pre_tier = self._probe_read_tier(shard, local)
             ticket = self._admit(tenant, self.block_size, op="read",
-                                 tier=pre_tier)
+                                 tier=pre_tier, shard=shard)
         try:
             return self._read_verified(lba, shard, local, out, tenant,
                                        pre_tier)
@@ -559,6 +585,61 @@ class StripedVolume:
         self.metrics.bump("unrecoverable_reads")
         return data
 
+    # ----------------------------------------------------------- tail latency
+    def refresh_tail_state(self) -> dict:
+        """One tail-state pass: recompute the :class:`ShardScorer`'s
+        healthy/limping/dead verdicts from the per-shard service-time
+        digests and push the penalties into every steering hook — WFQ
+        ``op_charge`` pricing (limping shards cost more virtual time)
+        and the shared eviction pool's drain order (limping backlogs
+        drain last).  Returns the per-shard state map.  Called from
+        ``scrub()``; operators and benches may call it on their own
+        cadence."""
+        states = self.scorer.states()
+        pens: dict[int, float] = {}
+        for member in states:
+            if member.startswith("shard"):
+                try:
+                    idx = int(member[5:])
+                except ValueError:
+                    continue
+                pens[idx] = self.scorer.penalty(member)
+        self.admission.set_shard_penalties(pens)
+        if self.pool is not None:
+            limp = [self.shards[i].impl for i, p in pens.items()
+                    if p > 1.0 and i < len(self.shards)
+                    and hasattr(self.shards[i].impl, "_evict_slot")]
+            self.pool.set_limping(
+                limp,
+                on_steer=lambda: self.metrics.bump("steered_evictions"))
+        return states
+
+    def hedge_delay(self) -> float:
+        """Seconds to wait on the primary before firing the hedge leg:
+        the configured ``hedge_delay_us``, or (when 0 = auto) the
+        scorer's healthy-cohort median p99 — 1 ms until the digests
+        warm up."""
+        us = self.cfg.hedge_delay_us
+        if us <= 0:
+            us = self.scorer.hedge_delay_us(default_us=1000.0)
+        return max(us, 1.0) / 1e6
+
+    def hedged_read(self, lba: int, out=None, tenant: str | None = None,
+                    delay_s: float | None = None):
+        """Tail-tolerant replicated read: submit the primary, wait one
+        hedge delay, and if it has not completed fire the SAME read
+        against the replica — first completion wins, the loser is
+        cancelled through the engine's per-ticket cancel path (releasing
+        any pinned registered buffers).  Unreplicated volumes fall back
+        to a plain :meth:`read`.  Counters (``hedges_fired`` ==
+        ``hedges_won`` + ``hedges_cancelled``) surface in
+        ``Metrics.tail_path()``."""
+        if self.cfg.replicas < 2:
+            return self.read(lba, out=out, tenant=tenant)
+        delay = self.hedge_delay() if delay_s is None else delay_s
+        return _hedged_read(self, lba, delay_s=delay, out=out,
+                            tenant=tenant)
+
     # --------------------------------------------------------- async frontend
     def aio_engine(self, *, n_workers: int | None = None,
                    max_inflight_per_tenant: int | None = None) \
@@ -591,7 +672,7 @@ class StripedVolume:
 
     def submit(self, op: str, lba: int = 0, data=None, blocks=None,
                tenant: str | None = None, block: bool = False,
-               link_to=None, out=None):
+               link_to=None, out=None, replica: int = 0):
         """Asynchronous submission: queue ``op`` ('write' | 'write_multi'
         | 'read' | 'fsync' | 'flush') and return its ticket immediately.
         Completions surface on :meth:`poll`; per-op failures (injected
@@ -601,19 +682,22 @@ class StripedVolume:
         the ticket (blocking backpressure for batch producers).
         ``link_to=`` chains the ticket behind a parent (IO_LINK: failed
         parent cancels the chain with ECANCELED); ``out=`` lands a read
-        directly in the caller's (registered) array."""
+        directly in the caller's (registered) array; ``replica=`` routes
+        a read to that copy (the hedge path's backup leg)."""
         return self.aio_engine().submit(op, lba=lba, data=data,
                                         blocks=blocks, tenant=tenant,
                                         block=block, link_to=link_to,
-                                        out=out)
+                                        out=out, replica=replica)
 
     def try_submit(self, op: str, lba: int = 0, data=None, blocks=None,
-                   tenant: str | None = None, link_to=None, out=None):
+                   tenant: str | None = None, link_to=None, out=None,
+                   replica: int = 0):
         """Non-blocking window probe: None when the tenant is at its
         in-flight bound (not counted as a failure), a ticket otherwise."""
         return self.aio_engine().try_submit(op, lba=lba, data=data,
                                             blocks=blocks, tenant=tenant,
-                                            link_to=link_to, out=out)
+                                            link_to=link_to, out=out,
+                                            replica=replica)
 
     def register_buffers(self, n_buffers: int,
                          buf_bytes: int | None = None):
@@ -813,6 +897,14 @@ class StripedVolume:
         out = {"divergent": len(detail),
                "divergent_detail": detail,
                "per_shard_svc": self.metrics.per_node()}
+        # tail-latency layer: refresh the scorer (installing steering
+        # penalties as a side effect) and surface the verdicts + the
+        # hedge counter balance
+        states = self.refresh_tail_state()
+        out["tail"] = {"states": states,
+                       "shards": self.scorer.table(),
+                       "hedge_delay_us": round(self.hedge_delay() * 1e6, 3),
+                       **self.metrics.tail_path()}
         if self._aio is not None:
             s = self._aio.stats()
             out["zerocopy"] = {k: s[k] for k in (
@@ -852,6 +944,8 @@ class StripedVolume:
             out["aio"] = self._aio.stats()
         out["admission"] = self.admission.stats()
         out["per_shard_svc"] = self.metrics.per_node()
+        out["tail"] = {"states": self.scorer.states(),
+                       **self.metrics.tail_path()}
         out["wfq_vbytes"] = self.metrics.per_tenant("wfq_vbytes")
         if self._gate is not None:
             out["wfq"] = self._gate.stats()
@@ -888,7 +982,8 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                 scan_threshold: int = 64,
                 tier_hit_cost_frac: float = 0.125,
                 persist_ledger: bool = True,
-                aio_workers: int = 2) -> StripedVolume:
+                aio_workers: int = 2,
+                hedge_delay_us: float = 0.0) -> StripedVolume:
     """Build (or reopen + recover) a striped volume.
 
     ``path`` is a prefix for file-backed shards (``{path}.shard{i}``); a
@@ -920,7 +1015,8 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                        scan_threshold=scan_threshold,
                        tier_hit_cost_frac=tier_hit_cost_frac,
                        persist_ledger=persist_ledger,
-                       aio_workers=aio_workers)
+                       aio_workers=aio_workers,
+                       hedge_delay_us=hedge_delay_us)
     paths = [None] * n_shards
     if backend == "file":
         assert path is not None, "file backend needs a path prefix"

@@ -23,6 +23,11 @@ every interleaving of submit / poll / crash a *replayable schedule*:
   * :func:`fail_shard_writes` — injected *device* errors (not crashes):
     BTT writes on one shard raise ``IOError``, which must surface as
     per-ticket failures, leaving the ring serving other tenants;
+  * :func:`slow_shard_reads` — injected *fail-slow* behavior (the PR 8
+    limplock mode): backend reads on one shard stall for a fixed delay,
+    optionally dying after N slowed reads (slow-then-die) or returning
+    to full speed (slow-then-recover) — the hedged-read sweeps drive
+    every combination of slow/dead/racing legs through this;
   * :class:`VersionedObjects` + :func:`random_schedule` — seeded
     generator of interleaved multi-tenant schedules over versioned
     objects, with whole-object / monotone-version / completed-never-lost
@@ -88,6 +93,37 @@ def fail_shard_writes(vol, shard: int, local_lbas=None,
     return state
 
 
+def slow_shard_reads(vol, shard: int, delay_s: float, *,
+                     die_after: int | None = None,
+                     recover_after: int | None = None) -> dict:
+    """Inject FAIL-SLOW read behavior on ``shard`` (the limplock mode
+    hedged reads exist for): every cache/backend read first stalls
+    ``delay_s`` wall seconds.  ``die_after=N`` turns the Nth-and-later
+    slowed reads into ``IOError`` AFTER the stall (slow-then-die: the
+    hedge must already be winning when the primary finally errors);
+    ``recover_after=N`` restores full speed after N slowed reads
+    (slow-then-recover: later reads must take the no-hedge fast path).
+    Returns ``{"slowed": count, "restore": fn}``."""
+    import time as _time
+    impl = vol.shards[shard].impl
+    attr = "read_ex" if hasattr(impl, "read_ex") else "read"
+    orig = getattr(impl, attr)
+    state = {"slowed": 0}
+
+    def wrapped(local, out=None, **kw):
+        if recover_after is not None and state["slowed"] >= recover_after:
+            return orig(local, out=out, **kw)
+        state["slowed"] += 1
+        _time.sleep(delay_s)
+        if die_after is not None and state["slowed"] >= die_after:
+            raise IOError(f"injected fail-slow death: shard {shard}")
+        return orig(local, out=out, **kw)
+
+    setattr(impl, attr, wrapped)
+    state["restore"] = lambda: setattr(impl, attr, orig)
+    return state
+
+
 def volume_lba_on_shard(vol, shard: int, start: int = 0) -> int:
     """Smallest volume lba >= ``start`` whose primary copy lives on
     ``shard`` (so error-injection tests can aim an op at the bad
@@ -106,6 +142,10 @@ class AsyncRun:
       ("submit_multi", name, lba, blocks)   async chained write
       ("submit_write", name, lba, data)     async single-block write
       ("submit_read",  name, lba)           async read
+      ("submit_read_out", name, lba, out)   async read landing into out=
+      ("cancel", name)                      cancel a ticket (hedge-loser
+                                            path: an out= landing target
+                                            must never see partial data)
       ("submit_fsync", name)                async barrier + group commit
       ("link_write", name, parent, lba, data)   write linked behind parent
       ("link_multi", name, parent, lba, blocks) chained write, linked
@@ -157,6 +197,11 @@ class AsyncRun:
         elif kind == "submit_read":
             _, name, lba = s
             self._track(name, self.eng.submit("read", lba))
+        elif kind == "submit_read_out":
+            _, name, lba, out = s
+            self._track(name, self.eng.submit("read", lba, out=out))
+        elif kind == "cancel":
+            self.eng.cancel(self.tickets[s[1]])
         elif kind == "submit_fsync":
             self._track(s[1], self.eng.submit("fsync"))
         elif kind == "link_write":

@@ -43,25 +43,42 @@ def test_floor_gate_references_registered_tables():
     registered = _registry_tables()
     assert set(mod.FLOORS) <= registered, \
         sorted(set(mod.FLOORS) - registered)
-    # a scalar floor bounds entry["speedup"]; a dict floor bounds each
-    # of its keys — normalize both shapes the way check() does
-    keyed = {t: (f if isinstance(f, dict) else {"speedup": f})
+
+    # a scalar floor bounds entry["speedup"]; a dict floor bounds each of
+    # its keys; a per-key {"min"/"max"} spec picks the direction — fold
+    # every shape down to (bar, is_ceiling) the way check() does
+    def _norm(spec):
+        if isinstance(spec, dict):
+            return (float(spec["max"]), True) if "max" in spec \
+                else (float(spec["min"]), False)
+        return float(spec), False
+
+    keyed = {t: {k: _norm(s) for k, s in
+                 (f if isinstance(f, dict) else {"speedup": f}).items()}
              for t, f in mod.FLOORS.items()}
     n_bars = sum(len(k) for k in keyed.values())
+    # at least one latency-style ceiling must be registered (hedged p99)
+    assert any(ceil for ks in keyed.values() for _b, ceil in ks.values())
+
+    def _vals(ks, passing):
+        # direction-aware: a passing value sits on the good side of the
+        # bar (below a ceiling, above a floor), a failing one opposite
+        return {k: bar * ((0.5 if ceil else 2.0) if passing
+                          else (2.0 if ceil else 0.5))
+                for k, (bar, ceil) in ks.items()}
+
     # the gate fails (not passes) when a floored table goes missing
     problems = mod.check({}, allow_missing=False)
     assert len(problems) == len(mod.FLOORS)
     assert mod.check({}, allow_missing=True) == []
-    assert mod.check({t: {k: 2.0 for k in ks}
-                      for t, ks in keyed.items()}) == []
-    bad = mod.check({t: {k: bar * 0.5 for k, bar in ks.items()}
-                     for t, ks in keyed.items()})
+    assert mod.check({t: _vals(ks, True) for t, ks in keyed.items()}) == []
+    bad = mod.check({t: _vals(ks, False) for t, ks in keyed.items()})
     assert len(bad) == n_bars
     # a dict-floored table missing ONE of its keys is a loud failure
     dict_tables = [t for t, f in mod.FLOORS.items() if isinstance(f, dict)]
     assert dict_tables, "expected at least one multi-key floor"
     t0 = dict_tables[0]
-    partial = {t: {k: 2.0 for k in ks} for t, ks in keyed.items()}
+    partial = {t: _vals(ks, True) for t, ks in keyed.items()}
     partial[t0] = dict(list(partial[t0].items())[:-1])
     assert len(mod.check(partial)) == 1
 

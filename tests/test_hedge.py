@@ -1,0 +1,275 @@
+"""Tail-latency data plane: hedged replica reads under a limping shard.
+
+Fail-slow ("limplock") is the failure mode fail-stop machinery never
+sees: one device 10-100x slow, nothing erroring, p99 collapsed while
+mean throughput looks healthy.  These tests pin the hedge path's whole
+contract — the sim acceptance contrast (hedged p99 >= 2x better than
+unhedged at one 25x limping shard, CI-gated via ``check_floors.py``),
+the counter balance (``hedges_fired == hedges_won + hedges_cancelled``,
+``hedges_unaccounted == 0``), and the threaded engine's fault sweep:
+slow-then-die, slow-then-recover, the both-complete race (the loser's
+one CQE is consumed exactly once), cancelled reads never landing
+partial data in a caller's ``out=`` array, and pinned registered
+buffers always returning to the pool."""
+import time
+
+import numpy as np
+
+from aio_harness import (AsyncRun, blk, slow_shard_reads,
+                         volume_lba_on_shard)
+from repro.core.sim import run_hedge_sim_workload
+from repro.volume import CancelledError, make_volume
+
+
+# ------------------------------------------------- sim acceptance floors
+def test_sim_hedged_p99_acceptance():
+    """The headline contrast: one 25x limping shard, hedged vs unhedged
+    at equal offered load.  Hedged p99 must be >= 2x better WITHOUT
+    giving up throughput (the closed loop un-stalls, so hedged ops/s is
+    at least the unhedged rate), and every fired hedge retires as
+    exactly one of won/cancelled."""
+    kw = dict(n_lbas=65536, n_ops=3000, n_shards=4,
+              slow_shard=0, slow_factor=25.0)
+    un = run_hedge_sim_workload("btt", hedge=False, **kw)
+    he = run_hedge_sim_workload("btt", hedge=True, **kw)
+    assert un["p99_us"] / he["p99_us"] >= 2.0
+    assert he["ops_s"] >= un["ops_s"]
+    c = he["counts"]
+    assert c.get("hedges_fired", 0) \
+        == c.get("hedges_won", 0) + c.get("hedges_cancelled", 0)
+    assert c.get("hedges_won", 0) > 0          # hedges actually escaped
+    # fail-slow's signature: the unhedged MEAN looks survivable (only
+    # 1/n_shards of reads limp) while p99 sits at the limping device
+    assert un["p99_us"] > 4.0 * un["p50_us"]
+
+
+def test_sim_healthy_volume_fires_no_hedges():
+    """With no limping shard the hedge delay (3x an unqueued read) sits
+    above every healthy completion — the hedge path must cost nothing
+    when nothing is wrong."""
+    he = run_hedge_sim_workload("btt", hedge=True, slow_shard=None,
+                                n_lbas=65536, n_ops=2000)
+    assert he["counts"].get("hedges_fired", 0) == 0
+
+
+def test_sim_counters_balance_across_delay_settings():
+    """The won/cancelled split shifts with the hedge delay, but the
+    balance invariant holds at every setting (including a degenerate
+    zero delay that hedges every read)."""
+    for delay in (0.0, 2.0, 10.0):
+        r = run_hedge_sim_workload("btt", n_lbas=65536, n_ops=1500,
+                                   hedge_delay_us=delay)
+        c = r["counts"]
+        assert c.get("hedges_fired", 0) \
+            == c.get("hedges_won", 0) + c.get("hedges_cancelled", 0)
+
+
+# --------------------------------------------- threaded engine: limping
+def test_threaded_hedge_escapes_limping_shard():
+    """A read whose primary copy lives on a stalled shard must be served
+    by the replica leg well before the stall clears, with the loser
+    cancelled through the engine (counters balance, primary recalled)."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(9))
+        inj = slow_shard_reads(vol, 0, 0.05)
+        t0 = time.perf_counter()
+        data = vol.hedged_read(lba, delay_s=0.002)
+        dt = time.perf_counter() - t0
+        assert bytes(data) == blk(9)
+        assert dt < 0.045                      # escaped the 50 ms stall
+        tp = vol.metrics.tail_path()
+        assert tp["hedges_fired"] == 1
+        assert tp["hedges_won"] == 1
+        assert tp["primaries_cancelled"] == 1
+        assert tp["hedges_unaccounted"] == 0
+        inj["restore"]()
+    finally:
+        vol.close()
+
+
+def test_threaded_hedge_slow_then_die():
+    """Fail-slow turning fail-stop mid-read: the primary stalls, the
+    hedge fires and wins, and the primary's later death is absorbed by
+    the discard path — the caller saw only the good result, and data
+    acked before the fault is still there afterwards."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(5))                 # acked before the fault
+        inj = slow_shard_reads(vol, 0, 0.03, die_after=1)
+        data = vol.hedged_read(lba, delay_s=0.002)
+        assert bytes(data) == blk(5)
+        tp = vol.metrics.tail_path()
+        assert tp["hedges_fired"] == 1
+        assert tp["hedges_won"] + tp["hedges_cancelled"] == 1
+        inj["restore"]()
+        assert bytes(vol.read(lba)) == blk(5)  # no acked write lost
+    finally:
+        vol.close()
+
+
+def test_threaded_hedge_failover_when_primary_errors_first():
+    """The winner-failed branch: the primary dies BEFORE the (also slow)
+    hedge completes.  Hedging subsumes failover — the other leg is
+    settled and served instead of surfacing the primary's error."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(6))
+        inj0 = slow_shard_reads(vol, 0, 0.004, die_after=1)
+        inj1 = slow_shard_reads(vol, 1, 0.02)
+        data = vol.hedged_read(lba, delay_s=0.001)
+        assert bytes(data) == blk(6)
+        tp = vol.metrics.tail_path()
+        assert tp["hedges_fired"] == 1
+        assert tp["hedges_won"] == 1           # served despite being slow
+        assert tp["hedges_unaccounted"] == 0
+        inj0["restore"]()
+        inj1["restore"]()
+    finally:
+        vol.close()
+
+
+def test_threaded_hedge_slow_then_recover():
+    """After the shard recovers, reads complete inside the hedge delay
+    again and the hedge path goes quiet — no new hedges fired."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(7))
+        inj = slow_shard_reads(vol, 0, 0.03, recover_after=1)
+        d1 = vol.hedged_read(lba, delay_s=0.002)   # stalls -> hedge wins
+        d2 = vol.hedged_read(lba, delay_s=0.002)   # recovered: fast path
+        assert bytes(d1) == blk(7) and bytes(d2) == blk(7)
+        tp = vol.metrics.tail_path()
+        assert tp["hedges_fired"] == 1             # only the first read
+        assert tp["hedges_unaccounted"] == 0
+        inj["restore"]()
+    finally:
+        vol.close()
+
+
+def test_threaded_both_complete_race_consumes_single_cqe():
+    """Both legs complete before the cancel reaches the loser: the loser
+    keeps its real result, its ONE completion is consumed exactly once,
+    and no stale CQE is left on the ring (no double completion)."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        eng = vol.aio_engine()
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(3))
+        inj = slow_shard_reads(vol, 0, 0.01)
+        orig_wait_any = eng.wait_any
+
+        def wait_any_both(tickets, **kw):
+            # force the race: let BOTH legs finish before hedged_read
+            # gets to cancel the loser
+            w = orig_wait_any(tickets, **kw)
+            for t in tickets:
+                eng.wait(t, timeout=5.0)
+            return w
+
+        eng.wait_any = wait_any_both
+        try:
+            data = vol.hedged_read(lba, delay_s=0.002)
+        finally:
+            eng.wait_any = orig_wait_any
+        assert bytes(data) == blk(3)
+        tp = vol.metrics.tail_path()
+        assert tp["hedges_fired"] == 1
+        assert tp["hedges_won"] == 1
+        assert tp["hedges_unaccounted"] == 0
+        assert eng.poll() == []                # loser CQE never re-surfaces
+        inj["restore"]()
+    finally:
+        vol.close()
+
+
+# ------------------------------- cancelled reads never land partial data
+def test_cancelled_queued_read_never_touches_out():
+    """Satellite regression: a QUEUED read cancelled before dispatch must
+    leave the caller's ``out=`` array byte-for-byte untouched (driven
+    through the deterministic inline schedule)."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, stripe_blocks=1)
+    try:
+        run = AsyncRun(vol)
+        run.run([("sync_write", 5, blk(8))])
+        out = np.full(vol.block_size, 0xEE, np.uint8)
+        run.run([
+            ("submit_read_out", "r", 5, out),
+            ("cancel", "r"),
+            ("poll", None),
+        ])
+        assert isinstance(run.tickets["r"].error, CancelledError)
+        assert np.all(out == 0xEE)             # sentinel intact
+    finally:
+        vol.close()
+
+
+def test_cancelled_running_read_never_lands_partial_data():
+    """The hedge-loser discard path: a read cancelled while RUNNING (mid
+    media stall) completes later on its worker, but its landing into the
+    caller's ``out=`` array is suppressed — the sentinel survives."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        eng = vol.aio_engine()
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(4))
+        inj = slow_shard_reads(vol, 0, 0.03)
+        out = np.full(vol.block_size, 0xAB, np.uint8)
+        t = eng.submit("read", lba, out=out)
+        time.sleep(0.005)                      # let it reach the stall
+        assert eng.cancel(t) is True
+        deadline = time.time() + 2.0
+        while not t.done and time.time() < deadline:
+            eng.poll()
+            time.sleep(0.002)
+        assert t.done
+        assert isinstance(t.error, CancelledError)
+        assert np.all(out == 0xAB)             # no partial landing
+        inj["restore"]()
+        # the path itself still works: an uncancelled read lands
+        t2 = eng.submit("read", lba, out=out)
+        eng.wait(t2, timeout=2.0)
+        assert bytes(out) == blk(4)
+    finally:
+        vol.close()
+
+
+def test_hedge_loser_releases_registered_out_buffer():
+    """Every cancelled hedge releases its pinned buffers: a hedged read
+    landing in a REGISTERED buffer whose primary leg is discarded must
+    return the pin to the pool once the loser drains — no leaked
+    registered buffers, ever."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, replicas=2,
+                      stripe_blocks=1, aio_workers=2)
+    try:
+        lba = volume_lba_on_shard(vol, 0)
+        vol.write(lba, blk(7))
+        reg = vol.register_buffers(2)
+        buf = reg.acquire()
+        buf.data[:] = 0xCD
+        inj = slow_shard_reads(vol, 0, 0.02)
+        res = vol.hedged_read(lba, out=buf, delay_s=0.002)
+        assert res is buf
+        assert bytes(buf.data) == blk(7)       # hedge win copied once
+        inj["restore"]()
+        eng = vol.aio_engine()
+        deadline = time.time() + 2.0
+        while reg.free_count() != len(reg) and time.time() < deadline:
+            eng.poll()
+            time.sleep(0.002)
+        assert reg.free_count() == len(reg)    # discarded leg released it
+        tp = vol.metrics.tail_path()
+        assert tp["hedges_fired"] == 1
+        assert tp["hedges_unaccounted"] == 0
+    finally:
+        vol.close()

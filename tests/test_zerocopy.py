@@ -135,6 +135,60 @@ def test_cancel_mid_chain_releases_buffers_and_cascades():
         vol.close()
 
 
+def test_sync_write_surfaces_accept_registered_handles():
+    """``StripedVolume.write`` / ``write_multi`` unwrap RegisteredBuf
+    handles — a caller can point its pinned pool buffers at the sync
+    path without manually dereferencing ``.data``."""
+    vol = make_volume("btt", n_lbas=64, n_shards=2, stripe_blocks=1)
+    try:
+        reg = vol.register_buffers(2)
+        a, b = reg.acquire(), reg.acquire()
+        a.data[:] = 21
+        b.data[:] = 22
+        vol.write(0, a)
+        vol.write_multi(1, [b, a])
+        assert bytes(vol.read(0)) == blk(21)
+        assert bytes(vol.read(1)) == blk(22)
+        assert bytes(vol.read(2)) == blk(21)
+    finally:
+        vol.close()
+
+
+def test_request_log_registered_pool_pins_block_lists():
+    """write_multi block lists from a caller OTHER than the blockstore
+    ride pinned buffers: the serve-plane request log appends through its
+    registered pool, the engine avoids the staging copies, every buffer
+    returns to the pool once the tickets settle, and the records read
+    back intact."""
+    import json
+    from repro.serve.engine import AsyncRequestLog
+    vol = make_volume("caiti", n_lbas=2048, n_shards=2,
+                      cache_bytes=64 * 4096)
+    try:
+        log = AsyncRequestLog(vol, registered_buffers=4)
+        recs = [{"req_id": i, "tokens": [i] * 3000} for i in range(6)]
+        for r in recs:
+            log.append(r)
+        assert log.drain() == 0 and not log.errors
+        st = vol.aio_engine().stats()
+        assert st["copies_avoided"] >= len(recs)   # blocks pinned, not staged
+        reg = log._reg
+        assert reg.free_count() == len(reg)        # nothing leaked
+        lba = 0
+        for want in recs:
+            raw = bytes(vol.read(lba))
+            n = int.from_bytes(raw[:4], "little")
+            buf = raw[4:]
+            blocks = 1
+            while len(buf) < n:
+                buf += bytes(vol.read(lba + blocks))
+                blocks += 1
+            assert json.loads(buf[:n].decode()) == want
+            lba += blocks
+    finally:
+        vol.close()
+
+
 # ----------------------------------------------------- linked SQE chains
 def test_linked_chain_executes_in_order_without_poll_roundtrips():
     """write -> fsync -> read-back submitted as ONE chain: the engine
