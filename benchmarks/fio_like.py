@@ -19,7 +19,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core.sim import CostModel, run_sim_workload
+from repro.core.sim import run_sim_workload
 
 ALL = ("raw", "dax", "btt", "pmbd", "pmbd70", "lru", "coactive", "caiti")
 CACHED = ("pmbd", "pmbd70", "lru", "coactive", "caiti")

@@ -14,7 +14,6 @@ The benchmark models db_bench workloads as that device-level stream:
 from __future__ import annotations
 
 import argparse
-import itertools
 import json
 
 import numpy as np

@@ -48,11 +48,13 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
     really runs tiny."""
     try:                                        # python -m benchmarks.run
         from . import breakdown, ckpt_bench, cluster_bench, fio_like, \
-            fsync_sweep, kvstore, roofline, serve_bench, volume_bench, ycsb
+            fsync_sweep, kvstore, roofline, scenarios, serve_bench, \
+            volume_bench, ycsb
     except ImportError:                         # python benchmarks/run.py
         sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
         import breakdown, ckpt_bench, cluster_bench, fio_like, \
-            fsync_sweep, kvstore, roofline, serve_bench, volume_bench, ycsb
+            fsync_sweep, kvstore, roofline, scenarios, serve_bench, \
+            volume_bench, ycsb
 
     return {
         "fig2a": ("random-write execution time (sim)",
@@ -117,6 +119,9 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
         "cluster": ("distributed cluster volume: pipelined chain "
                     "replication, placement, kill storm (sim)",
                     lambda: cluster_bench.run(n_ops=max(200, ops // 10))),
+        "scenarios": ("self-tuning control plane vs frozen knobs on four "
+                      "adversarial phase-change traces (sim)",
+                      lambda: scenarios.run(n_ops=ops)),
         "roofline": ("dry-run derived roofline terms (deliverable g)",
                      lambda: len(roofline.run("experiments/dryrun",
                                               mesh="pod16x16"))),

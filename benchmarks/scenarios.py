@@ -1,0 +1,156 @@
+"""Adversarial scenario matrix: self-tuning control plane vs frozen knobs.
+
+Each scenario replays the SAME multi-phase trace twice on the virtual-
+time volume sim (``repro.core.sim.run_autotune_sim_workload``):
+
+  frozen   knobs stay at the conservative defaults for the whole trace
+           (commit/log windows 0, watermark 0.9, hedge 1000us)
+  tuned    a REAL ``repro.volume.autotune.Controller`` observes one
+           signal window per control tick and retunes the knobs online
+
+The scenarios are adversarial by construction — each one changes the
+workload's character mid-trace so any FIXED knob setting is wrong for
+at least one phase:
+
+  phase_change  YCSB-A with per-op fsync pressure -> YCSB-C zipf reads
+                (fsync coalescing must open, then stop mattering)
+  diurnal       logged-write bursts alternating with think-time read
+                lulls (the log window must earn its keep in bursts
+                without hurting the lulls)
+  churn         tenants arrive and leave across phases (2 fsync-heavy
+                -> 6 mixed -> 3 logged-write writers); the coalescing
+                population the controller sees keeps shifting
+  ckpt_serve    sequential-scan restore reads, then zipf serving reads
+                concurrent with a logged + fsynced checkpoint writer
+
+The CI floor (benchmarks/check_floors.py) is direction-aware: tuned
+must reach >= 1.0x the frozen throughput on EVERY scenario, and on the
+phase-change trace tuned p99 must stay at or below frozen p99.  Those
+are floors, not the acceptance bars — the convergence/clamp-safety
+assertions live in tests/test_autotune.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+if __package__ in (None, ""):                           # direct script run
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+
+from repro.core.sim import CostModel, run_autotune_sim_workload  # noqa: E402
+from repro.volume.autotune import make_default_controller        # noqa: E402
+
+
+def _trace_pair(name: str, phases: list[dict], **kw) -> dict:
+    """Run one trace frozen then tuned; print the contrast row."""
+    frozen = run_autotune_sim_workload("caiti", phases=phases,
+                                       autotune=None, **kw)
+    tuned = run_autotune_sim_workload("caiti", phases=phases,
+                                      autotune=make_default_controller(),
+                                      **kw)
+    ops_ratio = tuned["ops_s"] / max(frozen["ops_s"], 1e-9)
+    p99_ratio = tuned["p99_us"] / max(frozen["p99_us"], 1e-9)
+    moves = tuned.get("autotune", {}).get("total_moves", 0)
+    print(f"{name:14s} frozen={frozen['ops_s']:10.0f} ops/s "
+          f"tuned={tuned['ops_s']:10.0f} ops/s  "
+          f"ratio={ops_ratio:.2f}x  p99={p99_ratio:.2f}x  "
+          f"moves={moves}")
+    for pname, ph in tuned["per_phase"].items():
+        fr = frozen["per_phase"][pname]
+        print(f"    {pname:12s} tuned={ph['ops_s']:10.0f} ops/s "
+              f"frozen={fr['ops_s']:10.0f} ops/s "
+              f"({ph['ops_s'] / max(fr['ops_s'], 1e-9):.2f}x)")
+    return {"frozen_ops_s": frozen["ops_s"], "tuned_ops_s": tuned["ops_s"],
+            "ops_ratio": ops_ratio, "p99_ratio": p99_ratio,
+            "moves": moves, "knob_final": tuned.get("knob_final", {}),
+            "n_knob_moves_applied": len(tuned.get("knob_trace", []))}
+
+
+def _mixed(n: int, per: int, *, read_frac: float = 0.5,
+           fsync_every: int = 0, log_blocks: int = 0, jobs: int = 2,
+           think_us: float = 0.0, tag: str = "t") -> list[dict]:
+    return [{"name": f"{tag}{j}", "n_ops": per, "jobs": jobs,
+             "read_frac": read_frac, "fsync_every": fsync_every,
+             "log_blocks": log_blocks, "think_us": think_us}
+            for j in range(n)]
+
+
+def run(n_ops: int = 6000) -> dict:
+    """All four scenarios; returns the flat floor keys CI gates on."""
+    per = max(600, n_ops // 4)          # ops per tenant per phase
+    print(f"# tuned-vs-frozen on 4 adversarial traces "
+          f"({per} ops/tenant/phase, 4 shards, virtual time)")
+    out: dict = {}
+
+    out["phase_change"] = _trace_pair("phase_change", [
+        {"name": "ycsb_a", "tenants": _mixed(4, per, read_frac=0.5,
+                                             fsync_every=4)},
+        {"name": "ycsb_c", "lba_dist": "zipf",
+         "tenants": _mixed(4, per, read_frac=1.0)},
+    ], seed=1)
+
+    out["diurnal"] = _trace_pair("diurnal", [
+        {"name": "burst_am", "tenants": _mixed(4, per, read_frac=0.1,
+                                               log_blocks=4,
+                                               fsync_every=8)},
+        {"name": "lull", "tenants": _mixed(4, per // 2, read_frac=0.8,
+                                           think_us=200.0)},
+        {"name": "burst_pm", "tenants": _mixed(4, per, read_frac=0.1,
+                                               log_blocks=4,
+                                               fsync_every=8)},
+    ], seed=2)
+
+    out["churn"] = _trace_pair("churn", [
+        {"name": "two_syncers", "tenants": _mixed(2, per,
+                                                  read_frac=0.2,
+                                                  fsync_every=4,
+                                                  jobs=4)},
+        {"name": "six_mixed", "tenants": _mixed(6, per, read_frac=0.5,
+                                                fsync_every=8)},
+        {"name": "three_loggers", "tenants": _mixed(3, per,
+                                                    read_frac=0.0,
+                                                    log_blocks=4,
+                                                    tag="w")},
+    ], seed=3)
+
+    out["ckpt_serve"] = _trace_pair("ckpt_serve", [
+        {"name": "restore", "lba_dist": "seq",
+         "tenants": _mixed(2, per, read_frac=1.0, jobs=4)},
+        {"name": "serve_ckpt", "lba_dist": "zipf",
+         "tenants": _mixed(3, per, read_frac=1.0, tag="s") +
+         _mixed(1, per, read_frac=0.0, log_blocks=8,
+                fsync_every=16, jobs=4, tag="ckpt")},
+    ], seed=4)
+
+    # flat floor keys so check_floors.py can gate without nesting
+    for name, r in list(out.items()):
+        out[f"{name}_ops_ratio"] = r["ops_ratio"]
+    out["phase_change_p99_ratio"] = out["phase_change"]["p99_ratio"]
+    worst = min(out[f"{n}_ops_ratio"]
+                for n in ("phase_change", "diurnal", "churn", "ckpt_serve"))
+    print(f"-> tuned vs frozen: worst-scenario throughput ratio "
+          f"{worst:.2f}x (floor >= 1.0x); phase-change p99 ratio "
+          f"{out['phase_change_p99_ratio']:.2f}x (ceiling <= 1.0x)")
+    return out
+
+
+TABLES = {"scenarios": run}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default="scenarios", choices=list(TABLES))
+    ap.add_argument("--ops", type=int, default=0)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print(f"cost model: {CostModel()}")
+    kw = {"n_ops": args.ops} if args.ops else {}
+    res = TABLES[args.table](**kw)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,6 @@ virtual time) is reported, higher is better.
 from __future__ import annotations
 
 import argparse
-import itertools
 import json
 
 import numpy as np

@@ -5,7 +5,6 @@ bypass under pool pressure).
     PYTHONPATH=src python examples/serve_paged.py
     PYTHONPATH=src python examples/serve_paged.py --pool-pages 4  # pressure
 """
-import sys
 
 from repro.launch.serve import main
 

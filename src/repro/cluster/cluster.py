@@ -117,6 +117,8 @@ class ClusterVolume:
         self.step_hook = None
         self._step_no = 0
         self._aio: AsyncIOEngine | None = None
+        # self-tuning control plane (attach_autotuner): None = frozen
+        self.autotuner = None
 
     # -------------------------------------------------------------- mapping
     def _chain_for(self, chunk: int) -> list[int]:
@@ -409,6 +411,67 @@ class ClusterVolume:
         the cluster crc from a verified sibling."""
         return self.rereplicator.repair_divergent(sample_every)
 
+    # --------------------------------------------------------- control plane
+    def attach_autotuner(self, controller=None):
+        """Attach a self-tuning controller at CLUSTER scope: the hedge
+        delay is tuned from the node scorer's verdicts, and every other
+        knob move (commit/log windows, watermark, scan threshold) fans
+        out to each live member's :class:`StripedVolume`, so one control
+        loop retunes the whole fleet coherently."""
+        if controller is None:
+            from repro.volume.autotune import make_default_controller
+            controller = make_default_controller()
+        member = self.nodes[0].volume
+        seed = {"commit_window_us": member.cfg.commit_window * 1e6,
+                "log_window_us": member.cfg.log_window * 1e6,
+                "bypass_watermark": member.cfg.bypass_watermark,
+                "scan_threshold": float(member.cfg.scan_threshold)}
+        if self.cfg.hedge_delay_us > 0:
+            seed["hedge_delay_us"] = self.cfg.hedge_delay_us
+        controller.bind(seed)
+        self.autotuner = controller
+        return controller
+
+    def autotune_signals(self) -> dict:
+        """Fleet-wide signal window: member volumes' windows aggregated
+        ops-weighted, with the tail verdicts replaced by the CLUSTER
+        scorer's (a limping node, not a limping shard, is what the
+        cluster hedge trigger must track)."""
+        members = [n.volume.autotune_signals() for n in self.nodes
+                   if n.alive]
+        agg: dict = {"ops": sum(s["ops"] for s in members)}
+        total = max(1, agg["ops"])
+        for key in ("fsync_rate", "coalesce_rate", "log_rate",
+                    "log_coalesce_rate", "stall_rate", "bypass_rate",
+                    "staged_frac", "read_rate", "tier_hit_rate",
+                    "scan_denial_rate"):
+            agg[key] = sum(s.get(key, 0.0) * max(1, s["ops"])
+                           for s in members) / total
+        states = self.scorer.states()
+        agg["limping"] = any(s != "healthy" for s in states.values())
+        agg["healthy_p99_us"] = self.scorer.hedge_delay_us(default_us=0.0)
+        return agg
+
+    def autotune_step(self) -> dict:
+        """One cluster control tick (see :meth:`attach_autotuner`)."""
+        if self.autotuner is None:
+            return {}
+        changes = self.autotuner.observe(self.autotune_signals())
+        if changes:
+            if "hedge_delay_us" in changes:
+                self.cfg.hedge_delay_us = changes["hedge_delay_us"]
+            member_changes = {k: v for k, v in changes.items()
+                              if k != "hedge_delay_us"}
+            if member_changes:
+                for n in self.nodes:
+                    if n.alive:
+                        n.volume._apply_knobs(member_changes)
+            self.metrics.bump("autotune_moves", len(changes))
+            for name in changes:
+                self.metrics.bump(f"autotune_moves::{name}")
+        self.metrics.bump("autotune_ticks")
+        return changes
+
     # ---------------------------------------------------------------- stats
     def scrub(self, sample_every: int = 1) -> dict:
         """Operator scrub: replication health per chunk, cross-node
@@ -460,6 +523,8 @@ class ClusterVolume:
         out["chunks_mapped"] = len(self._chains)
         if self._aio is not None:
             out["aio"] = self._aio.stats()
+        if self.autotuner is not None:
+            out["autotune"] = self.autotuner.stats()
         return out
 
     def close(self) -> None:
@@ -676,7 +741,8 @@ def make_cluster(policy: str = "caiti", *, n_lbas: int, n_nodes: int = 3,
                  max_inflight: int = 16, aio_workers: int = 2,
                  read_tier_bytes: int = 0,
                  hedge_delay_us: float = 0.0,
-                 tenants: list[TenantSpec] | None = None) -> ClusterVolume:
+                 tenants: list[TenantSpec] | None = None,
+                 autotune=None) -> ClusterVolume:
     """Build a cluster volume: ``n_nodes`` member ``StripedVolume``s
     (each unreplicated internally — the CLUSTER provides redundancy; its
     crc ledger does the verification) behind simulated links, spread
@@ -710,4 +776,8 @@ def make_cluster(policy: str = "caiti", *, n_lbas: int, n_nodes: int = 3,
     for t in (tenants or []):
         cl.add_tenant(t.name, weight=t.weight, rate_mbps=t.rate_mbps,
                       burst_bytes=t.burst_bytes)
+    # cluster-scope control plane: autotune=True attaches the stock
+    # controller; a Controller instance attaches that one
+    if autotune:
+        cl.attach_autotuner(None if autotune is True else autotune)
     return cl

@@ -158,6 +158,19 @@ TAIL_COUNTERS = (
 )
 
 
+# Control-plane counters (PR 9) — bumped by the self-tuning loop
+# (``StripedVolume.autotune_step`` / ``ClusterVolume.autotune_step``);
+# per-knob move counts ride the per-tenant convention as
+# ``autotune_moves::<knob>``.  ``autotune_path()`` summarizes them:
+#   autotune_ticks       — control ticks observed (signal windows)
+#   autotune_moves       — knob moves actually applied (hysteresis and
+#                          the clamps hold most ticks at zero moves)
+AUTOTUNE_COUNTERS = (
+    "autotune_ticks",
+    "autotune_moves",
+)
+
+
 #: EWMA smoothing for :meth:`Metrics.observe` — ~the last 10-ish
 #: observations dominate, so a shard/node turning slow moves its average
 #: within tens of ops instead of being diluted by history
@@ -315,6 +328,17 @@ class Metrics:
                                  if out["hedges_fired"] else 0.0)
         out["hedges_unaccounted"] = (out["hedges_fired"] - out["hedges_won"]
                                      - out["hedges_cancelled"])
+        return out
+
+    def autotune_path(self) -> dict:
+        """Control-plane summary: tick/move counters, the moves-per-tick
+        rate (a healthy controller converges: the rate decays once the
+        workload steadies), and the per-knob move breakdown."""
+        with self._lock:
+            out: dict = {c: self.count.get(c, 0) for c in AUTOTUNE_COUNTERS}
+        out["move_rate"] = (out["autotune_moves"] / out["autotune_ticks"]
+                            if out["autotune_ticks"] else 0.0)
+        out["per_knob"] = self.per_tenant("autotune_moves")
         return out
 
     def per_tenant(self, prefix: str) -> dict[str, int]:

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import mmap
 import os
-import threading
 import time
 from dataclasses import dataclass
 

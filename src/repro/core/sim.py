@@ -606,9 +606,9 @@ def chain_commit_steps(n_blocks: int, span: int) -> list[tuple]:
     assert n_blocks >= 1 and span >= 1
     links = [min(span, n_blocks - off) for off in range(0, n_blocks, span)]
     steps: list[tuple] = []
-    for l, n in enumerate(links):
-        steps.extend(("payload", l, i) for i in range(n))
-    steps.extend(("header", l) for l in range(len(links) - 1))
+    for link, n in enumerate(links):
+        steps.extend(("payload", link, i) for i in range(n))
+    steps.extend(("header", link) for link in range(len(links) - 1))
     steps.append(("tail_header",))
     steps.extend(("inplace", i) for i in range(n_blocks))
     return steps
@@ -743,8 +743,12 @@ class SimVolume:
         self._aio_next = itertools.count(1)
         self._aio_open: dict[int, float] = {}   # ticket -> completion time
         slots_per = max(1, cache_slots // n_shards)
-        self._watermark_slots = watermark * slots_per * n_shards
+        self._total_slots = slots_per * n_shards
+        self._watermark_slots = watermark * self._total_slots
         self._use_watermark = policy.startswith("caiti") and watermark < 1.0
+        # control-plane surface: the hedge trigger the autotune workload
+        # reads (mirrors cfg.hedge_delay_us on the threaded volume)
+        self.hedge_delay_us = 1000.0
         if policy.startswith("caiti"):
             pool = [Bank() for _ in range(n_workers)]
             self.shards = [
@@ -991,6 +995,35 @@ class SimVolume:
         for _d, tid in out:
             del self._aio_open[tid]
         return [tid for _d, tid in out]
+
+    # ----------------------------------------------------- control plane
+    def set_knobs(self, changes: dict) -> None:
+        """Apply control-plane knob moves in virtual time — the sim-side
+        mirror of ``StripedVolume._apply_knobs`` (windows stay µs here;
+        the threaded volume converts to seconds).  ``scan_threshold``
+        has no sim-side analogue (the sim tier has no scan detector) and
+        is ignored."""
+        if "commit_window_us" in changes:
+            self.commit_window_us = float(changes["commit_window_us"])
+        if "log_window_us" in changes:
+            self.log_window_us = float(changes["log_window_us"])
+        if "bypass_watermark" in changes:
+            frac = float(changes["bypass_watermark"])
+            self._watermark_slots = frac * self._total_slots
+            if self.policy.startswith("caiti") and frac < 1.0 \
+                    and not self._use_watermark:
+                # the hook was not installed at construction (watermark
+                # started at 1.0): retrofit it onto every caiti shard
+                self._use_watermark = True
+                for s in self.shards:
+                    if hasattr(s, "global_full"):
+                        s.global_full = self._over_watermark
+        if "hedge_delay_us" in changes:
+            self.hedge_delay_us = float(changes["hedge_delay_us"])
+
+    def staged_frac(self) -> float:
+        staged = sum(getattr(s, "occupied", 0) for s in self.shards)
+        return staged / max(1, self._total_slots)
 
     def counts(self) -> dict:
         agg: dict = defaultdict(int)
@@ -1242,6 +1275,219 @@ def run_volume_sim_workload(policy: str, *, n_shards: int, n_lbas: int,
         "counts": counts,
         "per_tenant": per_tenant,
     }
+
+
+def run_autotune_sim_workload(policy: str = "caiti", *, phases: list[dict],
+                              n_shards: int = 4, n_lbas: int = 1 << 16,
+                              cache_slots: int = 4096, n_workers: int = 8,
+                              iodepth: int = 8, stripe_blocks: int = 64,
+                              watermark: float = 0.9, tier_slots: int = 0,
+                              autotune=None,
+                              control_every_us: float = 2000.0,
+                              commit_window_us: float = 0.0,
+                              log_window_us: float = 0.0,
+                              journal_span: int = 8, seed: int = 0,
+                              cost: CostModel | None = None) -> dict:
+    """Phase-change trace against one :class:`SimVolume`, with an
+    optional live control plane — the tuned-vs-frozen acceptance driver
+    for ``benchmarks/scenarios.py``.
+
+    ``phases`` run SEQUENTIALLY in virtual time over the same volume
+    (so cache/tier state carries across the change — the whole point of
+    a phase-change trace).  Each phase dict:
+
+      ``name``      phase label (per-phase result key)
+      ``tenants``   list of dicts: ``n_ops`` plus optional ``name``,
+                    ``jobs`` (streams, default 2), ``read_frac``,
+                    ``fsync_every`` (fsync per N stream ops, 0 = never),
+                    ``log_blocks`` (writes become chained-tx logged
+                    writes of that many blocks), ``think_us`` (per-op
+                    idle after completion — the diurnal lull knob)
+      ``lba_dist``  'uniform' | 'zipf' | 'seq' (per-stream sequential
+                    runs — the ckpt-restore/backup scan shape)
+
+    ``autotune`` is a REAL :class:`repro.volume.autotune.Controller`
+    (the sim validates the actual policy object, same idiom as
+    ``SimReadTier``): every ``control_every_us`` of virtual time the
+    driver computes one signal window from the volume's counter deltas
+    and applies whatever knob moves the controller votes through
+    (:meth:`SimVolume.set_knobs`).  ``autotune=None`` is the frozen
+    baseline: knobs stay at their configured values for the whole
+    trace.  Returns per-phase and whole-trace throughput/latency plus
+    the knob trace (every applied move with its virtual timestamp) so
+    tests can assert clamp safety and benches can plot convergence.
+    """
+    cost = cost or CostModel()
+    vol = SimVolume(policy, cost, n_shards=n_shards,
+                    cache_slots=cache_slots, n_workers=n_workers,
+                    stripe_blocks=stripe_blocks, watermark=watermark,
+                    tier_slots=tier_slots,
+                    commit_window_us=commit_window_us,
+                    log_window_us=log_window_us,
+                    journal_span=journal_span)
+    if autotune is not None:
+        autotune.bind({"commit_window_us": commit_window_us,
+                       "log_window_us": log_window_us,
+                       "bypass_watermark": watermark})
+    rng = np.random.default_rng(seed)
+    bs = 4096.0
+    stack = cost.bio_stack / max(1, min(iodepth, 16))
+    knob_trace: list[tuple[float, dict]] = []
+    per_phase: dict[str, dict] = {}
+    all_lats: list[float] = []
+    t_phase = 0.0
+    next_ctl = control_every_us
+    prev_counts: dict = {}
+    win_ops = 0
+    win_reads = 0
+    win_writes = 0
+    win_tenant_lats: dict[str, list] = {}
+
+    def control_tick(t: float) -> None:
+        nonlocal prev_counts, win_ops, win_reads, win_writes
+        cur = vol.counts()
+        d = {k: cur.get(k, 0) - prev_counts.get(k, 0)
+             for k in set(cur) | set(prev_counts)}
+        prev_counts = cur
+        ops = max(1, win_ops)
+        fsyncs = d.get("fsync_calls", 0)
+        logs = d.get("log_calls", 0)
+        reads = max(1, win_reads)
+        sig = {
+            "ops": win_ops,
+            "fsync_rate": fsyncs / ops,
+            "coalesce_rate": (d.get("fsync_coalesced", 0) / fsyncs
+                              if fsyncs else 0.0),
+            "log_rate": logs / ops,
+            "log_coalesce_rate": (d.get("log_coalesced", 0) / logs
+                                  if logs else 0.0),
+            "stall_rate": d.get("stalls", 0) / ops,
+            "bypass_rate": (d.get("bypass", 0) / win_writes
+                            if win_writes else 0.0),
+            "staged_frac": vol.staged_frac(),
+            "read_rate": win_reads / ops,
+            "tier_hit_rate": ((d.get("tier_hits", 0)
+                               + d.get("read_hits", 0)) / reads
+                              if win_reads else 0.0),
+            "scan_denial_rate": 0.0,
+            "per_tenant_p99_us": {
+                name: float(np.percentile(ls, 99.0))
+                for name, ls in win_tenant_lats.items() if ls},
+        }
+        changes = autotune.observe(sig)
+        if changes:
+            vol.set_knobs(changes)
+            knob_trace.append((t, dict(changes)))
+        win_ops = win_reads = win_writes = 0
+        win_tenant_lats.clear()
+
+    for phase in phases:
+        pname = phase.get("name", f"phase{len(per_phase)}")
+        tenants = phase["tenants"]
+        lba_dist = phase.get("lba_dist", "uniform")
+        theta = phase.get("zipf_theta", 0.99)
+        st_tenant: list[str] = []
+        st_ops: list[np.ndarray] = []
+        st_reads: list = []
+        st_fsync: list[int] = []
+        st_log: list[int] = []
+        st_think: list[float] = []
+        for ten in tenants:
+            jobs = max(1, int(ten.get("jobs", 2)))
+            per = max(1, int(ten["n_ops"]) // jobs)
+            rfrac = float(ten.get("read_frac", 0.0))
+            for _ in range(jobs):
+                st_tenant.append(ten.get("name", "t0"))
+                if lba_dist == "zipf":
+                    st_ops.append(zipf_lba_stream(rng, per, n_lbas, theta))
+                elif lba_dist == "seq":
+                    base = int(rng.integers(0, n_lbas))
+                    st_ops.append((base + np.arange(per)) % n_lbas)
+                else:
+                    st_ops.append(rng.integers(0, n_lbas, size=per))
+                st_reads.append(rng.random(per) < rfrac if rfrac else None)
+                st_fsync.append(int(ten.get("fsync_every", 0)))
+                st_log.append(int(ten.get("log_blocks", 0)))
+                st_think.append(float(ten.get("think_us", 0.0)))
+        ns = len(st_tenant)
+        heads = [0] * ns
+        core_free = [t_phase] * ns
+        completions: list[list[float]] = [[] for _ in range(ns)]
+        phase_lats: list[float] = []
+        t_now = t_phase
+        t_done = t_phase
+        while True:
+            cands = []
+            for s in range(ns):
+                k = heads[s]
+                if k >= len(st_ops[s]):
+                    continue
+                arrive = completions[s][k - iodepth] if k >= iodepth \
+                    else t_phase
+                cands.append((max(arrive, core_free[s]), s, arrive))
+            if not cands:
+                break
+            ready, s, arrive = min(cands)
+            heads[s] += 1
+            start = max(t_now, ready)
+            t_now = start
+            if autotune is not None:
+                while start >= next_ctl:
+                    control_tick(next_ctl)
+                    next_ctl += control_every_us
+            i = heads[s] - 1
+            lba = int(st_ops[s][i])
+            t_proc = start + stack
+            if st_reads[s] is not None and st_reads[s][i]:
+                done, _src = vol.read_ex(t_proc, lba)
+                win_reads += 1
+            elif st_log[s] > 0:
+                done = vol.log(t_proc, st_log[s])
+                for k in range(st_log[s]):
+                    done = vol.write(done, (lba + k) % n_lbas)
+                win_writes += 1
+            else:
+                done = vol.write(t_proc, lba)
+                win_writes += 1
+            if st_fsync[s] and (i + 1) % st_fsync[s] == 0:
+                done = max(done, vol.fsync(done))
+            win_ops += 1
+            completions[s].append(done)
+            core_free[s] = done + st_think[s]
+            lat = done - arrive
+            phase_lats.append(lat)
+            all_lats.append(lat)
+            win_tenant_lats.setdefault(st_tenant[s], []).append(lat)
+            t_done = max(t_done, done)
+        span = max(t_done - t_phase, 1e-9)
+        per_phase[pname] = {
+            "ops": len(phase_lats),
+            "span_us": span,
+            "ops_s": len(phase_lats) / span * 1e6,
+            "p99_us": (float(np.percentile(phase_lats, 99.0))
+                       if phase_lats else 0.0),
+        }
+        t_phase = t_done
+    t_done = max(t_phase, vol.flush(t_phase, sync=True))
+    counts = vol.counts()
+    out = {
+        "policy": policy,
+        "makespan_us": t_done,
+        "ops": len(all_lats),
+        "ops_s": len(all_lats) / max(t_done, 1e-9) * 1e6,
+        "mean_us": float(np.mean(all_lats)) if all_lats else 0.0,
+        "p50_us": (float(np.percentile(all_lats, 50.0))
+                   if all_lats else 0.0),
+        "p99_us": (float(np.percentile(all_lats, 99.0))
+                   if all_lats else 0.0),
+        "per_phase": per_phase,
+        "counts": counts,
+        "knob_trace": knob_trace,
+    }
+    if autotune is not None:
+        out["knob_final"] = autotune.values()
+        out["autotune"] = autotune.stats()
+    return out
 
 
 def run_aio_sim_workload(policy: str, *, n_shards: int, n_lbas: int,

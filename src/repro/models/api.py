@@ -13,12 +13,12 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .common import MeshCtx, ModelConfig, ShapeCfg
+from .common import ModelConfig, ShapeCfg
 from . import rglru, transformer, xlstm
 
 

@@ -18,7 +18,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .common import MeshCtx, ModelConfig
+from .common import ModelConfig
 from .layers import (attn_init, chunked_attention, decode_attention,
                      decode_update_and_attend, init_norm, mlp_apply,
                      mlp_init, out_proj, qkv_proj, rms_norm, rope)

@@ -10,7 +10,6 @@ precomputed patch embeddings (both arrive via ``input_specs``).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ pytree-functional (optax-style update/init pair) so opt-state sharding is
 fully controlled by the caller (ZeRO-1 in parallel/sharding.py)."""
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import NamedTuple
 

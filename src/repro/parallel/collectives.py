@@ -17,7 +17,6 @@ explicit opt-in flag on the train step.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

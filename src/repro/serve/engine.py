@@ -23,7 +23,6 @@ path for bulk decode lowers ``lm_decode_step`` with the dense ring cache
 from __future__ import annotations
 
 import json
-import math
 import time
 from dataclasses import dataclass, field
 
@@ -302,12 +301,19 @@ class ServeEngine:
                  cache_cfg: PagedCacheConfig | None = None,
                  max_batch: int = 8, eos_token: int = -1,
                  use_kernel: bool = False, rng_seed: int = 0,
-                 request_log: AsyncRequestLog | None = None) -> None:
+                 request_log: AsyncRequestLog | None = None,
+                 autotune_every: int = 0) -> None:
         self.cfg = cfg
         self.metrics = Metrics()
         # optional durable request log: retired requests are appended
         # through the volume's async frontend, overlapped with decode
         self.request_log = request_log
+        # control-plane cadence: every N scheduler ticks, run one
+        # autotune_step() on the request log's backing volume (no-op
+        # unless the volume has a controller attached) — the serve loop
+        # is the natural place for the storage control ticks to ride
+        self.autotune_every = autotune_every
+        self._ticks_since_tune = 0
         self.cache = PagedKVCache(cache_cfg or PagedCacheConfig(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd), metrics=self.metrics)
@@ -387,10 +393,25 @@ class ServeEngine:
         self.running = still
         return len(reqs)
 
+    def _autotune_tick(self) -> None:
+        if self.autotune_every <= 0 or self.request_log is None:
+            return
+        self._ticks_since_tune += 1
+        if self._ticks_since_tune < self.autotune_every:
+            return
+        self._ticks_since_tune = 0
+        vol = getattr(self.request_log, "vol", None)
+        step = getattr(vol, "autotune_step", None)
+        if step is not None:
+            moves = step()
+            if moves:
+                self.metrics.bump("autotune_moves", len(moves))
+
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0
         while (self.queue or self.running) and ticks < max_ticks:
             self.step()
+            self._autotune_tick()
             ticks += 1
         if self.request_log is not None:
             n_bad = self.request_log.drain()  # settle overlapped appends

@@ -30,11 +30,9 @@ the interpret-mode kernel (or the jnp ref) does the same resolution.
 """
 from __future__ import annotations
 
-import math
 import threading
 from dataclasses import dataclass, field
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -8,7 +8,6 @@ and is pure — pjit-able with the spec trees from parallel/sharding.py.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

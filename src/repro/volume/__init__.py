@@ -31,6 +31,12 @@ Generalizes the paper's single-device Caiti mechanism to a logical volume:
     BufferRegistry         — registered zero-copy buffer pool: pinned
                              payloads instead of staging copies, with
                              copy-on-evict when a slot is reused early
+    Controller, Knob       — self-tuning control plane: bounded
+                             AIMD-style feedback over commit/log
+                             windows, bypass watermark, scan threshold
+                             and hedge delay, gated by hysteresis and
+                             hard clamps (``attach_autotuner`` /
+                             ``make_volume(autotune=True)``)
 
 The read path (layered, new in PR 2)
 ------------------------------------
@@ -56,6 +62,8 @@ conditional bypass under pressure); they only *invalidate* tier entries,
 so crash atomicity (redo journal + BTT Flog) is untouched by the tier.
 """
 from .admission import AdmissionPolicy, ScanDetector
+from .autotune import (Controller, Knob, default_knobs,
+                       make_default_controller)
 from .aio import (AsyncIOEngine, BackpressureError, BufferRegistry,
                   CancelledError, LinkCancelledError, RegisteredBuf,
                   SubmitError, Ticket, TicketError)
@@ -73,4 +81,5 @@ __all__ = [
     "AsyncIOEngine", "Ticket", "TicketError", "SubmitError",
     "BackpressureError", "CancelledError", "LinkCancelledError",
     "BufferRegistry", "RegisteredBuf",
+    "Controller", "Knob", "default_knobs", "make_default_controller",
 ]

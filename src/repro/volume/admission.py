@@ -129,6 +129,28 @@ class AdmissionPolicy:
         self._shard_penalty: dict[int, float] = {}
         self.steered_charges = 0
 
+    # ----------------------------------------------------------- retuning
+    def retune(self, *, watermark_slots: int | None = None,
+               scan_threshold: int | None = None,
+               tier_hit_cost_frac: float | None = None) -> dict:
+        """Online knob update from the control plane (``autotune``):
+        each provided value replaces the live one under the policy lock,
+        so foreground readers never see a torn update.  Returns the
+        post-update values.  Callers (the volume's ``autotune_step``)
+        are responsible for clamping — this layer only refuses
+        nonsense."""
+        with self._lock:
+            if watermark_slots is not None:
+                self.watermark_slots = max(0, int(watermark_slots))
+            if scan_threshold is not None:
+                self.scan_threshold = max(0, int(scan_threshold))
+            if tier_hit_cost_frac is not None:
+                assert 0.0 <= tier_hit_cost_frac <= 1.0
+                self.tier_hit_cost_frac = tier_hit_cost_frac
+            return {"watermark_slots": self.watermark_slots,
+                    "scan_threshold": self.scan_threshold,
+                    "tier_hit_cost_frac": self.tier_hit_cost_frac}
+
     # -------------------------------------------------- fail-slow steering
     def set_shard_penalties(self, penalties: dict[int, float]) -> None:
         """Install the scorer's per-shard price multipliers (1.0 =

@@ -265,18 +265,18 @@ class VolumeJournal:
         # phase 2: non-tail headers of the WHOLE batch, one pass per shard
         body = [h for homes in per_entry for h in homes[:-1]]
         for shard in sorted({h[3] for h in body}):
-            for (txid, l, n, s, hdr_lba, crc, chain_id, seq) in body:
+            for (txid, blk, n, s, hdr_lba, crc, chain_id, seq) in body:
                 if s == shard:
-                    self._write_header(s, hdr_lba, txid, l, n, crc,
+                    self._write_header(s, hdr_lba, txid, blk, n, crc,
                                        chain_id, seq, 0)
         # phase 3: the commit points — every tail header, one final pass
         # per slot shard, written after all of phase 2 (each member chain
         # is wholly on media before any member becomes committed)
         tails = [homes[-1] for homes in per_entry]
         for shard in sorted({h[3] for h in tails}):
-            for (txid, l, n, s, hdr_lba, crc, chain_id, seq) in tails:
+            for (txid, blk, n, s, hdr_lba, crc, chain_id, seq) in tails:
                 if s == shard:
-                    self._write_header(s, hdr_lba, txid, l, n, crc,
+                    self._write_header(s, hdr_lba, txid, blk, n, crc,
                                        chain_id, seq, CHAIN_TAIL)
         with self._lock:
             self.chains_logged += len(group)

@@ -81,15 +81,18 @@ from .admission import AdmissionPolicy
 from .aio import AsyncIOEngine, RegisteredBuf, hedged_read as _hedged_read
 
 
+from .autotune import Controller
+from .evict_pool import SharedEvictionPool
+from .journal import GroupCommitter, LogBatcher, VolumeJournal
+from .qos import TenantSpec, TokenBucket, WFQGate
+from .read_tier import ReadTier, ReplicaResyncer
+
+
 def _unwrap(payload):
     """A :class:`RegisteredBuf` handle's backing array — the sync write
     surface accepts the same handles the async engine pins, so a caller
     holding a registered pool never needs two code paths."""
     return payload.data if isinstance(payload, RegisteredBuf) else payload
-from .evict_pool import SharedEvictionPool
-from .journal import GroupCommitter, LogBatcher, VolumeJournal
-from .qos import TenantSpec, TokenBucket, WFQGate
-from .read_tier import ReadTier, ReplicaResyncer
 
 _SB_MAGIC = "caiti-volume-v1"
 _LEDGER_ENTRY = "<QI"        # lba, crc32
@@ -227,10 +230,10 @@ class StripedVolume:
         self._txlock = threading.Lock()
         self._caches = [d.impl for d in self.shards
                         if hasattr(d.impl, "bypass_hook")]
+        self._total_cache_slots = sum(len(c._slots) for c in self._caches)
         watermark_slots = max(1, int(
-            cfg.bypass_watermark
-            * sum(len(c._slots) for c in self._caches))) if self._caches \
-            else 0
+            cfg.bypass_watermark * self._total_cache_slots)) \
+            if self._caches else 0
         # one AdmissionPolicy unifies bypass watermark, tier-fill (scan)
         # policy and QoS read pricing for every layer of the stack
         self.admission = AdmissionPolicy(
@@ -267,6 +270,10 @@ class StripedVolume:
         # async submission/completion frontend (lazy: blocking-only
         # callers pay nothing; first submit() builds the engine)
         self._aio: AsyncIOEngine | None = None
+        # self-tuning control plane (attach_autotuner): None = every
+        # knob frozen at its configured value (zero-overhead passthrough)
+        self.autotuner: Controller | None = None
+        self._autotune_prev: dict | None = None
         # background replica repair rides the shared eviction pool (its
         # own daemon thread when the policy has no pool, e.g. plain btt)
         self.resyncer = (ReplicaResyncer(self, pool=evict_pool)
@@ -640,6 +647,134 @@ class StripedVolume:
         return _hedged_read(self, lba, delay_s=delay, out=out,
                             tenant=tenant)
 
+    # ----------------------------------------------------- control plane
+    def attach_autotuner(self, controller: Controller | None = None) \
+            -> Controller:
+        """Attach a self-tuning :class:`~repro.volume.autotune.Controller`
+        (a stock one when None).  The controller is seeded from the LIVE
+        config — it tunes from where the operator left the knobs, and
+        every subsequent :meth:`autotune_step` observes the metrics
+        layer and applies bounded, clamped knob moves online.  Without
+        an attached controller ``autotune_step`` is a no-op and every
+        knob stays frozen at its configured value."""
+        if controller is None:
+            from .autotune import make_default_controller
+            controller = make_default_controller()
+        seed = {"commit_window_us": self.cfg.commit_window * 1e6,
+                "log_window_us": self.cfg.log_window * 1e6,
+                "bypass_watermark": self.cfg.bypass_watermark,
+                "scan_threshold": float(self.cfg.scan_threshold)}
+        if self.cfg.hedge_delay_us > 0:     # 0 = scorer auto: keep the
+            seed["hedge_delay_us"] = self.cfg.hedge_delay_us  # default
+        controller.bind(seed)
+        self.autotuner = controller
+        self._autotune_prev = None
+        return controller
+
+    def _autotune_counters(self) -> dict:
+        """Cumulative counter snapshot the signal window diffs against."""
+        out: dict[str, float] = {}
+        for k in ("read_hits", "read_misses", "read_tier_hits",
+                  "tier_fill_bypassed", "bypass_writes", "bg_evictions"):
+            out[k] = 0
+        for d in self.shards:
+            snap = d.metrics.snapshot()["count"]
+            for k in out:
+                out[k] += snap.get(k, 0)
+        vol = self.metrics.snapshot()["count"]
+        for k in ("group_commits", "group_commit_waiters", "log_batches",
+                  "log_batch_coalesced"):
+            out[k] = vol.get(k, 0)
+        return out
+
+    def autotune_signals(self) -> dict:
+        """One signal window for the controller: per-op rates computed
+        from the metrics layer's counter DELTAS since the previous call,
+        plus the instantaneous occupancy/tail/zero-copy state.  Also the
+        operator-facing view of what the control plane sees."""
+        cur = self._autotune_counters()
+        prev = self._autotune_prev or {k: 0 for k in cur}
+        self._autotune_prev = cur
+        d = {k: cur[k] - prev.get(k, 0) for k in cur}
+        reads = d["read_hits"] + d["read_misses"] + d["read_tier_hits"]
+        writes = d["bypass_writes"] + d["bg_evictions"]
+        fsyncs = d["group_commits"] + d["group_commit_waiters"]
+        logs = d["log_batches"] + d["log_batch_coalesced"]
+        ops = max(1, reads + writes + logs)
+        sig = {
+            "ops": reads + writes + logs,
+            "fsync_rate": fsyncs / ops,
+            "coalesce_rate": (d["group_commit_waiters"] / fsyncs
+                              if fsyncs else 0.0),
+            "log_rate": logs / ops,
+            "log_coalesce_rate": (d["log_batch_coalesced"] / logs
+                                  if logs else 0.0),
+            "stall_rate": 0.0,      # caiti shards bypass instead of stall
+            "bypass_rate": (d["bypass_writes"] / writes if writes else 0.0),
+            "staged_frac": (self._staged_slots() / self._total_cache_slots
+                            if self._total_cache_slots else 0.0),
+            "read_rate": reads / ops,
+            "tier_hit_rate": ((d["read_hits"] + d["read_tier_hits"]) / reads
+                              if reads else 0.0),
+            "scan_denial_rate": (d["tier_fill_bypassed"] / reads
+                                 if reads else 0.0),
+        }
+        states = self.scorer.states()
+        sig["limping"] = any(s != "healthy" for s in states.values())
+        sig["healthy_p99_us"] = self.scorer.hedge_delay_us(default_us=0.0)
+        shard_digest = self.metrics.digest()
+        p99s = [row["p99_us"] for k, row in shard_digest.items()
+                if k.startswith("shard")]
+        if p99s:
+            sig["p99_us"] = max(p99s)
+        if self._aio is not None:
+            sig["pin_rate"] = self.metrics.zerocopy_path()["pin_rate"]
+        debts = self.metrics.per_tenant("wfq_vbytes")
+        total_debt = sum(debts.values())
+        if total_debt:
+            sig["wfq_debt_share"] = max(debts.values()) / total_debt
+        return sig
+
+    def autotune_step(self) -> dict:
+        """One control tick: collect the signal window, let the attached
+        controller vote, and apply whatever knobs it moved — group/log
+        windows, the bypass watermark (converted to aggregate slots for
+        the admission layer), the scan threshold, and the hedge delay.
+        Returns the applied moves (``{}`` with no controller attached —
+        the frozen-knob passthrough)."""
+        if self.autotuner is None:
+            return {}
+        changes = self.autotuner.observe(self.autotune_signals())
+        if changes:
+            self._apply_knobs(changes)
+            self.metrics.bump("autotune_moves", len(changes))
+            for name in changes:
+                self.metrics.bump(f"autotune_moves::{name}")
+        self.metrics.bump("autotune_ticks")
+        return changes
+
+    def _apply_knobs(self, changes: dict) -> None:
+        cfg = self.cfg
+        if "commit_window_us" in changes:
+            cfg.commit_window = changes["commit_window_us"] / 1e6
+            self._committer.window = cfg.commit_window
+        if "log_window_us" in changes:
+            cfg.log_window = changes["log_window_us"] / 1e6
+            self._log_batcher.window = cfg.log_window
+        retune: dict = {}
+        if "bypass_watermark" in changes:
+            cfg.bypass_watermark = changes["bypass_watermark"]
+            if self._total_cache_slots:
+                retune["watermark_slots"] = max(1, int(
+                    cfg.bypass_watermark * self._total_cache_slots))
+        if "scan_threshold" in changes:
+            cfg.scan_threshold = int(changes["scan_threshold"])
+            retune["scan_threshold"] = cfg.scan_threshold
+        if retune:
+            self.admission.retune(**retune)
+        if "hedge_delay_us" in changes:
+            cfg.hedge_delay_us = changes["hedge_delay_us"]
+
     # --------------------------------------------------------- async frontend
     def aio_engine(self, *, n_workers: int | None = None,
                    max_inflight_per_tenant: int | None = None) \
@@ -913,6 +1048,8 @@ class StripedVolume:
                 "link_depth_max")}
             if "registry" in s:
                 out["zerocopy"]["registry"] = s["registry"]
+        if self.autotuner is not None:
+            out["autotune"] = self.autotuner.stats()
         return out
 
     # ---------------------------------------------------------------- stats
@@ -951,6 +1088,9 @@ class StripedVolume:
             out["wfq"] = self._gate.stats()
         if self.read_tier is not None:
             out["read_tier"] = self.read_tier.stats()
+        if self.autotuner is not None:
+            out["autotune"] = {**self.autotuner.stats(),
+                               **self.metrics.autotune_path()}
         return out
 
     def close(self) -> None:
@@ -983,7 +1123,8 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
                 tier_hit_cost_frac: float = 0.125,
                 persist_ledger: bool = True,
                 aio_workers: int = 2,
-                hedge_delay_us: float = 0.0) -> StripedVolume:
+                hedge_delay_us: float = 0.0,
+                autotune: Controller | bool | None = None) -> StripedVolume:
     """Build (or reopen + recover) a striped volume.
 
     ``path`` is a prefix for file-backed shards (``{path}.shard{i}``); a
@@ -1077,4 +1218,9 @@ def make_volume(policy: str = "caiti", *, n_lbas: int, n_shards: int = 4,
     for t in (tenants or []):
         vol.add_tenant(t.name, weight=t.weight, rate_mbps=t.rate_mbps,
                        burst_bytes=t.burst_bytes)
+    # self-tuning control plane: autotune=True attaches the stock
+    # controller, a Controller instance attaches that one; None/False
+    # leaves every knob frozen at its configured value
+    if autotune:
+        vol.attach_autotuner(None if autotune is True else autotune)
     return vol

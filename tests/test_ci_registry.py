@@ -83,6 +83,98 @@ def test_floor_gate_references_registered_tables():
     assert len(mod.check(partial)) == 1
 
 
+def _load_check_floors():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_floors", os.path.join(ROOT, "benchmarks", "check_floors.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_every_table_floored_or_waived():
+    """Adding a bench table forces a conscious gating decision: every
+    registry entry must carry a perf floor in FLOORS or an explicit
+    reasoned waiver in WAIVERS — and never both."""
+    mod = _load_check_floors()
+    registered = _registry_tables()
+    floors, waivers = set(mod.FLOORS), set(mod.WAIVERS)
+    assert floors & waivers == set(), \
+        f"tables both floored and waived: {sorted(floors & waivers)}"
+    assert floors | waivers == registered, (
+        f"ungated tables (add a floor or a waiver): "
+        f"{sorted(registered - floors - waivers)}; "
+        f"stale entries: {sorted((floors | waivers) - registered)}")
+    # a waiver is a DECISION, not a placeholder — it must say why
+    for table, reason in mod.WAIVERS.items():
+        assert isinstance(reason, str) and len(reason) >= 10, \
+            f"waiver for {table!r} has no real justification"
+
+
+def test_floor_gate_group_contains_every_floored_table():
+    """ci.yml runs check_floors on the 'volume' smoke group's artifact
+    only; a floored table landing in another group would make the gate
+    see it as missing (or worse, never gate it at all)."""
+    mod = _load_check_floors()
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    groups = dict(re.findall(
+        r"group: ([a-z0-9_]+)\n\s+tables: ([a-z0-9_,]+)", ci))
+    assert "volume" in groups, "floor-gate group renamed without updating"
+    gate_tables = set(groups["volume"].split(","))
+    assert set(mod.FLOORS) <= gate_tables, (
+        f"floored tables outside the gated smoke group: "
+        f"{sorted(set(mod.FLOORS) - gate_tables)}")
+
+
+def test_nightly_workflow_runs_full_registry():
+    """The scheduled nightly job must stay a FULL-registry run: a cron
+    trigger, fast (non-smoke) op counts with no --only narrowing, the
+    floor gate, and the BENCH_nightly.json artifact with provenance."""
+    path = os.path.join(ROOT, ".github", "workflows", "nightly.yml")
+    assert os.path.exists(path), "nightly benchmark workflow missing"
+    with open(path) as f:
+        wf = f.read()
+    assert "schedule:" in wf and re.search(r"cron: ", wf), \
+        "nightly workflow lost its cron schedule"
+    assert "workflow_dispatch:" in wf, \
+        "nightly workflow must stay manually triggerable"
+    run_lines = [ln for ln in wf.splitlines()
+                 if "python -m benchmarks.run" in ln]
+    assert len(run_lines) == 1
+    assert "--fast" in run_lines[0] and "--smoke" not in run_lines[0] \
+        and "--only" not in run_lines[0], \
+        "nightly must run the FULL registry at --fast op counts"
+    assert "--json BENCH_nightly.json" in run_lines[0]
+    assert "check_floors.py BENCH_nightly.json" in wf, \
+        "nightly artifact is not floor-gated"
+    assert "path: BENCH_nightly.json" in wf, \
+        "nightly artifact upload missing"
+    assert "requirements-ci.txt" in wf, \
+        "nightly pip cache must key on the dependency manifest"
+
+
+def test_ci_hygiene_concurrency_cache_and_lint():
+    """PR pushes cancel superseded runs; every pip cache keys on the
+    dependency manifest (not the workflow file); the ruff step runs the
+    full default rule set (policy lives in ruff.toml, not --select)."""
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "concurrency:" in ci and "cancel-in-progress:" in ci, \
+        "ci.yml lost its superseded-run cancellation"
+    assert "github.event_name == 'pull_request'" in ci, \
+        "cancellation must apply to PR pushes only (main keeps history)"
+    deps = re.findall(r"cache-dependency-path: (\S+)", ci)
+    assert deps and all(d == "requirements-ci.txt" for d in deps), \
+        f"pip caches must key on requirements-ci.txt, got {deps}"
+    assert os.path.exists(os.path.join(ROOT, "requirements-ci.txt"))
+    assert os.path.exists(os.path.join(ROOT, "ruff.toml")), \
+        "lint policy file missing"
+    ruff_lines = [ln for ln in ci.splitlines() if "ruff check" in ln]
+    assert ruff_lines and all("--select" not in ln for ln in ruff_lines), \
+        "ruff must run the full default rule set (no --select narrowing)"
+
+
 def test_artifact_meta_gate():
     """``run.py --json`` artifacts embed seed + registry fingerprint;
     ``check_floors.check_meta`` must accept the CURRENT registry's own

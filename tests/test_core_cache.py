@@ -5,7 +5,7 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import CaitiCache, CaitiConfig, make_device, POLICIES
+from repro.core import CaitiConfig, make_device, POLICIES
 
 
 def _blk(x: int) -> bytes:

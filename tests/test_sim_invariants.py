@@ -1,7 +1,6 @@
 """Simulator-level invariants that mirror the paper's section-level claims
 (cheap versions of the benchmark tables, run in CI)."""
 import numpy as np
-import pytest
 
 from repro.core.sim import CostModel, run_sim_workload
 
