@@ -54,6 +54,11 @@ FLOORS = {
                   "churn_ops_ratio": 1.0,
                   "ckpt_serve_ops_ratio": 1.0,
                   "phase_change_p99_ratio": {"max": 1.0}},
+    # KV paging past DRAM: decode tokens/s with sessions at 4x the
+    # HBM+host page capacity must hold >= 0.5x of the resident-only
+    # run, and decode-ahead prefetch must never lose to synchronous
+    # restores (both legs deterministic virtual time)
+    "serve_paged": {"throughput_4x_frac": 0.5, "prefetch_speedup": 1.0},
 }
 
 # Registered tables with NO floor must be waived here EXPLICITLY, with

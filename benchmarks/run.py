@@ -49,12 +49,12 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
     try:                                        # python -m benchmarks.run
         from . import breakdown, ckpt_bench, cluster_bench, fio_like, \
             fsync_sweep, kvstore, roofline, scenarios, serve_bench, \
-            volume_bench, ycsb
+            serve_paged, volume_bench, ycsb
     except ImportError:                         # python benchmarks/run.py
         sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
         import breakdown, ckpt_bench, cluster_bench, fio_like, \
             fsync_sweep, kvstore, roofline, scenarios, serve_bench, \
-            volume_bench, ycsb
+            serve_paged, volume_bench, ycsb
 
     return {
         "fig2a": ("random-write execution time (sim)",
@@ -90,6 +90,13 @@ def _registry(ops: int, fast: bool, smoke: bool = False) -> dict:
         "serve": ("transit vs staging on the paged KV tier (real engine)",
                   lambda: serve_bench.run(n_requests=4 if smoke else 10,
                                           max_new=4 if smoke else 8)),
+        "serve_paged": ("KV paging past DRAM: sessions at 4x HBM+host "
+                        "capacity spilling through the async volume "
+                        "(sim + real pager)",
+                        lambda: serve_paged.run(
+                            rounds=2 if smoke else 3,
+                            n_sessions=4 if smoke else 6,
+                            tokens_each=8)),
         "volume_shards": ("striped multi-device scaling (sim)",
                           lambda: volume_bench.shards(n_ops=ops // 5)),
         "volume_qos": ("per-tenant QoS fair shares (sim)",

@@ -171,6 +171,32 @@ AUTOTUNE_COUNTERS = (
 )
 
 
+# KV-paging counters (PR 10) — bumped by the serve plane's volume-backed
+# spill tier (``serve.kvpager.KVPager`` + ``PagedKVCache`` host-tier
+# overflow); ``kv_paging_path()`` summarizes them:
+#   kv_spills             — pages written to the volume (chained write_multi)
+#   kv_spill_blocks       — volume blocks those spills occupied
+#   kv_dedup_hits         — spills resolved by content hash to a live slot
+#                           (prefix-shared pages: refcount bump, no write)
+#   kv_spill_frees        — slots freed when the last reference released
+#   kv_restores           — pages read back from the volume
+#   kv_prefetch_issued    — decode-ahead reads submitted before activate()
+#   kv_prefetch_hits      — restores served from a completed prefetch
+#   kv_prefetch_wasted    — prefetched payloads dropped unconsumed
+#   kv_restore_crc_errors — wire-checksum mismatches on restore (must be 0)
+KV_PAGING_COUNTERS = (
+    "kv_spills",
+    "kv_spill_blocks",
+    "kv_dedup_hits",
+    "kv_spill_frees",
+    "kv_restores",
+    "kv_prefetch_issued",
+    "kv_prefetch_hits",
+    "kv_prefetch_wasted",
+    "kv_restore_crc_errors",
+)
+
+
 #: EWMA smoothing for :meth:`Metrics.observe` — ~the last 10-ish
 #: observations dominate, so a shard/node turning slow moves its average
 #: within tens of ops instead of being diluted by history
@@ -339,6 +365,21 @@ class Metrics:
         out["move_rate"] = (out["autotune_moves"] / out["autotune_ticks"]
                             if out["autotune_ticks"] else 0.0)
         out["per_knob"] = self.per_tenant("autotune_moves")
+        return out
+
+    def kv_paging_path(self) -> dict[str, float]:
+        """KV-paging summary: spill/restore/dedup/prefetch counters plus
+        ``dedup_rate`` (fraction of spill requests resolved by content
+        hash without a volume write) and ``prefetch_hit_rate`` (fraction
+        of volume restores served from a decode-ahead read instead of a
+        synchronous wait on the activate() path)."""
+        with self._lock:
+            out = {c: self.count.get(c, 0) for c in KV_PAGING_COUNTERS}
+        asked = out["kv_spills"] + out["kv_dedup_hits"]
+        out["dedup_rate"] = out["kv_dedup_hits"] / asked if asked else 0.0
+        out["prefetch_hit_rate"] = (out["kv_prefetch_hits"]
+                                    / out["kv_restores"]
+                                    if out["kv_restores"] else 0.0)
         return out
 
     def per_tenant(self, prefix: str) -> dict[str, int]:

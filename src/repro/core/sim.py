@@ -1761,6 +1761,191 @@ def run_transit_sim_workload(*, n_pages: int, page_kb: int = 16,
     }
 
 
+def run_kv_paging_sim_workload(*, n_sessions: int, hbm_pages: int = 16,
+                               host_pages: int = 32,
+                               pages_per_session: int = 4,
+                               page_blocks: int = 4,
+                               shared_pages: int = 0,
+                               tokens_per_turn: int = 16,
+                               rounds: int = 2, decode_us: float = 40.0,
+                               prefetch_depth: int = 4,
+                               n_shards: int = 4, cache_slots: int = 512,
+                               aio_workers: int = 4,
+                               cost: CostModel | None = None) -> dict:
+    """Virtual-time model of KV paging past DRAM (the sessions-sweep
+    driver for ``benchmarks/serve_paged.py``).
+
+    ``n_sessions`` chat sessions of ``pages_per_session`` KV pages each
+    take ``rounds`` round-robin decode turns on ONE accelerator (a
+    serial :class:`Bank`; a turn is ``tokens_per_turn x decode_us``).
+    The HBM pool holds ``hbm_pages // pages_per_session`` resident
+    sessions; activating a session past that evicts the least-recently
+    decoded one through the tier walk the threaded cache runs:
+
+      * HBM -> host: one fused codec pass per page (``dram_copy_4k`` per
+        4 KB + ``meta``) on the eviction cores — off the decode path;
+      * host overflow -> volume: the oldest host page spills as ONE
+        chained ``log`` record of ``page_blocks`` blocks through
+        ``SimVolume.submit`` (the async frontend: spill IO overlaps
+        decode).  ``shared_pages`` of every session are a common prefix:
+        content-addressed records mean the first spill writes and the
+        rest are dedup refcount bumps — no IO;
+      * volume -> HBM: restore reads one ticket per block.  With
+        ``prefetch_depth > 0`` the reads for the next D scheduled
+        sessions are issued when a turn STARTS decoding, so the volume
+        round trip overlaps the running turn (decode-ahead); depth 0 is
+        the synchronous contrast — activation stalls on the reads.
+
+    Deterministic in virtual time; with ``n_sessions`` at the resident
+    bound the tier machinery never engages and the run is pure decode
+    (the degradation baseline)."""
+    cost = cost or CostModel()
+    assert pages_per_session >= 1 and shared_pages <= pages_per_session
+    resident_cap = max(1, hbm_pages // pages_per_session)
+    vol = SimVolume("caiti", cost, n_shards=n_shards,
+                    cache_slots=cache_slots,
+                    aio_workers=max(1, aio_workers))
+    decode = Bank()                       # the accelerator, serial
+    evict_cores = [Bank(), Bank()]        # fused-codec page-out cores
+    page_us = cost.dram_copy_4k * page_blocks + cost.meta
+    # page content keys: shared prefix pages dedup across sessions
+    def key(s: int, p: int):
+        return ("sh", p) if p < shared_pages else ("pv", s, p)
+
+    loc: dict[tuple, str] = {}            # (s, p) -> hbm | host | vol
+    host_fifo: list[tuple] = []           # (s, p) spill order
+    resident: list[int] = []              # session ids, LRU order
+    records: dict = {}    # key -> [lba, refs, done_t] live volume records
+    free_lbas: list[int] = []
+    next_lba = [0]
+    pf_ready: dict[tuple, float] = {}     # (s, p) -> prefetched data time
+    counts = defaultdict(int)
+
+    def spill_page(t: float, s: int, p: int) -> None:
+        k = key(s, p)
+        rec = records.get(k)
+        if rec is not None:
+            rec[1] += 1
+            counts["dedup_hits"] += 1
+        else:
+            lba = free_lbas.pop() if free_lbas else next_lba[0]
+            if not free_lbas or lba == next_lba[0]:
+                next_lba[0] = max(next_lba[0], lba + page_blocks)
+            tid = vol.submit(t, "log", lba, n_blocks=page_blocks)
+            records[k] = [lba, 1, vol.complete_time(tid)]
+            vol.poll(vol.complete_time(tid))
+            counts["spills"] += 1
+            counts["spill_blocks"] += page_blocks
+        loc[(s, p)] = "vol"
+
+    def evict_session(t: float, victim: int) -> float:
+        t_done = t
+        for p in range(pages_per_session):
+            if loc.get((victim, p)) != "hbm":
+                continue
+            core = min(evict_cores, key=lambda b: b.free_at)
+            t_done = max(t_done, core.serve(max(t, core.free_at), page_us))
+            loc[(victim, p)] = "host"
+            host_fifo.append((victim, p))
+            counts["hbm_evictions"] += 1
+        while sum(1 for v in loc.values() if v == "host") > host_pages:
+            s2, p2 = host_fifo.pop(0)
+            if loc.get((s2, p2)) != "host":
+                continue
+            spill_page(t_done, s2, p2)
+        return t_done
+
+    def issue_reads(t: float, s: int) -> None:
+        for p in range(pages_per_session):
+            if loc.get((s, p)) != "vol" or (s, p) in pf_ready:
+                continue
+            k = key(s, p)
+            lba = records[k][0]
+            done = t
+            for b in range(page_blocks):     # linked read chain
+                tid = vol.submit(t, "read", lba + b)
+                done = max(done, vol.complete_time(tid))
+                vol.poll(vol.complete_time(tid))
+            pf_ready[(s, p)] = done
+
+    def activate(t: float, s: int, prefetched: bool) -> float:
+        """Returns the time the session's pages are all HBM-resident."""
+        if s in resident:
+            resident.remove(s)
+            resident.append(s)
+            return t
+        while len(resident) >= resident_cap:
+            t = evict_session(t, resident.pop(0))
+        ready = t
+        if any(loc.get((s, p)) == "vol" for p in range(pages_per_session)):
+            issue_reads(t, s)   # no-op for pages already in flight;
+            for p in range(pages_per_session):  # sync pages start NOW
+                if loc.get((s, p)) != "vol":
+                    continue
+                done = pf_ready.pop((s, p))
+                if done <= t and prefetched:
+                    counts["prefetch_hits"] += 1
+                ready = max(ready, done)
+                counts["restores_vol"] += 1
+                k = key(s, p)
+                rec = records[k]
+                rec[1] -= 1
+                if rec[1] == 0:
+                    free_lbas.append(rec[0])
+                    del records[k]
+                loc[(s, p)] = "host"        # restored payload, unpack next
+        for p in range(pages_per_session):
+            where = loc.get((s, p))
+            if where == "host":
+                ready += page_us            # dequant pass on the way in
+                counts["restores_host"] += 1
+            loc[(s, p)] = "hbm"
+        resident.append(s)
+        return ready
+
+    schedule = [s for _r in range(rounds) for s in range(n_sessions)]
+    prefetched: set[int] = set()
+    tokens = 0
+    for i, s in enumerate(schedule):
+        t0 = decode.free_at
+        t_ready = activate(t0, s, s in prefetched)
+        prefetched.discard(s)
+        t_start = max(t_ready, decode.free_at)
+        if prefetch_depth > 0:
+            # decode-ahead: reads for the next D distinct sessions
+            nxt = []
+            for s2 in schedule[i + 1:]:
+                if s2 not in nxt and s2 != s:
+                    nxt.append(s2)
+                if len(nxt) >= prefetch_depth:
+                    break
+            for s2 in nxt:
+                if any(loc.get((s2, p)) == "vol"
+                       for p in range(pages_per_session)):
+                    issue_reads(t_start, s2)
+                    prefetched.add(s2)
+                    counts["prefetch_issued"] += 1
+        decode.serve(t_start, tokens_per_turn * decode_us)
+        tokens += tokens_per_turn
+    counts["prefetch_wasted"] = len(pf_ready)   # issued, never consumed
+    makespan = decode.free_at
+    return {
+        "n_sessions": n_sessions,
+        "resident_cap": resident_cap,
+        "rounds": rounds,
+        "tokens": tokens,
+        "makespan_us": makespan,
+        "tokens_s": tokens / max(makespan / 1e6, 1e-9),
+        "prefetch_depth": prefetch_depth,
+        "shared_pages": shared_pages,
+        **{k: int(counts[k]) for k in
+           ("spills", "spill_blocks", "dedup_hits", "hbm_evictions",
+            "restores_host", "restores_vol", "prefetch_issued",
+            "prefetch_hits", "prefetch_wasted")},
+        "live_records": len(records),
+    }
+
+
 # ---------------------------------------------------------------- cluster
 class SimCluster:
     """Virtual-time model of the distributed cluster volume

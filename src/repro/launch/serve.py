@@ -6,6 +6,12 @@
 Demonstrates continuous batching, the BTT-style block table, eager
 page-out of finished sequences, and conditional bypass under pool pressure
 (shrink --pool-pages to force it).
+
+With ``--spill-volume`` the engine gets a volume-backed KV spill tier
+(serve.kvpager.KVPager on a striped async volume): requests are
+periodically suspended mid-decode, their packed pages descend past
+``--host-pages`` onto the volume as content-deduplicated atomic records,
+and decode-ahead prefetch restores them before resume.
 """
 from __future__ import annotations
 
@@ -33,6 +39,15 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="paged-attention Pallas kernel (interpret on CPU)")
+    ap.add_argument("--spill-volume", action="store_true",
+                    help="attach a volume-backed KV spill tier and "
+                         "suspend/resume requests through it")
+    ap.add_argument("--host-pages", type=int, default=4,
+                    help="host-tier budget before pages spill to the "
+                         "volume (with --spill-volume)")
+    ap.add_argument("--suspend-every", type=int, default=6,
+                    help="scheduler ticks between preemptions "
+                         "(with --spill-volume)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -42,13 +57,22 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    pager = None
+    if args.spill_volume:
+        from repro.serve import KVPager
+        from repro.volume.volume import make_volume
+        vol = make_volume(n_lbas=1 << 14, n_shards=2, aio_workers=2,
+                          cache_bytes=1 << 22)
+        pager = KVPager(vol, capacity_blocks=1 << 13)
     cache_cfg = PagedCacheConfig(
         n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
         page_size=args.page_size, n_pages=args.pool_pages,
+        host_pages=args.host_pages if args.spill_volume else 1 << 30,
         max_pages_per_seq=max(4, (args.prompt_len + args.max_new)
                               // args.page_size + 2))
     eng = ServeEngine(cfg, params, cache_cfg=cache_cfg,
-                      max_batch=args.max_batch, use_kernel=args.use_kernel)
+                      max_batch=args.max_batch, use_kernel=args.use_kernel,
+                      pager=pager)
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
@@ -57,7 +81,19 @@ def main() -> None:
                    temperature=args.temperature)
 
     t0 = time.perf_counter()
-    done = eng.run()
+    if args.spill_volume:
+        # drive the scheduler by hand so we can preempt mid-decode: the
+        # suspended request's pages transit host -> volume, and the
+        # decode-ahead prefetch restores them before _admit resumes it
+        ticks = 0
+        while eng.queue or eng.running or eng.suspended:
+            eng.step()
+            ticks += 1
+            if eng.running and ticks % args.suspend_every == 0:
+                eng.suspend(eng.running[0])
+        done = eng.finished
+    else:
+        done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     lat = [r.t_done - r.t_submit for r in done]
@@ -68,6 +104,15 @@ def main() -> None:
           f"| pages out/in {eng.metrics.count.get('pages_out', 0)}/"
           f"{eng.metrics.count.get('pages_in', 0)} "
           f"| bypass pages {eng.metrics.count.get('bypass_pages', 0)}")
+    if args.spill_volume:
+        path = eng.metrics.kv_paging_path()
+        print(f"[spill] suspends {eng.metrics.count.get('suspends', 0)} "
+              f"resumes {eng.metrics.count.get('resumes', 0)} "
+              f"| spills {path['kv_spills']} "
+              f"(dedup rate {path['dedup_rate']:.2f}) "
+              f"| restores {path['kv_restores']} "
+              f"(prefetch hit rate {path['prefetch_hit_rate']:.2f}) "
+              f"| crc errors {path['kv_restore_crc_errors']}")
 
 
 if __name__ == "__main__":

@@ -157,21 +157,9 @@ class PagedLM:
         return (x @ w).astype(jnp.float32)[:, 0]
 
     def _overwrite_token(self, sid: int, layer: int, kv) -> None:
-        seq = self.cache.seqs[sid]
-        pgsz = self.cache.cfg.page_size
-        tpos = seq.length - 1
-        entry = seq.table[tpos // pgsz]
-        off = tpos % pgsz
-        k_t, v_t = kv
-        if entry[0] == "hbm":
-            page = entry[1]
-            self.cache.k_pool[layer] = self.cache.k_pool[layer].at[
-                page, off].set(k_t.astype(self.cache.cfg.dtype))
-            self.cache.v_pool[layer] = self.cache.v_pool[layer].at[
-                page, off].set(v_t.astype(self.cache.cfg.dtype))
-        else:
-            entry[1]["k"][layer][off] = np.asarray(k_t, np.float32)
-            entry[1]["v"][layer][off] = np.asarray(v_t, np.float32)
+        # delegated: the cache serializes the pool/table write on _tlock
+        # (an unlocked write here would race the eviction-pool workers)
+        self.cache.overwrite_token(sid, layer, kv)
 
 
 class AsyncRequestLog:
@@ -302,7 +290,8 @@ class ServeEngine:
                  max_batch: int = 8, eos_token: int = -1,
                  use_kernel: bool = False, rng_seed: int = 0,
                  request_log: AsyncRequestLog | None = None,
-                 autotune_every: int = 0) -> None:
+                 autotune_every: int = 0,
+                 pager=None, prefetch_depth: int = 2) -> None:
         self.cfg = cfg
         self.metrics = Metrics()
         # optional durable request log: retired requests are appended
@@ -314,14 +303,21 @@ class ServeEngine:
         # is the natural place for the storage control ticks to ride
         self.autotune_every = autotune_every
         self._ticks_since_tune = 0
+        # optional volume-backed KV spill tier (serve.kvpager.KVPager):
+        # suspended sessions' cold pages descend past the host tier onto
+        # the striped volume; prefetch_depth suspended requests get
+        # decode-ahead linked reads issued each tick so their resume
+        # overlaps the current batch's decode
+        self.prefetch_depth = prefetch_depth
         self.cache = PagedKVCache(cache_cfg or PagedCacheConfig(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
-            head_dim=cfg.hd), metrics=self.metrics)
+            head_dim=cfg.hd), metrics=self.metrics, pager=pager)
         self.lm = PagedLM(cfg, params, self.cache, use_kernel=use_kernel)
         self.max_batch = max_batch
         self.eos = eos_token
         self.queue: list[Request] = []
         self.running: list[Request] = []
+        self.suspended: list[Request] = []
         self.finished: list[Request] = []
         self._rng = np.random.default_rng(rng_seed)
         self._next_id = 0
@@ -335,7 +331,31 @@ class ServeEngine:
         return req
 
     # ----------------------------------------------------------- scheduling
+    def suspend(self, req: Request) -> None:
+        """Preempt a running request: its pages eagerly transit out
+        (host tier, then the volume once the host budget overflows);
+        ``_admit`` resumes it ahead of fresh prompts."""
+        self.running.remove(req)
+        self.cache.deactivate(req.seq_id)
+        self.suspended.append(req)
+        self.metrics.bump("suspends")
+
+    def _prefetch_ahead(self) -> None:
+        """Decode-ahead restore: linked async reads for the next
+        ``prefetch_depth`` suspended requests' spilled pages, issued
+        BEFORE admission so the volume round trip overlaps this tick's
+        decode instead of stalling activate()."""
+        for req in self.suspended[:self.prefetch_depth]:
+            self.cache.prefetch(req.seq_id)
+
     def _admit(self) -> None:
+        # resumes first: a suspended request already holds KV (and its
+        # prefetched pages are in flight) — cheaper than a fresh prefill
+        while self.suspended and len(self.running) < self.max_batch:
+            req = self.suspended.pop(0)
+            self.cache.activate(req.seq_id)
+            self.running.append(req)
+            self.metrics.bump("resumes")
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue.pop(0)
             req.seq_id = self.cache.new_sequence()
@@ -372,6 +392,7 @@ class ServeEngine:
 
     def step(self) -> int:
         """One scheduler tick: admit, decode one token for every runner."""
+        self._prefetch_ahead()
         self._admit()
         if not self.running:
             return 0
@@ -409,7 +430,8 @@ class ServeEngine:
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0
-        while (self.queue or self.running) and ticks < max_ticks:
+        while (self.queue or self.running or self.suspended) \
+                and ticks < max_ticks:
             self.step()
             self._autotune_tick()
             ticks += 1
